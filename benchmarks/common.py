@@ -1,0 +1,71 @@
+"""Shared benchmark scaffolding.
+
+The paper's case studies (§5) use 16-32 GPUs x 128 CUs and buffers up to
+256 MiB; a pure-Python event engine on one CPU core simulates ~10^5-10^6
+events/s, so each benchmark documents its scaled-down configuration
+(fewer GPUs/CUs, smaller buffers, larger cache lines) — trends, not
+absolute magnitudes, are the reproduction target (DESIGN.md §9/§10).
+"""
+
+from __future__ import annotations
+
+import csv
+import io
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.core.cluster import NocConfig
+from repro.core.gpu_model import GpuConfig
+
+
+def fast_gpu(**kw) -> GpuConfig:
+    """512 B cache lines (TPU-DMA-burst analogue) — 4x fewer events than
+    the GPU-faithful 128 B; trends unchanged (documented scaling)."""
+    kw.setdefault("cache_line", 512)
+    return GpuConfig(**kw)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+# scaled-down generic GPU (paper §5.1 is 8x4 routers x 4 CUs, 32+32 mem/io)
+def small_noc(arbitration: str = "fifo") -> NocConfig:
+    return NocConfig(mesh_x=2, mesh_y=2, cus_per_router=2, mem_channels=4,
+                     io_ports=4, arbitration=arbitration)
+
+
+def medium_noc(arbitration: str = "fifo") -> NocConfig:
+    return NocConfig(mesh_x=4, mesh_y=2, cus_per_router=2, mem_channels=8,
+                     io_ports=8, arbitration=arbitration)
+
+
+class Report:
+    """Collects rows; prints ``name,us_per_call,derived`` CSV lines and
+    writes the full table to results/<name>.json."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict] = []
+        self._t0 = time.perf_counter()
+
+    def add(self, **row) -> None:
+        self.rows.append(row)
+
+    def finish(self, derived: str = "") -> None:
+        wall_us = (time.perf_counter() - self._t0) * 1e6
+        print(f"{self.name},{wall_us:.0f},{derived}")
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(RESULTS_DIR, f"{self.name}.json"), "w") as f:
+            json.dump(self.rows, f, indent=1)
+
+    def table(self) -> str:
+        if not self.rows:
+            return "(empty)"
+        cols = list(self.rows[0].keys())
+        out = [" | ".join(cols)]
+        for r in self.rows:
+            out.append(" | ".join(str(r.get(c, "")) for c in cols))
+        return "\n".join(out)

@@ -1,0 +1,42 @@
+"""Paper Fig. 11: get- vs put-based All-Gather with and without fair
+arbitration between control and data messages.
+
+Paper insight: AG has no reduction, so get loses its overlap advantage;
+worse, get's control requests get stuck behind data responses under FIFO
+links.  Fair arbitration narrows the gap."""
+
+from __future__ import annotations
+
+from repro.core.collectives import direct_all_gather
+from repro.core.system import simulate_collective
+
+from .common import Report, fast_gpu, small_noc
+
+KiB = 1 << 10
+
+
+def run(nranks: int = 8, nwg: int = 4,
+        sizes=(32 * KiB, 128 * KiB, 256 * KiB)) -> str:
+    rep = Report("fig11_all_gather")
+    last = {}
+    for size in sizes:
+        row = {"shard_KiB": size // KiB}
+        for proto in ("put", "get"):
+            for arb in ("fifo", "fair"):
+                prog = direct_all_gather(nranks, size, nwg, proto)
+                gc = fast_gpu(max_outstanding=128, unroll=16)
+                r = simulate_collective(prog, noc=small_noc(arb),
+                                        gpu_config=gc, unroll=16)
+                row[f"bw_{proto}_{arb}_GBps"] = round(r.bus_GBps, 3)
+        rep.add(**row)
+        last = row
+    put_over_get = last["bw_put_fifo_GBps"] / last["bw_get_fifo_GBps"]
+    fair_recovery = last["bw_get_fair_GBps"] / last["bw_get_fifo_GBps"]
+    derived = (f"put_over_get_fifo={put_over_get:.2f}x;"
+               f"fair_arbitration_gain_get={fair_recovery:.2f}x")
+    rep.finish(derived)
+    return derived
+
+
+if __name__ == "__main__":
+    print(run())

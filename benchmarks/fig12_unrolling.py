@@ -1,0 +1,38 @@
+"""Paper Fig. 12: All-to-All bandwidth vs loop-unrolling factor
+(intra-wavefront ILP).  Expected: more in-flight Wavefront Requests help
+bandwidth-bound sizes, with saturation; no effect on tiny latency-bound
+transfers."""
+
+from __future__ import annotations
+
+from repro.core.collectives import direct_all_to_all
+from repro.core.system import simulate_collective
+
+from .common import Report, fast_gpu, small_noc
+
+KiB = 1 << 10
+
+
+def run(nranks: int = 8, nwg: int = 4,
+        sizes=(4 * KiB, 64 * KiB), unrolls=(1, 2, 4, 8, 16)) -> str:
+    rep = Report("fig12_unrolling")
+    series = {}
+    for size in sizes:
+        for u in unrolls:
+            prog = direct_all_to_all(nranks, size, nwg, "put")
+            r = simulate_collective(prog, noc=small_noc(),
+                                    gpu_config=fast_gpu(), unroll=u)
+            rep.add(shard_KiB=size // KiB, unroll=u,
+                    bw_GBps=round(r.bus_GBps, 3),
+                    t_us=round(r.time_ns / 1e3, 1))
+            series.setdefault(size, []).append(r.time_ns)
+    big = series[sizes[-1]]
+    small = series[sizes[0]]
+    derived = (f"large_xfer_speedup_u16={big[0] / big[-1]:.2f}x;"
+               f"small_xfer_speedup_u16={small[0] / small[-1]:.2f}x")
+    rep.finish(derived)
+    return derived
+
+
+if __name__ == "__main__":
+    print(run())

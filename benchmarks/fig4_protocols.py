@@ -1,0 +1,41 @@
+"""Paper Fig. 4: LL vs Simple protocol transfer bandwidth under different
+assumed link latencies/bandwidths — why latency fidelity decides protocol
+choice."""
+
+from __future__ import annotations
+
+from repro.core.protocols import ProtocolModel
+
+from .common import Report
+
+GiB = 1 << 30
+
+
+def run() -> str:
+    rep = Report("fig4_protocols")
+    sizes = [1 << s for s in range(10, 26)]     # 1 KiB .. 32 MiB
+    cases = [
+        ("a=0.5us,b=256GiB/s", 500.0, 256 * 1.0737),
+        ("a=5us,b=256GiB/s", 5000.0, 256 * 1.0737),
+        ("a=0.5us,b=1TiB/s", 500.0, 1024 * 1.0737),
+        ("a=5us,b=1TiB/s", 5000.0, 1024 * 1.0737),
+    ]
+    crossovers = {}
+    for name, alpha, beta in cases:
+        m = ProtocolModel(alpha_ns=alpha, beta_GBps=beta)
+        for s in sizes:
+            rep.add(case=name, size=s,
+                    bw_ll_GBps=round(m.bw_ll_GBps(s), 2),
+                    bw_simple_GBps=round(m.bw_simple_GBps(s), 2))
+        crossovers[name] = m.crossover_pow2_bytes()
+    # the paper's qualitative claims
+    assert crossovers["a=5us,b=256GiB/s"] > crossovers["a=0.5us,b=256GiB/s"]
+    assert crossovers["a=5us,b=1TiB/s"] > crossovers["a=5us,b=256GiB/s"]
+    derived = ";".join(f"{k}:xover={v >> 10}KiB" for k, v in
+                       crossovers.items())
+    rep.finish(derived)
+    return derived
+
+
+if __name__ == "__main__":
+    print(run())

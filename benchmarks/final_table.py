@@ -1,0 +1,66 @@
+"""Emit the final (post-§Perf) roofline table as markdown for
+EXPERIMENTS.md, merging single-pod, multi-pod and hillclimb-plan cells."""
+
+from __future__ import annotations
+
+import glob
+import json
+
+
+def fmt(results, title):
+    out = [f"### {title}", "",
+           "| arch | shape | plan | compute_s | memory_s | mem_adj_s | "
+           "coll_s | dominant | useful | roofline% | adj% |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in results:
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        frac = rf["roofline_fraction"]
+        adj = rf.get("roofline_fraction_adjusted", frac)
+        kind_decode = r["shape"].startswith(("decode", "long"))
+        f1 = "—" if kind_decode else f"{100 * frac:.2f}"
+        f2 = "—" if kind_decode else f"{100 * adj:.2f}"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('plan', 'default')} | "
+            f"{rf['compute_s']:.3f} | {rf['memory_s']:.3f} | "
+            f"{rf.get('memory_adjusted_s', rf['memory_s']):.3f} | "
+            f"{rf['collective_s']:.3f} | {rf['dominant']} | "
+            f"{rf['useful_flop_ratio']:.3f} | {f1} | {f2} |")
+    return "\n".join(out)
+
+
+def main():
+    single = json.load(open("results/dryrun_single_pod.json"))
+    print(fmt(single, "Final single-pod (16×16), plan=default"))
+    print()
+    hill = []
+    for f in sorted(glob.glob("results/hillclimb_*.json")):
+        hill.extend(json.load(open(f)))
+    if hill:
+        print(fmt(hill, "Hillclimb plan variants (beyond-paper)"))
+        print()
+    multi = json.load(open("results/dryrun_multi_pod.json"))
+    ok = sum(1 for r in multi if r.get("status") == "ok")
+    print(f"### Multi-pod (2×16×16 = 512 chips): {ok}/32 cells compiled OK "
+          f"(full terms in results/dryrun_multi_pod.json)")
+    # brief summary of multi-pod deltas
+    sp = {(r["arch"], r["shape"]): r for r in single
+          if r.get("status") == "ok"}
+    rows = []
+    for r in multi:
+        if r.get("status") != "ok":
+            continue
+        k = (r["arch"], r["shape"])
+        if k in sp:
+            d = r["roofline"]["collective_s"] - \
+                sp[k]["roofline"]["collective_s"]
+            rows.append((k, d))
+    worst = sorted(rows, key=lambda t: -abs(t[1]))[:3]
+    for (a, s), d in worst:
+        print(f"  - largest cross-pod collective delta: {a}/{s}: "
+              f"{d:+.3f} s (pod-DP gradient reduce over DCN)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Deliverable (g): format the dry-run sweep into the roofline table
+(EXPERIMENTS.md §Roofline) — three terms, dominant bottleneck, useful-flop
+ratio, and a one-line 'what would move the dominant term' note."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .common import RESULTS_DIR, Report
+
+NOTES = {
+    ("memory", "train"): "fuse attention/WKV inner loops (Pallas kernels "
+                         "keep block intermediates in VMEM)",
+    ("memory", "prefill"): "same as train: kernel-fused attention removes "
+                           "block-intermediate HBM round trips",
+    ("memory", "decode"): "batch more requests per step / quantize KV cache",
+    ("collective", "train"): "reshard: pure-FSDP (drop TP all-reduces) or "
+                             "overlap grad reduce-scatter with backward",
+    ("collective", "prefill"): "shard KV heads (duplicate GQA heads) / "
+                               "overlap layer all-gathers with compute",
+    ("collective", "decode"): "keep cache shards stationary (avoid "
+                              "resharding on update); smaller TP group",
+    ("compute", "train"): "tighter remat policy (save attention outputs)",
+    ("compute", "prefill"): "larger per-chip batch",
+    ("compute", "decode"): "speculative decoding / wider batch",
+}
+
+
+def load(path: str) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(single="results/dryrun_single_pod.json") -> str:
+    rows = load(single)
+    rep = Report("roofline_table")
+    n_ok = 0
+    worst = (1.0, "")
+    for r in rows:
+        if r["status"] != "ok":
+            rep.add(arch=r["arch"], shape=r["shape"], status=r["status"])
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        from repro.configs.base import SHAPES
+        kind = SHAPES[r["shape"]].kind
+        note = NOTES.get((rf["dominant"], kind), "")
+        frac = rf["roofline_fraction"]
+        if kind != "decode" and frac < worst[0]:
+            worst = (frac, f"{r['arch']}/{r['shape']}")
+        rep.add(arch=r["arch"], shape=r["shape"],
+                compute_s=round(rf["compute_s"], 3),
+                memory_s=round(rf["memory_s"], 3),
+                collective_s=round(rf["collective_s"], 3),
+                dominant=rf["dominant"],
+                model_flops=rf["model_flops_global"],
+                useful_flop_ratio=round(rf["useful_flop_ratio"], 3),
+                roofline_fraction=round(frac, 4),
+                next_action=note)
+    derived = f"cells_ok={n_ok};worst_train_fraction={worst[0]:.4f}@{worst[1]}"
+    rep.finish(derived)
+    return derived
+
+
+if __name__ == "__main__":
+    print(run())

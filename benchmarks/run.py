@@ -1,0 +1,43 @@
+"""Benchmark suite entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (one per benchmark) and
+writes full tables to results/<name>.json.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fidelity_compare, fig4_protocols, fig10_reduce_scatter,
+                   fig11_all_gather, fig12_unrolling, fig13_outstanding,
+                   fig14_scalability, roofline_table, step_prediction,
+                   table1_clos_allreduce)
+    suites = [
+        ("fig4_protocols", fig4_protocols.run),
+        ("fig10_reduce_scatter", fig10_reduce_scatter.run),
+        ("fig11_all_gather", fig11_all_gather.run),
+        ("fig12_unrolling", fig12_unrolling.run),
+        ("fig13_outstanding", fig13_outstanding.run),
+        ("fig14_scalability", fig14_scalability.run),
+        ("table1_clos_allreduce", table1_clos_allreduce.run),
+        ("fidelity_compare", fidelity_compare.run),
+        ("roofline_table", roofline_table.run),
+        ("step_prediction", step_prediction.run),
+    ]
+    failures = 0
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — keep the suite running
+            failures += 1
+            print(f"{name},0,ERROR")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

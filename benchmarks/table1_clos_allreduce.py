@@ -1,0 +1,98 @@
+"""Paper Table 1 / §5.5: ring All-Reduce over an InfraGraph-defined Clos
+fabric, flow-completion-time metrics.
+
+The paper runs ns-3 on an 8-GPU Clos from an InfraGraph blueprint; we
+translate the same blueprint to our chunk-granularity backend over the
+expanded fabric and report AllReduce completion time, achieved bus
+bandwidth, and per-flow FCT statistics (min/max/avg vs standalone)."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.collectives import ring_all_reduce
+from repro.core.engine import Engine
+from repro.core.infragraph import clos_fat_tree_fabric, to_fabric
+from repro.core.network.fabric import DATA
+
+from .common import Report
+
+MB = 1 << 20
+
+
+class _FlowTracker:
+    """Sends each collective step's chunk as one flow; records FCTs."""
+
+    def __init__(self, fabric, gpu_nodes):
+        self.fabric = fabric
+        self.gpu_nodes = gpu_nodes
+        self.fcts: List[float] = []
+
+    def send(self, src: int, dst: int, size: int, on_done) -> None:
+        t0 = self.fabric.engine.now
+        route = self.fabric.route(self.gpu_nodes[src], self.gpu_nodes[dst])
+
+        def arrived(flight):
+            self.fcts.append(self.fabric.engine.now - t0)
+            on_done()
+
+        self.fabric.send(route, size, DATA, arrived)
+
+
+def run(num_gpus: int = 8, size_bytes: int = 1 * MB) -> str:
+    infra = clos_fat_tree_fabric(num_hosts=num_gpus, switch_ports=4,
+                                 link_GBps=50.0, link_lat_ns=500.0)
+    fabric, g = to_fabric(infra)
+    gpu_nodes = [fabric.node(f"host.{i}.gpu.0") for i in range(num_gpus)]
+    tracker = _FlowTracker(fabric, gpu_nodes)
+
+    # ring AR as explicit flows: 2(n-1) steps of size/n chunks per rank
+    n = num_gpus
+    chunk = size_bytes // n
+    done = {"ranks": 0, "t": 0.0}
+    step_of = [0] * n
+
+    def advance(r):
+        step_of[r] += 1
+        if step_of[r] == 2 * (n - 1):
+            done["ranks"] += 1
+            done["t"] = fabric.engine.now
+        else:
+            tracker.send(r, (r + 1) % n, chunk, lambda rr=r: advance(rr))
+
+    for r in range(n):
+        tracker.send(r, (r + 1) % n, chunk, lambda rr=r: advance(rr))
+    fabric.engine.run(5e10)
+    assert done["ranks"] == n, f"incomplete: {done['ranks']}/{n}"
+    t = done["t"]
+
+    # standalone FCT: one chunk on an idle fabric
+    e2 = Engine()
+    fabric2, _ = to_fabric(infra, engine=e2)
+    nodes2 = [fabric2.node(f"host.{i}.gpu.0") for i in range(num_gpus)]
+    solo = {}
+    fabric2.send(fabric2.route(nodes2[0], nodes2[1]), chunk, DATA,
+                 lambda f: solo.setdefault("t", e2.now))
+    e2.run()
+
+    fcts = tracker.fcts
+    bus_bw = size_bytes / t if t else 0.0
+    rep = Report("table1_clos_allreduce")
+    rep.add(metric="allreduce_completion_us", value=round(t / 1e3, 2))
+    rep.add(metric="achieved_bus_bw_GBps", value=round(bus_bw, 3))
+    rep.add(metric="min_fct_ns", value=round(min(fcts)))
+    rep.add(metric="max_fct_ns", value=round(max(fcts)))
+    rep.add(metric="avg_fct_ns", value=round(sum(fcts) / len(fcts)))
+    rep.add(metric="standalone_fct_ns", value=round(solo["t"]))
+    rep.add(metric="peak_fct_overhead_ns",
+            value=round(max(fcts) - solo["t"]))
+    rep.add(metric="flows", value=len(fcts))
+    derived = (f"completion_us={t / 1e3:.1f};"
+               f"avg_fct={sum(fcts) / len(fcts):.0f}ns;"
+               f"standalone={solo['t']:.0f}ns")
+    rep.finish(derived)
+    return derived
+
+
+if __name__ == "__main__":
+    print(run())

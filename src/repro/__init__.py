@@ -1,0 +1,11 @@
+"""repro: ASTRA-sim 3.0 reproduction + multi-pod JAX training/serving
+framework.
+
+Two halves, one repo:
+  repro.core         — the paper: fine-grained distributed-ML simulator
+  repro.{models,...} — the framework whose compiled artifacts feed it
+
+See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from . import hlo_stats, predict, roofline
+
+__all__ = ["hlo_stats", "predict", "roofline"]

@@ -1,0 +1,413 @@
+"""HLO-text analyzer with while-loop trip-count multiplication.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE — useless
+for scan-over-layers models (verified by calibration; see EXPERIMENTS.md
+§Dry-run).  This module parses the partitioned HLO text into computations,
+builds the call graph (while bodies x trip count, fusions/calls x 1), and
+accumulates:
+
+  * ``flops``       — 2 * prod(out_dims) * contracted_size per dot (and a
+    kernel-volume bound for convolutions);
+  * ``bytes``       — operand + output bytes of every kernel-boundary
+    instruction (fusions, dots, reduces, un-fused elementwise, collectives)
+    — a standard HBM-traffic approximation;
+  * ``collectives`` — wire bytes per collective kind with ring factors
+    ((N-1)/N per AG/RS pass, 2x for AR) from each op's replica groups.
+
+Operand shapes are resolved through a per-computation name -> shape table
+(instruction results + typed header parameters), since this dump format
+does not inline operand types.  Trip counts come from the loop condition's
+``compare(iter, constant)``.  All numbers are per-device (the module is
+the per-partition SPMD program).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([\d,]*)\]")
+_CALL_ATTR_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND_ATTR_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_NEW_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*([a-z]+[0-9]*\[[\d,]*\])")
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "copy-start", "copy-done", "after-all",
+               "partition-id", "replica-id", "iota", "while", "conditional",
+               "call", "custom-call", "copy",
+               # layout/view ops: fused into neighbors on TPU, counting
+               # them would double HBM traffic
+               "reshape", "transpose", "broadcast", "convert", "slice"}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _nelem(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _nelem(dims) * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _parse_instr(line: str):
+    """-> (name, result_type_str, opcode, args_str) or None."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    # result type: tuple "(...)" or single token up to first space
+    if rest.startswith("("):
+        depth, i = 0, 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        rtype = rest[:i + 1]
+        rest = rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype = rest[:sp]
+        rest = rest[sp + 1:]
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par].strip()
+    # args: up to the matching ')'
+    depth = 0
+    end = par
+    for j in range(par, len(rest)):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                end = j
+                break
+    args = rest[par + 1:end]
+    attrs = rest[end + 1:]
+    return name, rtype, opcode, args, attrs
+
+
+class Computation:
+    __slots__ = ("name", "header", "instrs", "shapes")
+
+    def __init__(self, name: str, header: str):
+        self.name = name
+        self.header = header
+        self.instrs: List[Tuple[str, str, str, str, str]] = []
+        self.shapes: Dict[str, str] = {}   # name -> "dtype[dims]"
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            st = line.strip()
+            if st.endswith("{") and "->" in st and \
+                    (st.startswith("%") or st.startswith("ENTRY")):
+                is_entry = st.startswith("ENTRY")
+                body = st[len("ENTRY"):].strip() if is_entry else st
+                name = body.split()[0].lstrip("%")
+                cur = Computation(name, st)
+                if is_entry:
+                    entry = name
+                # typed parameters from the header
+                for pn, ptype in _PARAM_RE.findall(st):
+                    cur.shapes[pn] = ptype
+        else:
+            if line.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+                continue
+            parsed = _parse_instr(line)
+            if parsed:
+                name, rtype, opcode, args, attrs = parsed
+                cur.instrs.append(parsed)
+                if not rtype.startswith("("):
+                    # strip layout {..}
+                    m = _SHAPE_RE.match(rtype)
+                    if m:
+                        cur.shapes[name] = f"{m.group(1)}[{m.group(2)}]"
+    if entry is None and comps:
+        entry = max(comps, key=lambda n: len(comps[n].instrs))
+    return comps, entry
+
+
+def _operand_names(args: str) -> List[str]:
+    out = []
+    for tok in args.split(","):
+        tok = tok.strip()
+        if tok.startswith("%"):
+            out.append(tok[1:])
+        else:
+            # possibly "f32[..] %name" (typed) — take trailing %name
+            if "%" in tok:
+                out.append(tok.split("%")[-1].strip())
+    return out
+
+
+def _lookup(comp: Computation, name: str) -> Optional[Tuple[str, str]]:
+    t = comp.shapes.get(name)
+    if t is None:
+        return None
+    m = _SHAPE_RE.match(t)
+    return (m.group(1), m.group(2)) if m else None
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_NEW_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_OLD_RE.search(attrs)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2
+
+
+def _trip_count(cond: Computation, comps: Dict[str, Computation]) -> int:
+    """Loop bound: the compare constant, searching through fusion bodies."""
+    best = 1
+    stack = [cond]
+    seen = set()
+    while stack:
+        c = stack.pop()
+        if c.name in seen:
+            continue
+        seen.add(c.name)
+        for (_, rtype, opcode, args, attrs) in c.instrs:
+            if opcode == "constant" and rtype.startswith("s32") and \
+                    args.strip().isdigit():
+                best = max(best, int(args.strip()))
+            for v in _CONST_RE.findall(args + attrs):
+                best = max(best, int(v))
+            m = _CALL_ATTR_RE.search(attrs)
+            if m and m.group(1) in comps:
+                stack.append(comps[m.group(1)])
+    return max(best, 1)
+
+
+TAGS = ("wkv6_kernel", "attention_kernel", "rg_lru_kernel")
+
+
+def _tag_of(attrs: str):
+    if "op_name=" not in attrs:
+        return None
+    for t in TAGS:
+        if t in attrs:
+            return t
+    return None
+
+
+def analyze(text: str) -> Dict[str, object]:
+    comps, entry = _parse_computations(text)
+
+    per = {}
+    children: Dict[str, List[Tuple[str, str]]] = defaultdict(list)
+    fusion_bodies = set()
+    coll_detail: List[Tuple[str, str, str, float]] = []  # (comp, op, shape, wire)
+    dot_detail: List[Tuple[str, str, float]] = []        # (comp, shape, flops)
+    tag_bytes_local: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: defaultdict(float))                      # comp -> tag -> bytes
+    for comp in comps.values():
+        flops = 0.0
+        byts = 0.0
+        coll: Dict[str, float] = defaultdict(float)
+        unresolved = 0
+        for (name, rtype, opcode, args, attrs) in comp.instrs:
+            if opcode == "dot":
+                shapes = _SHAPE_RE.findall(rtype)
+                out_elems = _nelem(shapes[0][1]) if shapes else 0
+                ops = _operand_names(args)
+                contracted = 1
+                mc = _CONTRACT_RE.search(attrs)
+                lhs = _lookup(comp, ops[0]) if ops else None
+                if lhs and mc is not None:
+                    dims = [int(x) for x in lhs[1].split(",")] if lhs[1] \
+                        else []
+                    for idx in (mc.group(1).split(",") if mc.group(1)
+                                else []):
+                        i = int(idx)
+                        if i < len(dims):
+                            contracted *= dims[i]
+                else:
+                    unresolved += 1
+                f = 2.0 * out_elems * contracted
+                flops += f
+                dot_detail.append((comp.name, rtype[:48], f))
+                byts += sum(_shape_bytes(dt, dm)
+                            for dt, dm in _SHAPE_RE.findall(rtype))
+                for o in ops:
+                    s = _lookup(comp, o)
+                    if s:
+                        byts += _shape_bytes(*s)
+            elif opcode == "convolution":
+                shapes = _SHAPE_RE.findall(rtype)
+                out_elems = _nelem(shapes[0][1]) if shapes else 0
+                ops = _operand_names(args)
+                ker = _lookup(comp, ops[1]) if len(ops) > 1 else None
+                flops += 2.0 * out_elems * (_nelem(ker[1]) if ker else 1)
+            elif opcode in COLLECTIVES:
+                shapes = _SHAPE_RE.findall(rtype)
+                size = sum(_shape_bytes(dt, dm) for dt, dm in shapes)
+                n = _group_size(attrs)
+                if n > 1:
+                    frac = (n - 1) / n
+                    wire = {"all-gather": size * frac,
+                            "reduce-scatter": size,
+                            "all-reduce": 2 * size * frac,
+                            "all-to-all": size * frac,
+                            "collective-permute": size}[opcode]
+                    coll[opcode] += wire
+                    coll_detail.append((comp.name, opcode, rtype, wire))
+                byts += size
+            elif opcode == "while":
+                mb = _CALL_ATTR_RE.search(attrs)
+                mc = _COND_ATTR_RE.search(attrs)
+                if mb:
+                    children[comp.name].append(
+                        (mb.group(1), "while:" + (mc.group(1) if mc else "")))
+            elif opcode == "fusion":
+                m = _CALL_ATTR_RE.search(attrs)
+                if m:
+                    children[comp.name].append((m.group(1), "fusion"))
+                    fusion_bodies.add(m.group(1))
+                bb = sum(_shape_bytes(dt, dm)
+                         for dt, dm in _SHAPE_RE.findall(rtype))
+                for o in _operand_names(args):
+                    s = _lookup(comp, o)
+                    if s:
+                        bb += _shape_bytes(*s)
+                byts += bb
+                t = _tag_of(attrs)
+                if t:
+                    tag_bytes_local[comp.name][t] += bb
+            elif opcode == "call":
+                m = _CALL_ATTR_RE.search(attrs)
+                if m:
+                    children[comp.name].append((m.group(1), "call"))
+            elif opcode == "conditional":
+                for b in _BRANCH_RE.findall(attrs):
+                    for nm in b.split(","):
+                        children[comp.name].append(
+                            (nm.strip().lstrip("%"), "cond"))
+            elif opcode in ("reduce", "sort", "scatter", "gather",
+                            "dynamic-slice", "dynamic-update-slice",
+                            "select-and-scatter", "pad", "concatenate",
+                            "broadcast", "reshape", "transpose", "slice",
+                            "reverse", "reduce-window") or \
+                    opcode not in _SKIP_BYTES:
+                bb = sum(_shape_bytes(dt, dm)
+                         for dt, dm in _SHAPE_RE.findall(rtype))
+                for o in _operand_names(args):
+                    s = _lookup(comp, o)
+                    if s:
+                        bb += _shape_bytes(*s)
+                byts += bb
+                t = _tag_of(attrs)
+                if t:
+                    tag_bytes_local[comp.name][t] += bb
+        per[comp.name] = (flops, byts, dict(coll), unresolved)
+
+    # propagate multipliers in topological order (parents first) so late
+    # increments from a second caller still reach grandchildren
+    topo: List[str] = []
+    state: Dict[str, int] = {}
+    stack = [(entry, iter([c for c, _ in children.get(entry, [])]))]
+    state[entry] = 1
+    while stack:
+        node, it = stack[-1]
+        advanced = False
+        for child in it:
+            if state.get(child, 0) == 0:
+                state[child] = 1
+                stack.append(
+                    (child, iter([c for c, _ in children.get(child, [])])))
+                advanced = True
+                break
+        if not advanced:
+            topo.append(node)
+            stack.pop()
+    topo.reverse()
+
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    for name in topo:
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for child, kind in children.get(name, []):
+            if kind.startswith("while:"):
+                cond_name = kind.split(":", 1)[1]
+                cond = comps.get(cond_name)
+                factor = float(_trip_count(cond, comps)) if cond else 1.0
+            else:
+                factor = 1.0
+            mult[child] += m * factor
+
+    totals_f = 0.0
+    totals_b = 0.0
+    coll_tot: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    tag_bytes: Dict[str, float] = defaultdict(float)
+    unresolved = 0
+    for name, (f, b, c, u) in per.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        # fusion bodies: their bytes are internal to the fused kernel — the
+        # caller already counted the fusion's operand/result traffic.  Their
+        # dots (output fusions) still count.
+        totals_f += m * f
+        if name not in fusion_bodies:
+            totals_b += m * b
+            for t, tb in tag_bytes_local.get(name, {}).items():
+                tag_bytes[t] += m * tb
+        for k, v in c.items():
+            coll_tot[k] += m * v
+        unresolved += u
+    coll_tot["total_wire_bytes"] = sum(coll_tot[k] for k in COLLECTIVES)
+    detail = sorted(((cn, op, sh, w * mult.get(cn, 0.0))
+                     for cn, op, sh, w in coll_detail),
+                    key=lambda t: -t[3])
+    dots = sorted(((cn, sh, f * mult.get(cn, 0.0))
+                   for cn, sh, f in dot_detail), key=lambda t: -t[2])
+    return {"flops": totals_f, "bytes": totals_b, "collectives": coll_tot,
+            "tag_bytes": dict(tag_bytes),
+            "num_computations": len(comps), "entry": entry,
+            "unresolved_dots": unresolved,
+            "coll_top": [(op, sh[:60], round(w / 1e9, 2))
+                         for cn, op, sh, w in detail[:12]],
+            "flops_top": [(cn[:28], sh, round(f / 1e12, 2))
+                          for cn, sh, f in dots[:14]]}

@@ -1,0 +1,5 @@
+from .base import (ArchConfig, MoEConfig, ShapeConfig, SHAPES, get,
+                   reduced, registry)
+
+__all__ = ["ArchConfig", "MoEConfig", "ShapeConfig", "SHAPES", "get",
+           "reduced", "registry"]

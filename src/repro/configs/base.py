@@ -1,0 +1,181 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is a frozen ``ArchConfig``; every workload shape
+is a ``ShapeConfig``.  ``registry()`` maps ``--arch`` ids to configs;
+``reduced()`` derives the CPU-smoke-test variant of any architecture
+(small layers/width/vocab, same family and code paths).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    # "tp": shard each expert's hidden dim over the model axis (few big
+    # experts, e.g. grok).  "ep": shard the expert dim (many small experts,
+    # e.g. moonshot) — all-to-all dispatch.
+    sharding: str = "tp"
+    # GShard dispatch group size: one-hot dispatch flops and intermediate
+    # bytes are LINEAR in this (cap ~ k*group/E) — small groups are cheap
+    group_size: int = 128
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    act: str = "swiglu"            # swiglu | geglu
+    norm_eps: float = 1e-5
+    rope_theta: float = 500_000.0
+    moe: Optional[MoEConfig] = None
+    # hybrid (recurrentgemma): block pattern, local-attention window
+    window: int = 0                # 0 -> full attention
+    rec_d_rnn: int = 0
+    rec_conv: int = 4
+    rec_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    # encoder-decoder
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # modality frontend stubs ([audio]/[vlm]: precomputed embeddings)
+    frontend: str = "none"         # none | audio | vision
+    frontend_len: int = 0          # frames / patches provided by the stub
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # does the arch support O(1)-state / windowed decode (long_500k)?
+    sub_quadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + layers)."""
+        d, v = self.d_model, self.vocab
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        hd = self.hd
+        mlp_mats = 2 if self.act == "gelu" else 3
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + \
+            self.n_heads * hd * d
+        if self.family in ("dense", "moe", "vlm"):
+            mlp = mlp_mats * d * self.d_ff
+            if self.moe:
+                mlp = (3 * d * self.moe.d_ff_expert) * self.moe.num_experts \
+                    + d * self.moe.num_experts
+            per_layer = attn + mlp + 2 * d
+            total = emb + self.n_layers * per_layer
+        elif self.family == "ssm":                    # rwkv6
+            tm = 5 * d * d + 2 * d * 64 * 5 + 2 * d   # time-mix + loras
+            cm = 2 * d * self.d_ff + d * d            # channel-mix
+            total = emb + self.n_layers * (tm + cm + 2 * d)
+        elif self.family == "hybrid":
+            rec = 2 * d * self.rec_d_rnn + self.rec_d_rnn * d + \
+                self.rec_d_rnn * self.rec_conv + 2 * self.rec_d_rnn
+            mlp = 3 * d * self.d_ff
+            n_attn = sum(1 for i in range(self.n_layers)
+                         if self.rec_pattern[i % len(self.rec_pattern)]
+                         == "attn")
+            n_rec = self.n_layers - n_attn
+            total = emb + n_rec * (rec + mlp + 2 * d) + \
+                n_attn * (attn + mlp + 2 * d)
+        elif self.family == "encdec":
+            mlp = 3 * d * self.d_ff
+            enc = self.enc_layers * (attn + mlp + 2 * d)
+            dec = self.dec_layers * (2 * attn + mlp + 3 * d)
+            total = emb + enc + dec
+        else:
+            total = emb + self.n_layers * (attn + 3 * d * self.d_ff + 2 * d)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top-k experts only)."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        dense_like = self.param_count() - self.n_layers * (
+            3 * d * self.moe.d_ff_expert) * self.moe.num_experts
+        return int(dense_like + self.n_layers *
+                   3 * d * self.moe.d_ff_expert * self.moe.top_k)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def reduced(cfg: ArchConfig) -> ArchConfig:
+    """CPU smoke-test variant: same family/code paths, tiny dimensions."""
+    kw = dict(
+        n_layers=min(cfg.n_layers, 2 if not cfg.rec_pattern
+                     else len(cfg.rec_pattern)),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads > 1 else 1,
+        d_ff=128,
+        vocab=256,
+        head_dim=16 if cfg.head_dim else 0,
+        dtype="float32",
+    )
+    if cfg.moe:
+        kw["moe"] = MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
+                              sharding=cfg.moe.sharding)
+    if cfg.rec_d_rnn:
+        kw["rec_d_rnn"] = 64
+    if cfg.enc_layers:
+        kw["enc_layers"], kw["dec_layers"] = 2, 2
+        kw["n_layers"] = 4
+    if cfg.frontend_len:
+        kw["frontend_len"] = 16
+    if cfg.window:
+        kw["window"] = 32
+    return replace(cfg, **kw)
+
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def registry() -> Dict[str, ArchConfig]:
+    # import for side effects: each config module registers itself
+    from . import (gemma_2b, grok_1_314b, internvl2_1b, llama3_8b,  # noqa
+                   moonshot_v1_16b_a3b, phi3_medium_14b,
+                   recurrentgemma_9b, rwkv6_7b, seamless_m4t_large_v2,
+                   starcoder2_7b)
+    return dict(_REGISTRY)
+
+
+def get(name: str) -> ArchConfig:
+    return registry()[name]

@@ -1,0 +1,9 @@
+"""Gemma 2B: GeGLU, head_dim=256, MQA [arXiv:2403.08295]."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma-2b", family="dense",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, d_ff=16384,
+    vocab=256000, head_dim=256, act="geglu", rope_theta=10_000.0,
+    tie_embeddings=True,
+))

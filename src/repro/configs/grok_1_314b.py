@@ -1,0 +1,14 @@
+"""Grok-1 314B: MoE 8 experts top-2 [hf:xai-org/grok-1].
+
+Expert sharding: "tp" — 8 experts do not divide the 16-way model axis, so
+each expert's d_ff=32768 hidden dim is tensor-sharded instead
+(DESIGN.md SS5).
+"""
+from .base import ArchConfig, MoEConfig, register
+
+CONFIG = register(ArchConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=32768,
+    vocab=131072, act="swiglu", rope_theta=10_000.0,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32768, sharding="tp"),
+))

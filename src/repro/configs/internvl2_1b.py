@@ -1,0 +1,10 @@
+"""InternVL2-1B backbone (InternLM2-ish LM): ViT frontend is a STUB
+providing precomputed patch embeddings [arXiv:2404.16821]."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="internvl2-1b", family="vlm",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2, d_ff=4864,
+    vocab=151655, act="swiglu", rope_theta=1_000_000.0,
+    frontend="vision", frontend_len=256,
+))

@@ -1,0 +1,14 @@
+"""Moonlight 16B-A3B: fine-grained MoE, 64 experts top-6
+[hf:moonshotai/Moonlight-16B-A3B].
+
+Expert sharding: "ep" — 64 experts / 16-way model axis = 4 experts per
+shard; token dispatch becomes an all-to-all (DESIGN.md SS5).
+"""
+from .base import ArchConfig, MoEConfig, register
+
+CONFIG = register(ArchConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1408,
+    vocab=163840, act="swiglu", rope_theta=50_000.0,
+    moe=MoEConfig(num_experts=64, top_k=6, d_ff_expert=1408, sharding="ep"),
+))

@@ -1,0 +1,12 @@
+"""RecurrentGemma 9B: RG-LRU + local attention, 2:1 pattern
+[arXiv:2402.19427].  38 layers = 12 x (rec, rec, attn) + (rec, rec).
+Windowed attention (2048) + O(1) recurrent state => long_500k eligible."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1, d_ff=12288,
+    vocab=256000, head_dim=256, act="geglu", rope_theta=10_000.0,
+    window=2048, rec_d_rnn=4096, rec_conv=4,
+    rec_pattern=("rec", "rec", "attn"), sub_quadratic=True,
+))

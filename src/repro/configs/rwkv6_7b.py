@@ -1,0 +1,9 @@
+"""RWKV-6 (Finch) 7B: attention-free, data-dependent decay
+[arXiv:2404.05892].  Constant-state decode => long_500k eligible."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64, d_ff=14336,
+    vocab=65536, head_dim=64, act="relu2", sub_quadratic=True,
+))

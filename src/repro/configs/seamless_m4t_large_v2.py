@@ -1,0 +1,11 @@
+"""SeamlessM4T-large v2 backbone: encoder-decoder, 24+24 layers
+[arXiv:2308.11596].  Audio frontend is a STUB: input_specs() provides
+precomputed frame embeddings (brief: modality frontend not modeled)."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="seamless-m4t-large-v2", family="encdec",
+    n_layers=48, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=8192,
+    vocab=256206, act="swiglu", rope_theta=10_000.0,
+    enc_layers=24, dec_layers=24, frontend="audio", frontend_len=4096,
+))

@@ -1,0 +1,25 @@
+"""ASTRA-sim 3.0 reproduction core: fine-grained distributed-ML simulation.
+
+Layers (paper Fig. 1):
+  workload  — instructions / operations / workload (Load-Store granularity)
+  system    — collectives, mscclpp, chakra, system (kernel decomposition)
+  network   — network.fabric (NoC-level) + network.simple (alpha-beta)
+  hardware  — gpu_model + cluster (CUs, HBM channels, I/O ports)
+  infra     — infragraph (standardized infrastructure representation)
+"""
+
+from .engine import Engine
+from .instructions import IKind, Instruction, MemRef, Space
+from .operations import (BarrierOp, GpuOp, LoadOp, MemcpyOp, NopOp, OpContext,
+                         ReduceOp, SemaphoreAcquireOp, SemaphoreReleaseOp,
+                         StoreOp)
+from .workload import Kernel, Workgroup
+from .gpu_model import GpuConfig, GpuModel
+from .cluster import Cluster, NocConfig
+
+__all__ = [
+    "Engine", "IKind", "Instruction", "MemRef", "Space",
+    "GpuOp", "LoadOp", "StoreOp", "MemcpyOp", "ReduceOp", "NopOp",
+    "BarrierOp", "SemaphoreAcquireOp", "SemaphoreReleaseOp", "OpContext",
+    "Kernel", "Workgroup", "GpuConfig", "GpuModel", "Cluster", "NocConfig",
+]

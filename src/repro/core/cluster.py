@@ -1,0 +1,196 @@
+"""Cluster: GPUs + fabric + request/response plumbing.
+
+Implements the paper's four-step remote-write decomposition (§1):
+  (i)   a CU loads cache-line-sized data from local HBM to its register file
+  (ii)  the CU writes the data to the I/O port of the socket
+  (iii) the network transfers the cache line to the remote GPU's I/O port
+  (iv)  the remote GPU writes the received data to the destination HBM
+— each Load/Store is a request/response round trip on the fabric, with
+control messages (load requests, store acks, semaphore ops) and data
+messages (load responses, store payloads) arbitrated per-link.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from .engine import Engine
+from .gpu_model import ComputeUnit, GpuConfig, GpuModel, WRequest
+from .instructions import IKind, MemRef, Space
+from .network.fabric import CONTROL, DATA, Fabric, Flight
+from .workload import Kernel
+
+
+@dataclass
+class NocConfig:
+    """On-chip topology (paper §5.1 generic GPU, parameterized)."""
+    mesh_x: int = 4
+    mesh_y: int = 2
+    cus_per_router: int = 2          # paper: 4 (128 CUs over 8x4)
+    mem_channels: int = 8            # paper: 32 (16 top + 16 bottom)
+    io_ports: int = 8                # paper: 32 (4 x 8 left/right routers)
+    onchip_GBps: float = 1099.5      # 1 TiB/s on-chip links
+    onchip_lat_ns: float = 5.0
+    mem_GBps_per_channel: float = 137.4   # 4 TiB/s cumulative / 32
+    mem_lat_ns: float = 80.0
+    io_GBps_per_port: float = 34.36       # 1 TiB/s cumulative / 32
+    scaleup_lat_ns: float = 1000.0        # 1 us inter-GPU link latency
+    arbitration: str = "fifo"             # "fifo" | "fair"  (Fig. 11)
+
+    @property
+    def num_cus(self) -> int:
+        return self.mesh_x * self.mesh_y * self.cus_per_router
+
+
+class Cluster:
+    """A multi-GPU system on a single fabric with a scale-up network."""
+
+    def __init__(self, num_gpus: int, gpu_config: Optional[GpuConfig] = None,
+                 noc: Optional[NocConfig] = None,
+                 engine: Optional[Engine] = None,
+                 topology: str = "switch"):
+        self.engine = engine or Engine()
+        self.noc = noc or NocConfig()
+        cfg = gpu_config or GpuConfig()
+        cfg.num_cus = self.noc.num_cus
+        cfg.hbm_latency_ns = self.noc.mem_lat_ns
+        self.gpu_config = cfg
+        self.fabric = Fabric(self.engine, default_policy=self.noc.arbitration)
+        self.gpus: List[GpuModel] = []
+        self._build(num_gpus, topology)
+        self._inflight = 0
+        self.request_count = 0
+
+    # ------------------------------------------------------------- topology
+    def _build(self, num_gpus: int, topology: str) -> None:
+        fab = self.fabric
+        n = self.noc
+        for g in range(num_gpus):
+            routers = [[fab.add_node(f"g{g}.r{x}_{y}") for y in range(n.mesh_y)]
+                       for x in range(n.mesh_x)]
+            # 2-D mesh of routers
+            for x in range(n.mesh_x):
+                for y in range(n.mesh_y):
+                    if x + 1 < n.mesh_x:
+                        fab.add_bidi(routers[x][y], routers[x + 1][y],
+                                     n.onchip_GBps, n.onchip_lat_ns)
+                    if y + 1 < n.mesh_y:
+                        fab.add_bidi(routers[x][y], routers[x][y + 1],
+                                     n.onchip_GBps, n.onchip_lat_ns)
+            # CUs
+            cu_nodes = []
+            for i in range(n.num_cus):
+                r = routers[(i // n.cus_per_router) % n.mesh_x][
+                    (i // n.cus_per_router) // n.mesh_x % n.mesh_y]
+                c = fab.add_node(f"g{g}.cu{i}")
+                fab.add_bidi(c, r, n.onchip_GBps, 1.0)
+                cu_nodes.append(c)
+            # HBM channels on the top (y=0) and bottom (y=max) rows
+            hbm_nodes = []
+            for i in range(n.mem_channels):
+                row = 0 if i < n.mem_channels // 2 else n.mesh_y - 1
+                col = i % n.mesh_x
+                h = fab.add_node(f"g{g}.hbm{i}")
+                fab.add_bidi(h, routers[col][row],
+                             n.mem_GBps_per_channel, 1.0)
+                hbm_nodes.append(h)
+            # I/O ports on the left (x=0) and right (x=max) columns
+            io_nodes = []
+            for i in range(n.io_ports):
+                col = 0 if i < n.io_ports // 2 else n.mesh_x - 1
+                row = i % n.mesh_y
+                p = fab.add_node(f"g{g}.io{i}")
+                fab.add_bidi(p, routers[col][row], n.io_GBps_per_port, 1.0)
+                io_nodes.append(p)
+            gpu = GpuModel(g, self.gpu_config, self.engine, fab, self,
+                           cu_nodes, hbm_nodes, io_nodes)
+            self.gpus.append(gpu)
+        # scale-up fabric between the GPUs' I/O ports
+        if num_gpus > 1:
+            if topology == "switch":
+                sw = fab.add_node("scaleup.sw0")
+                for g in range(num_gpus):
+                    for p, io in enumerate(self.gpus[g].io_nodes):
+                        fab.add_bidi(io, sw, n.io_GBps_per_port,
+                                     n.scaleup_lat_ns / 2)
+            elif topology == "ring":
+                for g in range(num_gpus):
+                    nxt = (g + 1) % num_gpus
+                    half = len(self.gpus[g].io_nodes) // 2
+                    for p in range(half):
+                        fab.add_bidi(self.gpus[g].io_nodes[half + p],
+                                     self.gpus[nxt].io_nodes[p],
+                                     n.io_GBps_per_port, n.scaleup_lat_ns)
+            else:
+                raise ValueError(f"unknown scale-up topology {topology!r}")
+
+    # ------------------------------------------------------------ dispatch
+    def dispatch(self, kernel: Kernel) -> None:
+        self.gpus[kernel.gpu].dispatch(kernel)
+
+    def run(self, until_ns: Optional[float] = None) -> float:
+        return self.engine.run(until_ns)
+
+    # -------------------------------------------------- request/response flow
+    def send_request(self, req: WRequest) -> None:
+        """CU -> memory endpoint request leg."""
+        self.request_count += 1
+        mem = req.mem
+        target_gpu = self.gpus[mem.gpu]
+        dst_node = target_gpu.hbm_node_for(mem.addr, mem.space)
+        src_cu = req.cu
+        src_gpu = src_cu.gpu
+        hdr = src_gpu.config.header_bytes
+        if req.kind in (IKind.LOAD, IKind.SEM_ACQUIRE):
+            size, cls = hdr, CONTROL
+        elif req.kind == IKind.SEM_RELEASE:
+            size, cls = hdr, CONTROL
+        else:  # STORE: payload travels on the request leg
+            size, cls = req.size + hdr, DATA
+        route = self._route(src_gpu, src_cu.node, target_gpu, dst_node,
+                            mem.addr)
+        self.fabric.send(route, size, cls, self._arrive_at_memory, payload=req)
+
+    def _route(self, src_gpu: GpuModel, src_node: int, dst_gpu: GpuModel,
+               dst_node: int, addr: int) -> List:
+        if src_gpu.gid == dst_gpu.gid:
+            return self.fabric.route(src_node, dst_node)
+        # cross-GPU: hash the cache line across I/O ports for multipathing
+        key = addr // src_gpu.config.cache_line
+        via = [src_node,
+               src_gpu.io_node_for(key),
+               dst_gpu.io_node_for(key),
+               dst_node]
+        return self.fabric.route_via(via)
+
+    def _arrive_at_memory(self, flight: Flight) -> None:
+        req: WRequest = flight.payload
+        mem = req.mem
+        target_gpu = self.gpus[mem.gpu]
+        # memory access latency, then the response leg
+        self.engine.schedule(target_gpu.config.hbm_latency_ns,
+                             self._respond, req)
+
+    def _respond(self, req: WRequest) -> None:
+        mem = req.mem
+        target_gpu = self.gpus[mem.gpu]
+        src_cu = req.cu
+        hdr = target_gpu.config.header_bytes
+        if req.kind == IKind.LOAD:
+            size, cls = req.size + hdr, DATA      # data response
+        elif req.kind == IKind.SEM_ACQUIRE:
+            size, cls = hdr, CONTROL              # value response
+        elif req.kind == IKind.SEM_RELEASE:
+            target_gpu.sem_bump(mem.addr)         # value lands at home
+            size, cls = hdr, CONTROL              # ack
+        else:  # STORE ack
+            size, cls = hdr, CONTROL
+        src_node = target_gpu.hbm_node_for(mem.addr, mem.space)
+        route = self._route(target_gpu, src_node, src_cu.gpu, src_cu.node,
+                            mem.addr)
+        self.fabric.send(route, size, cls, self._arrive_at_cu, payload=req)
+
+    def _arrive_at_cu(self, flight: Flight) -> None:
+        req: WRequest = flight.payload
+        req.cu.complete(req)

@@ -1,0 +1,473 @@
+"""Textbook collective algorithms emitted as MSCCL++ programs (paper §2.3).
+
+ASTRA-sim ≤2.0 hard-coded these algorithms; 3.0's insight is that once
+custom collectives are first-class (MSCCL++), the textbook algorithms are
+just *programs* — so we emit ring, all-pairs (direct), double binary tree
+and recursive halving-doubling into the same representation, parameterized
+by workgroup count and put/get protocol (paper §5.2's design axis).
+
+Every generator here is validated against the collective's data
+postcondition by :mod:`repro.core.verify`'s functional executor (tests
+sweep nranks × workgroups × protocol with randomized interleavings).
+
+Buffer convention (per rank):
+  all_gather:      input = S bytes (own shard),  output = n*S
+  reduce_scatter:  input = n*S,                  output = S (own shard)
+  all_reduce:      input = S,                    output = S
+  all_to_all:      input = n*S,                  output = n*S
+
+Chunk bookkeeping for the ring algorithms (derived so that rank ``r`` ends
+owning chunk ``r``):  at step ``s`` rank ``r`` *sends* its partial of chunk
+``(r - s - 1) mod n`` and *receives* the partial of chunk ``(r - s - 2)
+mod n``; after ``n - 1`` steps the fully-reduced chunk ``r`` lands on rank
+``r``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+from .mscclpp import Program, ProgramBuilder
+
+
+def _slices(total: int, parts: int) -> List[Tuple[int, int]]:
+    """Split ``total`` bytes into ``parts`` contiguous (off, size) slices."""
+    out = []
+    base = 0
+    for p in range(parts):
+        size = total // parts + (1 if p < total % parts else 0)
+        out.append((base, size))
+        base += size
+    return out
+
+
+# ---------------------------------------------------------------------------
+# All-Gather
+# ---------------------------------------------------------------------------
+
+def ring_all_gather(nranks: int, shard_bytes: int, nworkgroups: int = 1,
+                    protocol: str = "put") -> Program:
+    """Ring AG.  put: step ``s`` forwards chunk ``(r - s) mod n`` rightward.
+    get: step ``s`` pulls chunk ``(r - 1 - s) mod n`` from the left."""
+    n, S = nranks, shard_bytes
+    b = ProgramBuilder(f"ring_all_gather_{protocol}", "all_gather", n,
+                       {"input": S, "output": n * S}, nworkgroups)
+    for r in range(n):
+        right, left = (r + 1) % n, (r - 1) % n
+        for w, (woff, wsz) in enumerate(_slices(S, nworkgroups)):
+            b.copy(r, w, ("input", woff), ("output", r * S + woff), wsz)
+            if protocol == "put":
+                # sem "rdy" at rank r counts chunks present in r's output:
+                # 1 (own, self-signaled) + one per reception from the left.
+                b.signal(r, w, remote=r, sem=b.sem_id(r, f"rdy.{w}"))
+                for s in range(n - 1):
+                    c = (r - s) % n
+                    b.wait(r, w, sem=b.sem_id(r, f"rdy.{w}"), expected=s + 1)
+                    b.put(r, w, ("output", c * S + woff),
+                          ("output", c * S + woff), wsz, remote=right)
+                    b.signal(r, w, remote=right,
+                             sem=b.sem_id(right, f"rdy.{w}"))
+                # completion: all n-1 foreign chunks arrived
+                b.wait(r, w, sem=b.sem_id(r, f"rdy.{w}"), expected=n)
+            elif protocol == "get":
+                # sem "avail" at rank r counts chunks present at r's LEFT
+                # neighbor, announced by the left (self copy => 1).
+                b.signal(r, w, remote=right, sem=b.sem_id(right, f"avail.{w}"))
+                for s in range(n - 1):
+                    c = (left - s) % n
+                    b.wait(r, w, sem=b.sem_id(r, f"avail.{w}"), expected=s + 1)
+                    b.get(r, w, ("output", c * S + woff),
+                          ("output", c * S + woff), wsz, remote=left)
+                    if s < n - 2:
+                        b.flush(r, w)
+                        b.signal(r, w, remote=right,
+                                 sem=b.sem_id(right, f"avail.{w}"))
+            else:
+                raise ValueError(protocol)
+    return b.build()
+
+
+def direct_all_gather(nranks: int, shard_bytes: int, nworkgroups: int = 1,
+                      protocol: str = "get") -> Program:
+    """All-pairs AG (paper §5.2 / Fig. 11).
+
+    get: every rank reads every peer's immutable input — *zero* semaphores,
+    but each read is a control request whose data response can be blocked
+    behind other data traffic (the arbitration pathology).
+    put: every rank pushes its shard into every peer's output and signals;
+    receivers only wait at the end.
+    """
+    n, S = nranks, shard_bytes
+    b = ProgramBuilder(f"direct_all_gather_{protocol}", "all_gather", n,
+                       {"input": S, "output": n * S}, nworkgroups)
+    for r in range(n):
+        for w, (woff, wsz) in enumerate(_slices(S, nworkgroups)):
+            b.copy(r, w, ("input", woff), ("output", r * S + woff), wsz)
+            if protocol == "get":
+                for k in range(1, n):
+                    peer = (r + k) % n
+                    b.get(r, w, ("input", woff),
+                          ("output", peer * S + woff), wsz, remote=peer)
+            elif protocol == "put":
+                for k in range(1, n):
+                    peer = (r + k) % n
+                    b.put(r, w, ("input", woff),
+                          ("output", r * S + woff), wsz, remote=peer)
+                b.flush(r, w)
+                for k in range(1, n):
+                    peer = (r + k) % n
+                    b.signal(r, w, remote=peer, sem=b.sem_id(peer, f"ag.{w}"))
+                b.wait(r, w, sem=b.sem_id(r, f"ag.{w}"), expected=n - 1)
+            else:
+                raise ValueError(protocol)
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# Reduce-Scatter
+# ---------------------------------------------------------------------------
+
+def ring_reduce_scatter(nranks: int, shard_bytes: int, nworkgroups: int = 1,
+                        protocol: str = "put") -> Program:
+    """Ring RS over input of n*S bytes; rank ``r`` ends with reduced shard
+    ``r``.  Scratch has one slot per step (no overwrite races).
+
+    put: push my partial into the right neighbor's step slot + signal; the
+    receiver reduces slot + its own input chunk.
+    get: announce partial readiness rightward; pull the left neighbor's
+    partial with a *fused load-reduce* (cache-line-granularity overlap —
+    the paper's §5.2 insight).
+    """
+    n, S = nranks, shard_bytes
+    b = ProgramBuilder(f"ring_reduce_scatter_{protocol}", "reduce_scatter", n,
+                       {"input": n * S, "output": S,
+                        "scratch": (n - 1) * S}, nworkgroups)
+    for r in range(n):
+        right, left = (r + 1) % n, (r - 1) % n
+        for w, (woff, wsz) in enumerate(_slices(S, nworkgroups)):
+            if protocol == "put":
+                for s in range(n - 1):
+                    c_send = (r - s - 1) % n
+                    src = ("input", c_send * S + woff) if s == 0 else \
+                          ("scratch", (s - 1) * S + woff)
+                    if s > 0:
+                        b.flush(r, w)   # prior reduce stores must land
+                    b.put(r, w, src, ("scratch", s * S + woff), wsz,
+                          remote=right)
+                    b.flush(r, w)
+                    b.signal(r, w, remote=right, sem=b.sem_id(right, f"rs.{w}"))
+                    c_recv = (r - s - 2) % n
+                    b.wait(r, w, sem=b.sem_id(r, f"rs.{w}"), expected=s + 1)
+                    dst = ("output", woff) if s == n - 2 else \
+                          ("scratch", s * S + woff)
+                    b.reduce(r, w, [("scratch", s * S + woff),
+                                    ("input", c_recv * S + woff)], dst, wsz)
+            elif protocol == "get":
+                for s in range(n - 1):
+                    # announce partial chunk (r-s-1): raw input when s == 0,
+                    # else the reduce of step s-1 (fence inside signal).
+                    b.signal(r, w, remote=right, sem=b.sem_id(right, f"rdy.{w}"))
+                    b.wait(r, w, sem=b.sem_id(r, f"rdy.{w}"), expected=s + 1)
+                    c_recv = (r - s - 2) % n
+                    remote_src = ("input", c_recv * S + woff, left) if s == 0 \
+                        else ("scratch", (s - 1) * S + woff, left)
+                    dst = ("output", woff) if s == n - 2 else \
+                          ("scratch", s * S + woff)
+                    b.reduce(r, w, [("input", c_recv * S + woff), remote_src],
+                             dst, wsz)
+            else:
+                raise ValueError(protocol)
+    return b.build()
+
+
+def direct_reduce_scatter(nranks: int, shard_bytes: int, nworkgroups: int = 1,
+                          protocol: str = "get") -> Program:
+    """All-pairs RS (the paper's Fig. 10 case study).
+
+    get: rank ``r`` fuse-reduces chunk ``r`` straight out of every peer's
+    immutable input — **no synchronization at all**, reduction overlaps the
+    remote loads at cache-line granularity.
+    put: every rank pushes chunk ``k`` into rank ``k``'s scratch slot and
+    signals; the receiver must collect n-1 signals before reducing (the
+    synchronization the paper blames for put's large-buffer loss).
+    """
+    n, S = nranks, shard_bytes
+    b = ProgramBuilder(f"direct_reduce_scatter_{protocol}", "reduce_scatter",
+                       n, {"input": n * S, "output": S,
+                           "scratch": (n - 1) * S}, nworkgroups)
+    for r in range(n):
+        for w, (woff, wsz) in enumerate(_slices(S, nworkgroups)):
+            if protocol == "get":
+                srcs = [("input", r * S + woff)] + \
+                       [("input", r * S + woff, peer)
+                        for peer in range(n) if peer != r]
+                b.reduce(r, w, srcs, ("output", woff), wsz)
+            elif protocol == "put":
+                for k in range(1, n):
+                    peer = (r + k) % n
+                    slot = r if r < peer else r - 1      # my slot at peer
+                    b.put(r, w, ("input", peer * S + woff),
+                          ("scratch", slot * S + woff), wsz, remote=peer)
+                b.flush(r, w)
+                for k in range(1, n):
+                    peer = (r + k) % n
+                    b.signal(r, w, remote=peer, sem=b.sem_id(peer, f"rs.{w}"))
+                b.wait(r, w, sem=b.sem_id(r, f"rs.{w}"), expected=n - 1)
+                srcs = [("input", r * S + woff)] + \
+                       [("scratch", i * S + woff) for i in range(n - 1)]
+                b.reduce(r, w, srcs, ("output", woff), wsz)
+            else:
+                raise ValueError(protocol)
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# All-Reduce
+# ---------------------------------------------------------------------------
+
+def ring_all_reduce(nranks: int, size_bytes: int, nworkgroups: int = 1,
+                    protocol: str = "put") -> Program:
+    """Ring AR = pipelined ring RS + ring AG in a single kernel."""
+    n = nranks
+    chunks = _slices(size_bytes, n)
+    maxc = max(sz for _, sz in chunks)
+    b = ProgramBuilder(f"ring_all_reduce_{protocol}", "all_reduce", n,
+                       {"input": size_bytes, "output": size_bytes,
+                        "scratch": (n - 1) * maxc}, nworkgroups)
+    for r in range(n):
+        right = (r + 1) % n
+        for w in range(nworkgroups):
+            # ---------------- reduce-scatter phase (chunk r lands on rank r)
+            for s in range(n - 1):
+                c_send = (r - s - 1) % n
+                coff, csz = chunks[c_send]
+                woff, wsz = _slices(csz, nworkgroups)[w]
+                src = ("input", coff + woff) if s == 0 else \
+                      ("scratch", (s - 1) * maxc + woff)
+                if s > 0:
+                    b.flush(r, w)
+                b.put(r, w, src, ("scratch", s * maxc + woff), wsz,
+                      remote=right)
+                b.flush(r, w)
+                b.signal(r, w, remote=right, sem=b.sem_id(right, f"ar.{w}"))
+                c_recv = (r - s - 2) % n
+                roff, rsz = chunks[c_recv]
+                rwoff, rwsz = _slices(rsz, nworkgroups)[w]
+                b.wait(r, w, sem=b.sem_id(r, f"ar.{w}"), expected=s + 1)
+                dst = ("output", roff + rwoff) if s == n - 2 else \
+                      ("scratch", s * maxc + rwoff)
+                b.reduce(r, w, [("scratch", s * maxc + rwoff),
+                                ("input", roff + rwoff)], dst, rwsz)
+            # ---------------- all-gather phase: forward reduced chunks
+            for s in range(n - 1):
+                c = (r - s) % n
+                coff, csz = chunks[c]
+                woff, wsz = _slices(csz, nworkgroups)[w]
+                if s == 0:
+                    b.flush(r, w)   # final RS reduce stores must land
+                else:
+                    b.wait(r, w, sem=b.sem_id(r, f"ag.{w}"), expected=s)
+                b.put(r, w, ("output", coff + woff), ("output", coff + woff),
+                      wsz, remote=right)
+                b.flush(r, w)
+                b.signal(r, w, remote=right, sem=b.sem_id(right, f"ag.{w}"))
+            b.wait(r, w, sem=b.sem_id(r, f"ag.{w}"), expected=n - 1)
+    return b.build()
+
+
+def double_binary_tree_all_reduce(nranks: int, size_bytes: int,
+                                  nworkgroups: int = 1) -> Program:
+    """Double binary tree AR (NCCL 2.4, paper ref [22]).
+
+    Two complementary in-order binary trees each reduce-then-broadcast half
+    the buffer; tree B is tree A shifted by one rank, so internal nodes of
+    one tree are (mostly) leaves of the other, balancing per-rank work.
+    Scratch layout: 4 slots of half-size: (2*half + child_idx).
+    """
+    halves = _slices(size_bytes, 2)
+    hmax = max(sz for _, sz in halves)
+    b = ProgramBuilder("dbtree_all_reduce", "all_reduce", nranks,
+                       {"input": size_bytes, "output": size_bytes,
+                        "scratch": 4 * hmax}, nworkgroups)
+
+    def tree(shift: int) -> Tuple[int, Dict[int, List[int]], Dict[int, int]]:
+        kids: Dict[int, List[int]] = {}
+
+        def build(lo: int, hi: int) -> Optional[int]:
+            if lo > hi:
+                return None
+            mid = (lo + hi) // 2
+            node = (mid + shift) % nranks
+            children = [k for k in (build(lo, mid - 1), build(mid + 1, hi))
+                        if k is not None]
+            kids[node] = children
+            return node
+
+        root = build(0, nranks - 1)
+        parent = {c: p for p, cs in kids.items() for c in cs}
+        return root, kids, parent  # type: ignore[return-value]
+
+    for half, (hoff, hsz) in enumerate(halves):
+        root, kids, parent = tree(shift=0 if half == 0 else 1)
+        for r in range(nranks):
+            my_kids = kids.get(r, [])
+            for w, (woff, wsz) in enumerate(_slices(hsz, nworkgroups)):
+                off = hoff + woff
+                tag = f"t{half}.{w}"
+                # --- reduce up
+                if my_kids:
+                    b.wait(r, w, sem=b.sem_id(r, f"up.{tag}"),
+                           expected=len(my_kids))
+                    srcs = [("input", off)] + \
+                           [("scratch", (2 * half + i) * hmax + woff)
+                            for i in range(len(my_kids))]
+                    b.reduce(r, w, srcs, ("output", off), wsz)
+                else:
+                    b.copy(r, w, ("input", off), ("output", off), wsz)
+                if r != root:
+                    p = parent[r]
+                    slot = kids[p].index(r)
+                    b.flush(r, w)
+                    b.put(r, w, ("output", off),
+                          ("scratch", (2 * half + slot) * hmax + woff), wsz,
+                          remote=p)
+                    b.flush(r, w)
+                    b.signal(r, w, remote=p, sem=b.sem_id(p, f"up.{tag}"))
+                    # --- wait for the fully-reduced half from the parent
+                    b.wait(r, w, sem=b.sem_id(r, f"dn.{tag}"), expected=1)
+                for c in my_kids:
+                    b.put(r, w, ("output", off), ("output", off), wsz,
+                          remote=c)
+                    b.flush(r, w)
+                    b.signal(r, w, remote=c, sem=b.sem_id(c, f"dn.{tag}"))
+    return b.build()
+
+
+def halving_doubling_all_reduce(nranks: int, size_bytes: int,
+                                nworkgroups: int = 1) -> Program:
+    """Recursive halving-doubling AR (paper ref [44]); power-of-two ranks.
+
+    RS phase round ``k``: partner = r XOR 2^k; send the half of the active
+    range the partner keeps, reduce the half I keep.  AG phase mirrors the
+    rounds in reverse.  Scratch ranges across rounds are nested-disjoint,
+    so one scratch buffer of full size suffices.
+
+    Unlike the ring algorithms — whose per-chunk workgroup slicing keeps all
+    intra-rank data dependencies workgroup-aligned — HD's active range halves
+    every round, so workgroup slices of different rounds overlap arbitrarily.
+    Rank-level ``barrier`` ops between rounds make those cross-workgroup
+    dependencies explicit (this is what real HD kernels need too; cross-rank
+    dependencies stay on per-workgroup semaphores because a rank's send range
+    equals its partner's keep range, which *is* slice-aligned).
+    """
+    if nranks & (nranks - 1):
+        raise ValueError("halving-doubling requires power-of-two ranks")
+    rounds = int(math.log2(nranks))
+    # scratch is per-round: round k+1's partner is NOT ordered against my
+    # round-k reduce, and its incoming range nests inside round k's — a
+    # single shared scratch region would race.
+    b = ProgramBuilder("hd_all_reduce", "all_reduce", nranks,
+                       {"input": size_bytes, "output": size_bytes,
+                        "scratch": rounds * size_bytes}, nworkgroups)
+    for r in range(nranks):
+        for w in range(nworkgroups):
+            woff0, wsz0 = _w(0, size_bytes, w, nworkgroups)
+            b.copy(r, w, ("input", woff0), ("output", woff0), wsz0)
+            b.flush(r, w)
+            b.barrier(r, w)
+            lo, hi = 0, size_bytes
+            ranges: List[Tuple[int, int]] = []
+            for k in range(rounds):
+                partner = r ^ (1 << k)
+                mid = (lo + hi) // 2
+                mine_hi = (r >> k) & 1
+                keep = (mid, hi) if mine_hi else (lo, mid)
+                send = (lo, mid) if mine_hi else (mid, hi)
+                soff, ssz = _w(send[0], send[1], w, nworkgroups)
+                b.put(r, w, ("output", soff),
+                      ("scratch", k * size_bytes + soff), ssz,
+                      remote=partner)
+                b.flush(r, w)
+                # per-round semaphores: partners differ every round, so a
+                # cumulative count cannot tell WHICH partner signaled
+                b.signal(r, w, remote=partner,
+                         sem=b.sem_id(partner, f"hd.{k}.{w}"))
+                b.wait(r, w, sem=b.sem_id(r, f"hd.{k}.{w}"), expected=1)
+                koff, ksz = _w(keep[0], keep[1], w, nworkgroups)
+                b.reduce(r, w,
+                         [("output", koff),
+                          ("scratch", k * size_bytes + koff)],
+                         ("output", koff), ksz)
+                b.flush(r, w)
+                b.barrier(r, w)
+                ranges.append((lo, hi))
+                lo, hi = keep
+            for k in reversed(range(rounds)):
+                partner = r ^ (1 << k)
+                plo, phi = ranges[k]
+                mid = (plo + phi) // 2
+                mine_hi = (r >> k) & 1
+                mine = (mid, phi) if mine_hi else (plo, mid)
+                moff, msz = _w(mine[0], mine[1], w, nworkgroups)
+                b.put(r, w, ("output", moff), ("output", moff), msz,
+                      remote=partner)
+                b.flush(r, w)
+                b.signal(r, w, remote=partner,
+                         sem=b.sem_id(partner, f"hdag.{k}.{w}"))
+                b.wait(r, w, sem=b.sem_id(r, f"hdag.{k}.{w}"), expected=1)
+                b.barrier(r, w)
+    return b.build()
+
+
+def _w(lo: int, hi: int, w: int, nwg: int) -> Tuple[int, int]:
+    """Workgroup ``w``'s (absolute_off, size) slice of byte range [lo, hi)."""
+    offs = _slices(hi - lo, nwg)
+    return lo + offs[w][0], offs[w][1]
+
+
+# ---------------------------------------------------------------------------
+# All-to-All
+# ---------------------------------------------------------------------------
+
+def direct_all_to_all(nranks: int, shard_bytes: int, nworkgroups: int = 1,
+                      protocol: str = "put") -> Program:
+    """Direct A2A: rank ``r`` sends input chunk ``k`` to rank ``k``'s output
+    slot ``r`` (paper Fig. 12's workload)."""
+    n, S = nranks, shard_bytes
+    b = ProgramBuilder(f"direct_all_to_all_{protocol}", "all_to_all", n,
+                       {"input": n * S, "output": n * S}, nworkgroups)
+    for r in range(n):
+        for w, (woff, wsz) in enumerate(_slices(S, nworkgroups)):
+            b.copy(r, w, ("input", r * S + woff), ("output", r * S + woff),
+                   wsz)
+            for k in range(1, n):
+                peer = (r + k) % n
+                if protocol == "put":
+                    b.put(r, w, ("input", peer * S + woff),
+                          ("output", r * S + woff), wsz, remote=peer)
+                else:
+                    b.get(r, w, ("input", r * S + woff),
+                          ("output", peer * S + woff), wsz, remote=peer)
+            if protocol == "put":
+                b.flush(r, w)
+                for k in range(1, n):
+                    peer = (r + k) % n
+                    b.signal(r, w, remote=peer, sem=b.sem_id(peer, f"a2a.{w}"))
+                b.wait(r, w, sem=b.sem_id(r, f"a2a.{w}"), expected=n - 1)
+    return b.build()
+
+
+# registry used by the system layer and benchmarks
+ALGORITHMS = {
+    ("all_gather", "ring"): ring_all_gather,
+    ("all_gather", "direct"): direct_all_gather,
+    ("reduce_scatter", "ring"): ring_reduce_scatter,
+    ("reduce_scatter", "direct"): direct_reduce_scatter,
+    ("all_reduce", "ring"): ring_all_reduce,
+    ("all_reduce", "dbtree"): lambda n, s, w=1, protocol=None:
+        double_binary_tree_all_reduce(n, s, w),
+    ("all_reduce", "halving_doubling"): lambda n, s, w=1, protocol=None:
+        halving_doubling_all_reduce(n, s, w),
+    ("all_to_all", "direct"): direct_all_to_all,
+}

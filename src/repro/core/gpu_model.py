@@ -1,0 +1,360 @@
+"""GPU execution model (paper §4.4).
+
+``GpuModel`` abstracts one physical GPU: it owns compute units (CUs), maps
+dispatched kernels' workgroups onto free CUs round-robin, and injects
+cache-line-sized *Wavefront Requests* into the network fabric.  A CU issues
+at most one instruction per cycle, arbitrating between the ready wavefronts
+of its resident workgroups (wavefront-level parallelism); in-flight memory
+traffic is bounded per-CU (``max_outstanding`` — the paper's register-file
+proxy, Fig. 13) and per-wavefront fences are modeled via ``Waitcnt``.
+
+Memory-side behavior (HBM channels servicing loads/stores, semaphore
+homes) lives here too: endpoint handlers attached to fabric nodes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .engine import Engine
+from .instructions import IKind, Instruction, MemRef, Space
+from .operations import OpContext
+from .network.fabric import CONTROL, DATA, Fabric, Flight, Link
+from .workload import Kernel, WavefrontState, Workgroup
+
+
+@dataclass
+class GpuConfig:
+    """Architecture knobs (defaults: paper §5.1 generic GPU, scaled down)."""
+    num_cus: int = 16
+    cache_line: int = 128            # bytes per Wavefront Request
+    cycle_ns: float = 1.0            # CU clock (1 GHz)
+    max_outstanding: int = 32        # per-CU in-flight Wavefront Requests
+    max_wg_per_cu: int = 1
+    unroll: int = 1                  # default loop-unrolling factor (Fig. 12)
+    reduce_cycles_per_line: int = 1
+    header_bytes: int = 32           # request/ack header size
+    hbm_latency_ns: float = 80.0     # channel access latency
+    wavefronts_per_wg: int = 4
+
+    def op_context(self) -> OpContext:
+        return OpContext(cache_line=self.cache_line, unroll=self.unroll,
+                         reduce_cycles_per_line=self.reduce_cycles_per_line)
+
+
+class WRequest:
+    """One Wavefront Request round-trip (paper §4.4.3)."""
+    __slots__ = ("kind", "mem", "size", "cu", "wf", "value", "issued_ns")
+
+    def __init__(self, kind: IKind, mem: MemRef, size: int, cu: "ComputeUnit",
+                 wf: Optional[WavefrontState]):
+        self.kind = kind
+        self.mem = mem
+        self.size = size
+        self.cu = cu
+        self.wf = wf
+        self.value = 0          # semaphore value carried by poll responses
+        self.issued_ns = 0.0
+
+
+class _WGExec:
+    """A workgroup resident on a CU."""
+    __slots__ = ("wg", "kernel", "wavefronts", "nop_arrived", "barrier_arrived")
+
+    def __init__(self, wg: Workgroup, kernel: Kernel, ctx: OpContext):
+        self.wg = wg
+        self.kernel = kernel
+        self.wavefronts = [WavefrontState(i, wg, ctx)
+                           for i in range(wg.num_wavefronts)]
+        for w in self.wavefronts:
+            w.owner = self
+        self.nop_arrived = 0
+        self.barrier_arrived = False
+
+    def done(self) -> bool:
+        return all(w.retired() for w in self.wavefronts)
+
+
+class _KernelExec:
+    __slots__ = ("kernel", "remaining_wgs", "pending", "barrier_count",
+                 "barrier_total", "barrier_wgs")
+
+    def __init__(self, kernel: Kernel):
+        self.kernel = kernel
+        self.remaining_wgs = len(kernel.workgroups)
+        self.pending: List[Workgroup] = list(kernel.workgroups)
+        self.barrier_count = 0
+        self.barrier_total = len(kernel.workgroups)
+        self.barrier_wgs: List[_WGExec] = []
+
+
+class ComputeUnit:
+    __slots__ = ("gpu", "idx", "resident", "outstanding", "_rr",
+                 "_scheduled", "_busy_until", "node", "waiters_waitcnt")
+
+    def __init__(self, gpu: "GpuModel", idx: int, node: int):
+        self.gpu = gpu
+        self.idx = idx
+        self.node = node                 # fabric node id of this CU
+        self.resident: List[_WGExec] = []
+        self.outstanding = 0
+        self._rr = 0
+        self._scheduled = False
+        self._busy_until = 0.0           # REDUCE occupancy
+
+    # ----------------------------------------------------------------- wake
+    def wake(self) -> None:
+        if self._scheduled:
+            return
+        self._scheduled = True
+        now = self.gpu.engine.now
+        delay = max(0.0, self._busy_until - now)
+        self.gpu.engine.schedule(delay, self._tick)
+
+    # ----------------------------------------------------------------- tick
+    def _tick(self) -> None:
+        self._scheduled = False
+        if not self.resident:
+            return
+        issued = False
+        n_wf_total = sum(len(w.wavefronts) for w in self.resident)
+        scanned = 0
+        order: List[Tuple[_WGExec, WavefrontState]] = []
+        for wgx in self.resident:
+            for wf in wgx.wavefronts:
+                order.append((wgx, wf))
+        k = len(order)
+        start = self._rr % k if k else 0
+        for i in range(k):
+            wgx, wf = order[(start + i) % k]
+            if wf.done or wf.waiting is not None:
+                continue
+            sync = wf.peek_sync()
+            if sync is not None:
+                self._handle_sync(wgx, wf, sync)
+                continue
+            ins = wf.fetch()
+            if ins is None:
+                # wavefront finished all ops
+                if wf.done:
+                    self._maybe_retire(wgx)
+                continue
+            if self._issue(wgx, wf, ins):
+                wf.consume()
+                self._rr = (start + i + 1) % k
+                issued = True
+                break
+        if issued:
+            # one instruction per cycle
+            self._scheduled = True
+            self.gpu.engine.schedule(
+                max(self.gpu.config.cycle_ns,
+                    self._busy_until - self.gpu.engine.now), self._tick)
+
+    # ---------------------------------------------------------------- issue
+    def _issue(self, wgx: _WGExec, wf: WavefrontState, ins: Instruction) -> bool:
+        """Try to issue one instruction.  Returns True if it consumed the
+        issue slot for this cycle."""
+        kind = ins.kind
+        if kind == IKind.WAITCNT:
+            if wf.outstanding <= ins.threshold:
+                return True              # fence satisfied: costs one cycle
+            wf.waiting = "waitcnt"
+            wf.fetched = ins             # re-check on completion
+            return False
+        if kind == IKind.REDUCE:
+            self._busy_until = self.gpu.engine.now + ins.cycles * self.gpu.config.cycle_ns
+            return True
+        # memory instruction
+        if self.outstanding >= self.gpu.config.max_outstanding:
+            return False                 # register file full: try another wf
+        if kind == IKind.SEM_ACQUIRE:
+            # poll: issue a control-class load of the semaphore line; the
+            # wavefront blocks until the poll observes value >= expected.
+            wf.waiting = "sem"
+            req = WRequest(kind, ins.mem, self.gpu.config.header_bytes, self, wf)
+            req.value = ins.threshold    # expected count rides along
+            self._inject(req)
+            return True
+        if kind == IKind.SEM_RELEASE:
+            req = WRequest(kind, ins.mem, self.gpu.config.header_bytes, self, wf)
+            wf.outstanding += 1
+            self._inject(req)
+            return True
+        # LOAD / STORE
+        req = WRequest(kind, ins.mem, ins.size, self, wf)
+        wf.outstanding += 1
+        self._inject(req)
+        return True
+
+    def _inject(self, req: WRequest) -> None:
+        self.outstanding += 1
+        req.issued_ns = self.gpu.engine.now
+        self.gpu.cluster.send_request(req)
+
+    # ------------------------------------------------------------ completion
+    def complete(self, req: WRequest) -> None:
+        self.outstanding -= 1
+        wf = req.wf
+        if req.kind == IKind.SEM_ACQUIRE:
+            sem_home = self.gpu.cluster.gpus[req.mem.gpu]
+            expected = req.value if req.value else 1
+            cur = sem_home.sem_value(req.mem.addr)
+            if cur >= expected:
+                wf.waiting = None
+                self.wake()
+            else:
+                # subscribe: when a release bumps this semaphore, re-poll.
+                sem_home.sem_subscribe(req.mem.addr, self, wf, expected)
+            return
+        wf.outstanding -= 1
+        if wf.waiting == "waitcnt" and wf.fetched is not None \
+                and wf.outstanding <= wf.fetched.threshold:
+            wf.waiting = None
+            wf.consume()
+        if wf.retired() and wf.owner is not None:
+            self._maybe_retire(wf.owner)
+        self.wake()
+
+    def repoll(self, wf: WavefrontState, mem: MemRef, expected: int) -> None:
+        """Re-issue a semaphore poll after a release event."""
+        req = WRequest(IKind.SEM_ACQUIRE, mem, self.gpu.config.header_bytes,
+                       self, wf)
+        req.value = expected
+        self._inject(req)
+
+    # ----------------------------------------------------------------- syncs
+    def _handle_sync(self, wgx: _WGExec, wf: WavefrontState, sync: str) -> None:
+        wf.waiting = "sync"
+        if sync == "nop":
+            wgx.nop_arrived += 1
+            if wgx.nop_arrived == len(wgx.wavefronts):
+                wgx.nop_arrived = 0
+                for w in wgx.wavefronts:
+                    w.waiting = None
+                    w.advance_sync()
+                self.wake()
+        else:  # barrier: whole-kernel sync
+            if all(w.waiting == "sync" or w.done for w in wgx.wavefronts) \
+                    and not wgx.barrier_arrived:
+                wgx.barrier_arrived = True
+                self.gpu.kernel_barrier_arrive(wgx)
+
+    def barrier_release(self, wgx: _WGExec) -> None:
+        wgx.barrier_arrived = False
+        for w in wgx.wavefronts:
+            if not w.done:
+                w.waiting = None
+                w.advance_sync()
+        self.wake()
+
+    # ---------------------------------------------------------------- retire
+    def _maybe_retire(self, wgx: _WGExec) -> None:
+        if not wgx.done() or wgx not in self.resident:
+            return
+        self.resident.remove(wgx)
+        self.gpu.wg_retired(self, wgx)
+
+
+class GpuModel:
+    """One GPU: CUs + HBM channels + I/O ports on a fabric."""
+
+    def __init__(self, gid: int, config: GpuConfig, engine: Engine,
+                 fabric: Fabric, cluster: "Cluster",
+                 cu_nodes: List[int], hbm_nodes: List[int],
+                 io_nodes: List[int]):
+        self.gid = gid
+        self.config = config
+        self.engine = engine
+        self.fabric = fabric
+        self.cluster = cluster
+        self.cus = [ComputeUnit(self, i, cu_nodes[i]) for i in range(config.num_cus)]
+        self.hbm_nodes = hbm_nodes
+        self.io_nodes = io_nodes
+        self._next_cu = 0
+        self._kernels: Dict[int, _KernelExec] = {}
+        self._sems: Dict[int, int] = {}
+        self._sem_waiters: Dict[int, List[Tuple[ComputeUnit, WavefrontState, int]]] = {}
+        self._wg_to_kernel: Dict[int, _KernelExec] = {}
+
+    # --------------------------------------------------------------- dispatch
+    def dispatch(self, kernel: Kernel) -> None:
+        kx = _KernelExec(kernel)
+        kernel.start_ns = self.engine.now
+        self._kernels[kernel.kid] = kx
+        self._fill(kx)
+
+    def _fill(self, kx: _KernelExec) -> None:
+        """Map pending workgroups onto free CUs round-robin (paper §4.4.1)."""
+        n = len(self.cus)
+        attempts = 0
+        while kx.pending and attempts < n:
+            cu = self.cus[self._next_cu % n]
+            self._next_cu += 1
+            attempts += 1
+            if len(cu.resident) < self.config.max_wg_per_cu:
+                wg = kx.pending.pop(0)
+                wgx = _WGExec(wg, kx.kernel, self.config.op_context())
+                self._wg_to_kernel[id(wgx)] = kx
+                cu.resident.append(wgx)
+                cu.wake()
+                attempts = 0
+
+    def wg_retired(self, cu: ComputeUnit, wgx: _WGExec) -> None:
+        kx = self._wg_to_kernel.pop(id(wgx))
+        kx.remaining_wgs -= 1
+        if kx.remaining_wgs == 0:
+            kx.kernel.end_ns = self.engine.now
+            del self._kernels[kx.kernel.kid]
+            if kx.kernel.on_done:
+                kx.kernel.on_done(kx.kernel, self.engine.now)
+        # refill: this kernel first, then any other with pending work
+        for other in list(self._kernels.values()):
+            if other.pending:
+                self._fill(other)
+
+    # -------------------------------------------------------------- barriers
+    def kernel_barrier_arrive(self, wgx: _WGExec) -> None:
+        kx = self._wg_to_kernel[id(wgx)]
+        kx.barrier_count += 1
+        kx.barrier_wgs.append(wgx)
+        if kx.pending:
+            raise RuntimeError(
+                f"kernel {kx.kernel.name}: BarrierOp with undispatched "
+                f"workgroups (needs cooperative-launch residency)")
+        if kx.barrier_count == kx.barrier_total:
+            kx.barrier_count = 0
+            wgs, kx.barrier_wgs = kx.barrier_wgs, []
+            for w in wgs:
+                for cu in self.cus:
+                    if w in cu.resident:
+                        cu.barrier_release(w)
+                        break
+
+    # ------------------------------------------------------------ semaphores
+    def sem_value(self, addr: int) -> int:
+        return self._sems.get(addr, 0)
+
+    def sem_bump(self, addr: int) -> None:
+        self._sems[addr] = self._sems.get(addr, 0) + 1
+        waiters = self._sem_waiters.pop(addr, None)
+        if waiters:
+            for cu, wf, expected in waiters:
+                cu.repoll(wf, MemRef(self.gid, Space.SEM, addr), expected)
+
+    def sem_subscribe(self, addr: int, cu: ComputeUnit, wf: WavefrontState,
+                      expected: int) -> None:
+        self._sem_waiters.setdefault(addr, []).append((cu, wf, expected))
+
+    def reset_sems(self) -> None:
+        self._sems.clear()
+        self._sem_waiters.clear()
+
+    # ------------------------------------------------------- memory endpoints
+    def hbm_node_for(self, addr: int, space: Space) -> int:
+        ch = (addr // self.config.cache_line) % len(self.hbm_nodes)
+        return self.hbm_nodes[ch]
+
+    def io_node_for(self, key: int) -> int:
+        return self.io_nodes[key % len(self.io_nodes)]

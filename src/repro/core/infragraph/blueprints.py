@@ -1,0 +1,238 @@
+"""Pre-built, composable InfraGraph blueprints (paper §4.6.3).
+
+Device blueprints define the internal hardware of a platform; fabric
+blueprints compose device instances into full network topologies,
+parameterized (port counts, depth, hosts) and automatically wired.
+
+Includes the paper's generic GPU (§5.1) and — per DESIGN.md §4 — a TPU v5e
+device + 2-D-torus pod fabric used by the JAX framework's step-time
+predictor.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple
+
+from .graph import Component, Device, Infrastructure, Instance, LinkType
+
+
+# ---------------------------------------------------------------------------
+# Device blueprints
+# ---------------------------------------------------------------------------
+
+def generic_gpu_device(mesh_x: int = 8, mesh_y: int = 4,
+                       cus_per_router: int = 4,
+                       mem_channels: int = 32, io_ports: int = 32,
+                       onchip_GBps: float = 1099.5,
+                       mem_GBps: float = 137.4,
+                       io_GBps: float = 34.36) -> Device:
+    """The paper's §5.1 generic GPU: 2-D mesh NoC, CUs, HBM channels and
+    I/O ports hanging off boundary routers."""
+    d = Device(f"gpu{mesh_x}x{mesh_y}", [
+        Component("router", mesh_x * mesh_y),
+        Component("cu", mesh_x * mesh_y * cus_per_router),
+        Component("hbm", mem_channels, (("GBps", mem_GBps),)),
+        Component("io", io_ports, (("GBps", io_GBps),)),
+    ])
+    d.add_link_type(LinkType("noc", onchip_GBps, 5.0))
+    d.add_link_type(LinkType("culink", onchip_GBps, 1.0))
+    d.add_link_type(LinkType("hbmlink", mem_GBps, 1.0))
+    d.add_link_type(LinkType("iolink", io_GBps, 1.0))
+
+    def rid(x: int, y: int) -> int:
+        return x * mesh_y + y
+
+    for x in range(mesh_x):
+        for y in range(mesh_y):
+            if x + 1 < mesh_x:
+                d.wire(("router", rid(x, y)), ("router", rid(x + 1, y)), "noc")
+            if y + 1 < mesh_y:
+                d.wire(("router", rid(x, y)), ("router", rid(x, y + 1)), "noc")
+    for i in range(mesh_x * mesh_y * cus_per_router):
+        r = i // cus_per_router
+        d.wire(("cu", i), ("router", r), "culink")
+    for i in range(mem_channels):
+        row = 0 if i < mem_channels // 2 else mesh_y - 1
+        col = i % mesh_x
+        d.wire(("hbm", i), ("router", rid(col, row)), "hbmlink")
+    for i in range(io_ports):
+        col = 0 if i < io_ports // 2 else mesh_x - 1
+        row = i % mesh_y
+        d.wire(("io", i), ("router", rid(col, row)), "iolink")
+    return d
+
+
+def simple_gpu_device(nic_GBps: float = 50.0) -> Device:
+    """Coarse GPU: one compute vertex + one NIC (for scale-out studies)."""
+    d = Device("sgpu", [Component("gpu", 1), Component("nic", 1,
+                                                       (("GBps", nic_GBps),))])
+    d.add_link_type(LinkType("pcie", 64.0, 500.0))
+    d.wire(("gpu", 0), ("nic", 0), "pcie")
+    return d
+
+
+def host_device(gpus: int = 8, nic_GBps: float = 50.0) -> Device:
+    """Host server: CPU + PCIe bridge + GPUs + NICs (paper §4.6.2 example)."""
+    d = Device(f"host{gpus}g", [
+        Component("cpu", 1),
+        Component("bridge", 1),
+        Component("gpu", gpus),
+        Component("nic", gpus, (("GBps", nic_GBps),)),
+    ])
+    d.add_link_type(LinkType("pcie", 64.0, 500.0))
+    d.wire(("cpu", 0), ("bridge", 0), "pcie")
+    for g in range(gpus):
+        d.wire(("gpu", g), ("bridge", 0), "pcie")
+        d.wire(("gpu", g), ("nic", g), "pcie")
+    return d
+
+
+def switch_device(ports: int, port_GBps: float = 50.0,
+                  name: Optional[str] = None) -> Device:
+    """Switch: one ASIC vertex + ``ports`` port vertices (paper §4.7.3's
+    ``(switch.0.asic.0, switch.0.port.0, pcie)`` example)."""
+    d = Device(name or f"switch{ports}p", [
+        Component("asic", 1),
+        Component("port", ports, (("GBps", port_GBps),)),
+    ])
+    d.add_link_type(LinkType("asiclink", port_GBps * ports, 50.0))
+    for p in range(ports):
+        d.wire(("port", p), ("asic", 0), "asiclink")
+    return d
+
+
+def tpu_v5e_device() -> Device:
+    """TPU v5e chip: TensorCore+MXU, 2 HBM stacks, 4 ICI ports.
+
+    Hardware constants from the brief: 197 TFLOP/s bf16, 819 GB/s HBM,
+    ~50 GB/s per ICI link.
+    """
+    d = Device("tpuv5e", [
+        Component("core", 1, (("TFLOPs_bf16", 197.0),)),
+        Component("hbm", 2, (("GBps", 409.5),)),
+        Component("ici", 4, (("GBps", 50.0),)),
+    ])
+    d.add_link_type(LinkType("hbmbus", 409.5, 10.0))
+    d.add_link_type(LinkType("icibus", 50.0, 10.0))
+    for h in range(2):
+        d.wire(("core", 0), ("hbm", h), "hbmbus")
+    for p in range(4):
+        d.wire(("core", 0), ("ici", p), "icibus")
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Fabric blueprints
+# ---------------------------------------------------------------------------
+
+def single_tier_fabric(num_hosts: int = 4, device: Optional[Device] = None,
+                       link_GBps: float = 50.0,
+                       link_lat_ns: float = 500.0) -> Infrastructure:
+    """SingleTierFabric: a flat single-switch-layer topology (§4.6.3)."""
+    dev = device or simple_gpu_device(link_GBps)
+    infra = Infrastructure(f"single_tier_{num_hosts}")
+    infra.add(dev, "host", num_hosts)
+    sw = switch_device(num_hosts, link_GBps)
+    infra.add(sw, "switch", 1)
+    infra.add_link_type(LinkType("eth", link_GBps, link_lat_ns))
+    nic = "nic" if any(c.name == "nic" for c in dev.components) else "io"
+    for h in range(num_hosts):
+        infra.connect(("host", h, nic, 0), ("switch", 0, "port", h), "eth")
+    return infra
+
+
+def clos_fat_tree_fabric(num_hosts: int = 8, switch_ports: int = 4,
+                         depth: int = 2, link_GBps: float = 50.0,
+                         link_lat_ns: float = 500.0,
+                         device: Optional[Device] = None) -> Infrastructure:
+    """ClosFatTreeFabric (§4.6.3, Fig. 9): hierarchical leaf/spine topology
+    parameterized by switch port count and network depth; switch counts and
+    wiring are computed per the standard folded-Clos construction.
+
+    depth == 2: leaf + spine.  Hosts per leaf = ports/2; uplinks = ports/2.
+    """
+    if depth != 2:
+        raise NotImplementedError("this blueprint builds 2-tier folded Clos")
+    half = switch_ports // 2
+    num_leaves = math.ceil(num_hosts / half)
+    num_spines = half
+    dev = device or simple_gpu_device(link_GBps)
+    infra = Infrastructure(
+        f"clos_h{num_hosts}_p{switch_ports}_d{depth}")
+    infra.add(dev, "host", num_hosts)
+    infra.add(switch_device(switch_ports, link_GBps, "leafsw"), "leaf",
+              num_leaves)
+    infra.add(switch_device(max(num_leaves, 1), link_GBps, "spinesw"),
+              "spine", num_spines)
+    infra.add_link_type(LinkType("eth", link_GBps, link_lat_ns))
+    nic = "nic" if any(c.name == "nic" for c in dev.components) else "io"
+    for h in range(num_hosts):
+        leaf = h // half
+        port = h % half
+        infra.connect(("host", h, nic, 0), ("leaf", leaf, "port", port),
+                      "eth")
+    for l in range(num_leaves):
+        for s in range(num_spines):
+            infra.connect(("leaf", l, "port", half + s),
+                          ("spine", s, "port", l), "eth")
+    return infra
+
+
+def torus2d_fabric(dim_x: int = 4, dim_y: int = 4,
+                   device: Optional[Device] = None,
+                   link_GBps: float = 50.0,
+                   link_lat_ns: float = 100.0) -> Infrastructure:
+    """2-D torus of devices (TPU-pod style): each device uses its 4 ICI/IO
+    ports as +x, -x, +y, -y."""
+    dev = device or tpu_v5e_device()
+    port = "ici" if any(c.name == "ici" for c in dev.components) else "io"
+    n = dim_x * dim_y
+    infra = Infrastructure(f"torus{dim_x}x{dim_y}")
+    infra.add(dev, "chip", n)
+    infra.add_link_type(LinkType("ici", link_GBps, link_lat_ns))
+
+    def cid(x: int, y: int) -> int:
+        return x * dim_y + y
+
+    for x in range(dim_x):
+        for y in range(dim_y):
+            # +x wrap link: my port 0 to neighbor's port 1
+            infra.connect(("chip", cid(x, y), port, 0),
+                          ("chip", cid((x + 1) % dim_x, y), port, 1), "ici")
+            # +y wrap link: my port 2 to neighbor's port 3
+            infra.connect(("chip", cid(x, y), port, 2),
+                          ("chip", cid(x, (y + 1) % dim_y), port, 3), "ici")
+    return infra
+
+
+def tpu_pod_fabric(pods: int = 2, dim_x: int = 16, dim_y: int = 16,
+                   dcn_GBps: float = 12.5,
+                   dcn_lat_ns: float = 10_000.0) -> Infrastructure:
+    """Multi-pod TPU fabric: ``pods`` 2-D-torus pods joined by a DCN switch
+    layer (the production mesh of the dry-run: (pod, data, model))."""
+    dev = tpu_v5e_device()
+    n = dim_x * dim_y
+    infra = Infrastructure(f"tpu_{pods}x{dim_x}x{dim_y}")
+    infra.add(dev, "chip", pods * n)
+    infra.add_link_type(LinkType("ici", 50.0, 100.0))
+    infra.add_link_type(LinkType("dcn", dcn_GBps, dcn_lat_ns))
+    # one DCN switch with a port per chip (simplified border-router layer)
+    infra.add(switch_device(pods * n, dcn_GBps, "dcnsw"), "dcn", 1)
+
+    def cid(p: int, x: int, y: int) -> int:
+        return p * n + x * dim_y + y
+
+    for p in range(pods):
+        for x in range(dim_x):
+            for y in range(dim_y):
+                infra.connect(("chip", cid(p, x, y), "ici", 0),
+                              ("chip", cid(p, (x + 1) % dim_x, y), "ici", 1),
+                              "ici")
+                infra.connect(("chip", cid(p, x, y), "ici", 2),
+                              ("chip", cid(p, x, (y + 1) % dim_y), "ici", 3),
+                              "ici")
+                # every chip gets a DCN attachment via its core (border NIC)
+                infra.connect(("chip", cid(p, x, y), "core", 0),
+                              ("dcn", 0, "port", cid(p, x, y)), "dcn")
+    return infra

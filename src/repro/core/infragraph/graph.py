@@ -1,0 +1,260 @@
+"""InfraGraph: a standard, portable representation of AI/HPC network
+infrastructure (paper §4.6).
+
+Topology is a directed, attributed graph: vertices are hardware components
+(GPUs, NICs, switch ASICs, ports, ...), edges are connections annotated
+with link properties.  Definitions are compact — reusable ``Device``
+templates instantiated into an ``Infrastructure`` and programmatically
+expanded into a **fully qualified graph** whose nodes follow the
+hierarchical naming convention of paper §4.7.3::
+
+    <device-instance>.<index>.<component>.<index>
+
+e.g. ``switch.0.port.3`` — and whose edges are
+``(src_node, dst_node, link_name)`` triples.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Component:
+    """Hardware unit within a device (paper §4.6.1)."""
+    name: str                    # e.g. "gpu", "nic", "port", "asic", "cu"
+    count: int = 1
+    attrs: Tuple[Tuple[str, object], ...] = ()
+
+    def attr(self, key: str, default=None):
+        return dict(self.attrs).get(key, default)
+
+
+@dataclass(frozen=True)
+class LinkType:
+    """Named connection container with physical properties (§4.6.1)."""
+    name: str                    # e.g. "pcie", "xgmi", "ici", "eth800"
+    bandwidth_GBps: float
+    latency_ns: float
+    attrs: Tuple[Tuple[str, object], ...] = ()
+
+
+@dataclass
+class Device:
+    """Subgraph template for device hardware (paper §4.6.2).
+
+    ``edges``: internal wiring as ((comp, idx), (comp, idx), link_name),
+    added for both directions when the graph is expanded.
+    """
+    name: str
+    components: List[Component] = field(default_factory=list)
+    links: Dict[str, LinkType] = field(default_factory=dict)
+    edges: List[Tuple[Tuple[str, int], Tuple[str, int], str]] = \
+        field(default_factory=list)
+
+    def component(self, name: str) -> Component:
+        for c in self.components:
+            if c.name == name:
+                return c
+        raise KeyError(f"{self.name}: no component {name!r}")
+
+    def add_link_type(self, lt: LinkType) -> "Device":
+        self.links[lt.name] = lt
+        return self
+
+    def wire(self, a: Tuple[str, int], b: Tuple[str, int], link: str) -> None:
+        if link not in self.links:
+            raise KeyError(f"{self.name}: unknown link type {link!r}")
+        self.edges.append((a, b, link))
+
+
+@dataclass
+class Instance:
+    """Device instantiation alias (paper §4.6.2)."""
+    device: Device
+    name: str
+    count: int = 1
+
+
+NodeRef = Tuple[str, int, str, int]      # (instance, idx, component, cidx)
+
+
+@dataclass
+class Infrastructure:
+    """Top-level graph container (paper §4.6.2)."""
+    name: str
+    instances: Dict[str, Instance] = field(default_factory=dict)
+    links: Dict[str, LinkType] = field(default_factory=dict)
+    # inter-device edges: (src NodeRef, dst NodeRef, link name)
+    edges: List[Tuple[NodeRef, NodeRef, str]] = field(default_factory=list)
+
+    def add(self, device: Device, name: str, count: int = 1) -> Instance:
+        inst = Instance(device, name, count)
+        self.instances[name] = inst
+        return inst
+
+    def add_link_type(self, lt: LinkType) -> None:
+        self.links[lt.name] = lt
+
+    def connect(self, a: NodeRef, b: NodeRef, link: str) -> None:
+        if link not in self.links:
+            raise KeyError(f"unknown fabric link type {link!r}")
+        self.edges.append((a, b, link))
+
+    def expand(self) -> "FQGraph":
+        return FQGraph.from_infrastructure(self)
+
+    # ----------------------------------------------------------------- JSON
+    def to_json(self) -> str:
+        def lt_json(lt: LinkType) -> dict:
+            return {"name": lt.name, "bandwidth_GBps": lt.bandwidth_GBps,
+                    "latency_ns": lt.latency_ns, "attrs": dict(lt.attrs)}
+
+        devs = {}
+        for inst in self.instances.values():
+            d = inst.device
+            devs[d.name] = {
+                "components": [{"name": c.name, "count": c.count,
+                                "attrs": dict(c.attrs)}
+                               for c in d.components],
+                "links": {k: lt_json(v) for k, v in d.links.items()},
+                "edges": d.edges,
+            }
+        return json.dumps({
+            "name": self.name,
+            "devices": devs,
+            "instances": [{"device": i.device.name, "name": i.name,
+                           "count": i.count}
+                          for i in self.instances.values()],
+            "links": {k: lt_json(v) for k, v in self.links.items()},
+            "edges": self.edges,
+        }, indent=1)
+
+    @staticmethod
+    def from_json(text: str) -> "Infrastructure":
+        d = json.loads(text)
+
+        def lt(o: dict) -> LinkType:
+            return LinkType(o["name"], o["bandwidth_GBps"], o["latency_ns"],
+                            tuple(sorted(o.get("attrs", {}).items())))
+
+        devices: Dict[str, Device] = {}
+        for name, spec in d["devices"].items():
+            dev = Device(name,
+                         [Component(c["name"], c["count"],
+                                    tuple(sorted(c.get("attrs", {}).items())))
+                          for c in spec["components"]],
+                         {k: lt(v) for k, v in spec["links"].items()},
+                         [(tuple(a), tuple(b), l)
+                          for a, b, l in spec["edges"]])
+            devices[name] = dev
+        infra = Infrastructure(d["name"])
+        for i in d["instances"]:
+            infra.add(devices[i["device"]], i["name"], i["count"])
+        infra.links = {k: lt(v) for k, v in d["links"].items()}
+        infra.edges = [(tuple(a), tuple(b), l) for a, b, l in d["edges"]]
+        return infra
+
+
+def node_name(inst: str, idx: int, comp: str, cidx: int) -> str:
+    """Hierarchical identifier (paper §4.7.3)."""
+    return f"{inst}.{idx}.{comp}.{cidx}"
+
+
+@dataclass
+class FQGraph:
+    """Fully qualified graph: every component instance is a node."""
+    name: str
+    nodes: Dict[str, Dict] = field(default_factory=dict)
+    # directed edges: (src, dst) -> LinkType
+    edges: Dict[Tuple[str, str], LinkType] = field(default_factory=dict)
+    adj: Dict[str, List[str]] = field(default_factory=dict)
+
+    @staticmethod
+    def from_infrastructure(infra: Infrastructure) -> "FQGraph":
+        g = FQGraph(infra.name)
+        for inst in infra.instances.values():
+            for i in range(inst.count):
+                for comp in inst.device.components:
+                    for c in range(comp.count):
+                        g.add_node(node_name(inst.name, i, comp.name, c),
+                                   kind=comp.name, device=inst.device.name,
+                                   instance=inst.name, index=i, cindex=c,
+                                   **dict(comp.attrs))
+                for (ca, ia), (cb, ib), lname in inst.device.edges:
+                    lt = inst.device.links[lname]
+                    a = node_name(inst.name, i, ca, ia)
+                    b = node_name(inst.name, i, cb, ib)
+                    g.add_edge(a, b, lt)
+                    g.add_edge(b, a, lt)
+        for (ai, aidx, ac, acx), (bi, bidx, bc, bcx), lname in infra.edges:
+            lt = infra.links[lname]
+            a = node_name(ai, aidx, ac, acx)
+            b = node_name(bi, bidx, bc, bcx)
+            if a not in g.nodes or b not in g.nodes:
+                missing = a if a not in g.nodes else b
+                raise KeyError(f"fabric edge references unknown node "
+                               f"{missing!r}")
+            g.add_edge(a, b, lt)
+            g.add_edge(b, a, lt)
+        return g
+
+    def add_node(self, name: str, **attrs) -> None:
+        if name in self.nodes:
+            raise ValueError(f"duplicate node {name}")
+        self.nodes[name] = attrs
+        self.adj[name] = []
+
+    def add_edge(self, src: str, dst: str, lt: LinkType) -> None:
+        self.edges[(src, dst)] = lt
+        self.adj[src].append(dst)
+
+    # ------------------------------------------------------------- analysis
+    def nodes_of_kind(self, kind: str) -> List[str]:
+        return sorted(n for n, a in self.nodes.items()
+                      if a.get("kind") == kind)
+
+    def path(self, src: str, dst: str) -> List[str]:
+        """Shortest path (hop count) — communication path discovery."""
+        if src == dst:
+            return [src]
+        prev: Dict[str, str] = {}
+        seen = {src}
+        q = deque([src])
+        while q:
+            u = q.popleft()
+            for v in self.adj[u]:
+                if v in seen:
+                    continue
+                seen.add(v)
+                prev[v] = u
+                if v == dst:
+                    out = [dst]
+                    while out[-1] != src:
+                        out.append(prev[out[-1]])
+                    return out[::-1]
+                q.append(v)
+        raise ValueError(f"no path {src} -> {dst}")
+
+    def connected(self) -> bool:
+        if not self.nodes:
+            return True
+        start = next(iter(self.nodes))
+        seen = {start}
+        q = deque([start])
+        while q:
+            u = q.popleft()
+            for v in self.adj[u]:
+                if v not in seen:
+                    seen.add(v)
+                    q.append(v)
+        return len(seen) == len(self.nodes)
+
+    def bisection_GBps(self, group_a: List[str], group_b: List[str]) -> float:
+        """Total bandwidth of edges crossing a node partition."""
+        a, bset = set(group_a), set(group_b)
+        return sum(lt.bandwidth_GBps for (s, d), lt in self.edges.items()
+                   if s in a and d in bset)

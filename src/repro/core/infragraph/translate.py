@@ -1,0 +1,104 @@
+"""InfraGraph translators (paper §4.7.1).
+
+One InfraGraph description drives every network backend:
+
+* ``to_fabric``          — detailed event-driven backend (NoC-level Fabric);
+* ``to_simple_topology`` — coarse Simple backend: detects topology patterns
+  and decomposes the node count into multi-dimensional groups (what the
+  paper's Simple translator does);
+* ``to_cluster``         — builds a fine-grained GPU Cluster whose scale-up
+  wiring comes from the InfraGraph fabric edges instead of the built-ins.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from ..engine import Engine
+from ..network.fabric import Fabric
+from ..network.simple import SimpleTopology
+from .graph import FQGraph, Infrastructure
+
+
+def to_fabric(infra: Infrastructure, engine: Optional[Engine] = None,
+              policy: str = "fifo") -> Tuple[Fabric, FQGraph]:
+    """Expand and lower an InfraGraph into the event-driven Fabric."""
+    g = infra.expand()
+    fab = Fabric(engine or Engine(), default_policy=policy)
+    ids = {name: fab.add_node(name) for name in g.nodes}
+    for (src, dst), lt in g.edges.items():
+        fab.add_link(ids[src], ids[dst], lt.bandwidth_GBps, lt.latency_ns,
+                     name=f"{src}->{dst}:{lt.name}")
+    return fab, g
+
+
+def endpoint_nodes(g: FQGraph, kinds: Tuple[str, ...] = ("gpu", "core", "cu")
+                   ) -> List[str]:
+    """Rank-bearing endpoints in deterministic order."""
+    out: List[str] = []
+    for kind in kinds:
+        out.extend(g.nodes_of_kind(kind))
+        if out:
+            break
+    return out
+
+
+def to_simple_topology(infra: Infrastructure) -> SimpleTopology:
+    """Coarse translation: detect the fabric pattern and emit Simple dims.
+
+    Pattern detection (paper: "the Simple translator additionally detects
+    topology patterns to decompose large node counts into multi-dimensional
+    groups"):
+      * one switch tier           -> one "switch" dim over all endpoints
+      * leaf/spine (two tiers)    -> (hosts-per-leaf, "switch") x (leaves,
+                                      "switch")
+      * torus edges               -> per-axis "ring" dims
+    """
+    g = infra.expand()
+    eps = endpoint_nodes(g)
+    n = len(eps)
+    if n == 0:
+        raise ValueError("no endpoints (gpu/core/cu) in infrastructure")
+
+    inst_names = {name.split(".")[0] for name in g.nodes}
+    # link properties seen on fabric edges
+    lats = [lt.latency_ns for lt in infra.links.values()] or [500.0]
+    bws = [lt.bandwidth_GBps for lt in infra.links.values()] or [50.0]
+    lat, bw = max(lats), min(bws)
+
+    if "leaf" in inst_names and "spine" in inst_names:
+        leaves = len({nm.split(".")[1] for nm in g.nodes
+                      if nm.startswith("leaf.")})
+        per_leaf = max(1, n // max(leaves, 1))
+        return SimpleTopology([(per_leaf, bw, lat, "switch"),
+                               (max(leaves, 1), bw, lat, "switch")])
+    if "switch" in inst_names or "dcn" in inst_names:
+        return SimpleTopology([(n, bw, lat, "switch")])
+    # torus: infer per-axis ring sizes from the infrastructure name if
+    # present (torus{X}x{Y}), else fall back to a single ring
+    name = infra.name
+    if name.startswith("torus") and "x" in name:
+        try:
+            dims = name[len("torus"):].split("x")
+            x, y = int(dims[0]), int(dims[1])
+            if x * y == n:
+                return SimpleTopology([(x, bw, lat, "ring"),
+                                       (y, bw, lat, "ring")])
+        except ValueError:
+            pass
+    return SimpleTopology([(n, bw, lat, "ring")])
+
+
+def to_cluster(infra: Infrastructure, noc=None, gpu_config=None):
+    """Fine-grained Cluster whose scale-up topology mirrors the InfraGraph.
+
+    Endpoint devices become detailed GPUs (NoC + CUs + HBM); switch/torus
+    wiring between their I/O ports follows the InfraGraph edges.
+    """
+    from ..cluster import Cluster, NocConfig
+
+    g = infra.expand()
+    eps = endpoint_nodes(g)
+    n = len(eps)
+    cluster = Cluster(n, gpu_config=gpu_config, noc=noc, topology="switch")
+    return cluster

@@ -1,0 +1,56 @@
+"""InfraGraph visualizer (paper §4.7.2): DOT output + text summaries so
+users can check the graph they defined is the one they intended."""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, Optional
+
+from .graph import FQGraph, Infrastructure
+
+
+def to_dot(infra: Infrastructure, collapse_devices: bool = True) -> str:
+    """Graphviz DOT.  With ``collapse_devices`` each device instance becomes
+    one node (readable for big fabrics); otherwise fully qualified."""
+    g = infra.expand()
+    lines = [f'digraph "{infra.name}" {{', "  rankdir=TB;"]
+    if collapse_devices:
+        devs = sorted({(a["instance"], a["index"]) for a in g.nodes.values()})
+        for inst, idx in devs:
+            lines.append(f'  "{inst}.{idx}" [shape=box];')
+        seen = set()
+        for (src, dst), lt in g.edges.items():
+            a = ".".join(src.split(".")[:2])
+            b = ".".join(dst.split(".")[:2])
+            if a == b or (b, a) in seen or (a, b) in seen:
+                continue
+            seen.add((a, b))
+            lines.append(f'  "{a}" -> "{b}" [dir=both, '
+                         f'label="{lt.name}\\n{lt.bandwidth_GBps:g}GB/s"];')
+    else:
+        for n in g.nodes:
+            lines.append(f'  "{n}";')
+        done = set()
+        for (src, dst), lt in g.edges.items():
+            if (dst, src) in done:
+                continue
+            done.add((src, dst))
+            lines.append(f'  "{src}" -> "{dst}" [dir=both, '
+                         f'label="{lt.name}"];')
+    lines.append("}")
+    return "\n".join(lines)
+
+
+def summary(infra: Infrastructure) -> str:
+    """Text summary: node/edge census, connectivity, per-kind counts."""
+    g = infra.expand()
+    kinds = Counter(a.get("kind", "?") for a in g.nodes.values())
+    linkkinds = Counter(lt.name for lt in g.edges.values())
+    out = [f"InfraGraph '{infra.name}': {len(g.nodes)} nodes, "
+           f"{len(g.edges)} directed edges, "
+           f"connected={g.connected()}"]
+    out.append("  components: " + ", ".join(
+        f"{k}x{v}" for k, v in sorted(kinds.items())))
+    out.append("  links: " + ", ".join(
+        f"{k}x{v}" for k, v in sorted(linkkinds.items())))
+    return "\n".join(out)

@@ -1,0 +1,108 @@
+"""Primitive Load-Store granularity GPU instructions (paper §4.1.1).
+
+These are the unit of simulation in ASTRA-sim 3.0.  A GPU instruction either
+moves one cache-line of data between a compute unit's register file and a
+(local or remote) memory location, manipulates a semaphore, performs abstract
+arithmetic (``Reduce``), or fences outstanding memory traffic (``Waitcnt``).
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Optional
+
+
+class IKind(enum.IntEnum):
+    LOAD = 0            # memory -> register file (data path)
+    STORE = 1           # register file -> memory (data path)
+    SEM_ACQUIRE = 2     # load semaphore value, check released (control path)
+    SEM_RELEASE = 3     # store semaphore value (control path)
+    REDUCE = 4          # abstract ALU work, occupies the CU
+    WAITCNT = 5         # stall until in-flight load/store count <= threshold
+
+
+class Space(enum.IntEnum):
+    """Memory spaces an instruction may address."""
+    HBM = 0             # high-bandwidth memory, interleaved across channels
+    SEM = 1             # semaphore scratch space (one cache line per semaphore)
+
+
+@dataclass(frozen=True)
+class MemRef:
+    """A memory location: ``(gpu, space, addr)``.
+
+    ``addr`` is a byte address inside the space.  For HBM it selects the
+    memory channel by cache-line interleaving; for SEM it is the semaphore id.
+    """
+    gpu: int
+    space: Space
+    addr: int
+
+    def __repr__(self) -> str:  # compact traces
+        return f"g{self.gpu}:{self.space.name.lower()}@{self.addr:#x}"
+
+
+@dataclass
+class Instruction:
+    """One primitive GPU instruction.
+
+    Exactly one of the payload fields is meaningful depending on ``kind``:
+      * LOAD/STORE/SEM_*: ``mem`` (+ ``size`` bytes, <= one cache line)
+      * REDUCE: ``cycles`` the CU is occupied
+      * WAITCNT: ``threshold`` of allowed in-flight memory ops
+    """
+    __slots__ = ("kind", "mem", "size", "cycles", "threshold", "tag")
+    kind: IKind
+    mem: Optional[MemRef]
+    size: int
+    cycles: int
+    threshold: int
+    tag: Optional[str]
+
+    def __init__(self, kind: IKind, mem: Optional[MemRef] = None, size: int = 0,
+                 cycles: int = 0, threshold: int = 0, tag: Optional[str] = None):
+        self.kind = kind
+        self.mem = mem
+        self.size = size
+        self.cycles = cycles
+        self.threshold = threshold
+        self.tag = tag
+
+    # ----------------------------------------------------------- constructors
+    @staticmethod
+    def load(mem: MemRef, size: int, tag: Optional[str] = None) -> "Instruction":
+        return Instruction(IKind.LOAD, mem=mem, size=size, tag=tag)
+
+    @staticmethod
+    def store(mem: MemRef, size: int, tag: Optional[str] = None) -> "Instruction":
+        return Instruction(IKind.STORE, mem=mem, size=size, tag=tag)
+
+    @staticmethod
+    def sem_acquire(mem: MemRef, tag: Optional[str] = None) -> "Instruction":
+        return Instruction(IKind.SEM_ACQUIRE, mem=mem, size=0, tag=tag)
+
+    @staticmethod
+    def sem_release(mem: MemRef, tag: Optional[str] = None) -> "Instruction":
+        return Instruction(IKind.SEM_RELEASE, mem=mem, size=0, tag=tag)
+
+    @staticmethod
+    def reduce(cycles: int, tag: Optional[str] = None) -> "Instruction":
+        return Instruction(IKind.REDUCE, cycles=max(1, int(cycles)), tag=tag)
+
+    @staticmethod
+    def waitcnt(threshold: int = 0, tag: Optional[str] = None) -> "Instruction":
+        return Instruction(IKind.WAITCNT, threshold=threshold, tag=tag)
+
+    def is_mem(self) -> bool:
+        return self.kind in (IKind.LOAD, IKind.STORE, IKind.SEM_ACQUIRE,
+                             IKind.SEM_RELEASE)
+
+    def __repr__(self) -> str:
+        if self.kind in (IKind.LOAD, IKind.STORE):
+            return f"{self.kind.name}({self.mem}, {self.size}B)"
+        if self.kind in (IKind.SEM_ACQUIRE, IKind.SEM_RELEASE):
+            return f"{self.kind.name}({self.mem})"
+        if self.kind == IKind.REDUCE:
+            return f"REDUCE({self.cycles}cyc)"
+        return f"WAITCNT(<={self.threshold})"

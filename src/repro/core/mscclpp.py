@@ -1,0 +1,276 @@
+"""MSCCL++ collective-algorithm representation (paper §2.4, §4.2).
+
+A ``Program`` captures a custom collective algorithm as per-GPU,
+per-workgroup operation lists — the JSON schema of paper Fig. 3:
+``put``/``get``/``copy``/``reduce`` data operations plus ``signal``/``wait``
+control dependencies and ``barrier``/``nop`` synchronization.
+
+This module provides:
+  * the in-memory representation + JSON (de)serialization,
+  * a small authoring DSL (``ProgramBuilder``) used by
+    :mod:`repro.core.collectives` to emit textbook algorithms, and
+  * the translator (paper §4.2) lowering a Program into the fine-grained
+    Load-Store kernels executed by the GPU model: put/get/copy → MemcpyOp,
+    reduce → LoadOp×k + Fence + ReduceOp + StoreOp, signal → Semaphore
+    ReleaseOp, wait → SemaphoreAcquireOp.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .instructions import MemRef, Space
+from .operations import (BarrierOp, FenceOp, FusedReduceOp, GpuOp, LoadOp,
+                         MemcpyOp, NopOp, ReduceOp, SemaphoreAcquireOp,
+                         SemaphoreReleaseOp, StoreOp)
+from .workload import Kernel, Workgroup
+
+VALID_OPS = ("put", "get", "copy", "reduce", "signal", "wait", "barrier",
+             "nop", "flush")
+
+
+@dataclass
+class CollOp:
+    """One MSCCL++ operation inside a workgroup's program."""
+    op: str
+    # data movement (put/get/copy/reduce)
+    src_buf: str = ""
+    src_off: int = 0
+    dst_buf: str = ""
+    dst_off: int = 0
+    size: int = 0
+    remote_rank: int = -1          # peer for put/get; signal target
+    # reduce: list of (buf, off, rank) sources combined into dst; rank == -1
+    # means local, otherwise a remote read fused into the reduction
+    srcs: Optional[List[Tuple[str, int, int]]] = None
+    # control (signal/wait)
+    sem: int = -1
+    expected: int = 1
+
+    def to_json(self) -> dict:
+        d = {k: v for k, v in asdict(self).items()
+             if v not in ("", -1, None) or k == "op"}
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "CollOp":
+        srcs = d.get("srcs")
+        if srcs is not None:
+            srcs = [tuple(s) for s in srcs]
+        return CollOp(op=d["op"], src_buf=d.get("src_buf", ""),
+                      src_off=d.get("src_off", 0), dst_buf=d.get("dst_buf", ""),
+                      dst_off=d.get("dst_off", 0), size=d.get("size", 0),
+                      remote_rank=d.get("remote_rank", -1), srcs=srcs,
+                      sem=d.get("sem", -1), expected=d.get("expected", 1))
+
+
+@dataclass
+class Program:
+    """A collective algorithm: per-rank, per-workgroup operation lists."""
+    name: str
+    collective: str                       # all_gather | reduce_scatter | ...
+    num_ranks: int
+    buffers: Dict[str, int]               # buffer name -> bytes per rank
+    gpus: List[List[List[CollOp]]]        # [rank][workgroup][op]
+
+    # ------------------------------------------------------------- JSON I/O
+    def to_json(self) -> str:
+        return json.dumps({
+            "name": self.name,
+            "collective": self.collective,
+            "num_ranks": self.num_ranks,
+            "buffers": self.buffers,
+            "gpus": [{"id": r,
+                      "workgroups": [{"ops": [o.to_json() for o in wg]}
+                                     for wg in wgs]}
+                     for r, wgs in enumerate(self.gpus)],
+        }, indent=1)
+
+    @staticmethod
+    def from_json(text: str) -> "Program":
+        d = json.loads(text)
+        gpus: List[List[List[CollOp]]] = [[] for _ in range(d["num_ranks"])]
+        for g in d["gpus"]:
+            gpus[g["id"]] = [[CollOp.from_json(o) for o in wg["ops"]]
+                             for wg in g["workgroups"]]
+        return Program(d["name"], d["collective"], d["num_ranks"],
+                       {k: int(v) for k, v in d["buffers"].items()}, gpus)
+
+    def validate(self) -> None:
+        assert len(self.gpus) == self.num_ranks
+        for r, wgs in enumerate(self.gpus):
+            for wg in wgs:
+                for o in wg:
+                    if o.op not in VALID_OPS:
+                        raise ValueError(f"rank {r}: bad op {o.op!r}")
+                    if o.op in ("put", "get") and not (
+                            0 <= o.remote_rank < self.num_ranks):
+                        raise ValueError(f"rank {r}: bad remote {o.remote_rank}")
+
+    def op_count(self) -> int:
+        return sum(len(wg) for wgs in self.gpus for wg in wgs)
+
+
+class ProgramBuilder:
+    """Authoring DSL for MSCCL++ programs.
+
+    >>> b = ProgramBuilder("ring_ag", "all_gather", nranks=4,
+    ...                    buffers={"input": 1024, "output": 4096})
+    >>> b.put(rank=0, wg=0, src=("input", 0), dst=("output", 0),
+    ...       size=1024, remote=1)
+    >>> b.signal(rank=0, wg=0, remote=1, sem=b.sem_id(1, "step0"))
+    >>> prog = b.build()
+    """
+
+    def __init__(self, name: str, collective: str, nranks: int,
+                 buffers: Dict[str, int], nworkgroups: int = 1):
+        self.name = name
+        self.collective = collective
+        self.nranks = nranks
+        self.buffers = dict(buffers)
+        self.nwg = nworkgroups
+        self.gpus: List[List[List[CollOp]]] = [
+            [[] for _ in range(nworkgroups)] for _ in range(nranks)]
+        self._sem_ids: Dict[Tuple[int, str], int] = {}
+
+    # --------------------------------------------------------- sem id space
+    def sem_id(self, rank: int, key: str) -> int:
+        """A distinct semaphore id on ``rank`` for logical channel ``key``."""
+        k = (rank, key)
+        if k not in self._sem_ids:
+            self._sem_ids[k] = len(self._sem_ids)
+        return self._sem_ids[k]
+
+    # ------------------------------------------------------------- emitters
+    def _emit(self, rank: int, wg: int, op: CollOp) -> None:
+        self.gpus[rank][wg].append(op)
+
+    def put(self, rank: int, wg: int, src: Tuple[str, int],
+            dst: Tuple[str, int], size: int, remote: int) -> None:
+        self._emit(rank, wg, CollOp("put", src_buf=src[0], src_off=src[1],
+                                    dst_buf=dst[0], dst_off=dst[1],
+                                    size=size, remote_rank=remote))
+
+    def get(self, rank: int, wg: int, src: Tuple[str, int],
+            dst: Tuple[str, int], size: int, remote: int) -> None:
+        self._emit(rank, wg, CollOp("get", src_buf=src[0], src_off=src[1],
+                                    dst_buf=dst[0], dst_off=dst[1],
+                                    size=size, remote_rank=remote))
+
+    def copy(self, rank: int, wg: int, src: Tuple[str, int],
+             dst: Tuple[str, int], size: int) -> None:
+        self._emit(rank, wg, CollOp("copy", src_buf=src[0], src_off=src[1],
+                                    dst_buf=dst[0], dst_off=dst[1], size=size))
+
+    def reduce(self, rank: int, wg: int, srcs: List[Tuple],
+               dst: Tuple[str, int], size: int) -> None:
+        """``srcs``: (buf, off) for local or (buf, off, rank) for remote."""
+        norm = [(s[0], s[1], s[2] if len(s) > 2 else -1) for s in srcs]
+        self._emit(rank, wg, CollOp("reduce", srcs=norm, dst_buf=dst[0],
+                                    dst_off=dst[1], size=size))
+
+    def signal(self, rank: int, wg: int, remote: int, sem: int) -> None:
+        self._emit(rank, wg, CollOp("signal", remote_rank=remote, sem=sem))
+
+    def wait(self, rank: int, wg: int, sem: int, expected: int = 1) -> None:
+        self._emit(rank, wg, CollOp("wait", sem=sem, expected=expected))
+
+    def barrier(self, rank: int, wg: int) -> None:
+        self._emit(rank, wg, CollOp("barrier"))
+
+    def nop(self, rank: int, wg: int) -> None:
+        self._emit(rank, wg, CollOp("nop"))
+
+    def flush(self, rank: int, wg: int) -> None:
+        self._emit(rank, wg, CollOp("flush"))
+
+    def build(self) -> Program:
+        p = Program(self.name, self.collective, self.nranks, self.buffers,
+                    self.gpus)
+        p.validate()
+        return p
+
+
+# ---------------------------------------------------------------------------
+# Translator: MSCCL++ Program -> fine-grained kernels (paper §4.2)
+# ---------------------------------------------------------------------------
+
+class BufferMap:
+    """Assigns each (rank, buffer) a base address in that rank's HBM."""
+
+    def __init__(self, program: Program, align: int = 4096):
+        self.bases: Dict[str, int] = {}
+        addr = 0
+        for name, size in sorted(program.buffers.items()):
+            self.bases[name] = addr
+            addr += (size + align - 1) // align * align
+        self.total = addr
+
+    def ref(self, rank: int, buf: str, off: int) -> MemRef:
+        return MemRef(rank, Space.HBM, self.bases[buf] + off)
+
+
+def lower_program(program: Program, unroll: Optional[int] = None,
+                  sem_base: int = 0) -> List[Kernel]:
+    """Lower an MSCCL++ Program into one fine-grained Kernel per rank.
+
+    ``sem_base`` namespaces this instance's semaphores so several collectives
+    can share one Cluster without their monotonic counters colliding.
+    """
+    program.validate()
+    bufmap = BufferMap(program)
+    kernels: List[Kernel] = []
+    for rank, wgs in enumerate(program.gpus):
+        workgroups: List[Workgroup] = []
+        for wg_ops in wgs:
+            ops: List[GpuOp] = []
+            for o in wg_ops:
+                ops.extend(_lower_op(o, rank, bufmap, unroll, sem_base))
+            workgroups.append(Workgroup(ops, name=f"r{rank}"))
+        if workgroups:
+            kernels.append(Kernel(workgroups, name=f"{program.name}.r{rank}",
+                                  gpu=rank))
+    return kernels
+
+
+def _lower_op(o: CollOp, rank: int, bufmap: BufferMap,
+              unroll: Optional[int], sem_base: int = 0) -> List[GpuOp]:
+    tag = o.op
+    if o.op == "put":
+        # local read + remote write
+        return [MemcpyOp(bufmap.ref(rank, o.src_buf, o.src_off),
+                         bufmap.ref(o.remote_rank, o.dst_buf, o.dst_off),
+                         o.size, unroll=unroll, tag=tag)]
+    if o.op == "get":
+        # remote read + local write
+        return [MemcpyOp(bufmap.ref(o.remote_rank, o.src_buf, o.src_off),
+                         bufmap.ref(rank, o.dst_buf, o.dst_off),
+                         o.size, unroll=unroll, tag=tag)]
+    if o.op == "copy":
+        return [MemcpyOp(bufmap.ref(rank, o.src_buf, o.src_off),
+                         bufmap.ref(rank, o.dst_buf, o.dst_off),
+                         o.size, unroll=unroll, tag=tag)]
+    if o.op == "reduce":
+        srcs = [bufmap.ref(r if r >= 0 else rank, b, off)
+                for (b, off, r) in (o.srcs or [])]
+        return [FusedReduceOp(srcs=srcs,
+                              dst=bufmap.ref(rank, o.dst_buf, o.dst_off),
+                              size=o.size, unroll=unroll, tag=tag)]
+    if o.op == "signal":
+        return [FenceOp(0, tag=tag),   # data must land before the signal
+                SemaphoreReleaseOp(
+                    MemRef(o.remote_rank, Space.SEM, sem_base + o.sem),
+                    tag=tag)]
+    if o.op == "wait":
+        op = SemaphoreAcquireOp(MemRef(rank, Space.SEM, sem_base + o.sem),
+                                expected=o.expected, tag=tag)
+        return [op]
+    if o.op == "barrier":
+        return [BarrierOp(tag=tag)]
+    if o.op == "nop":
+        return [NopOp(tag=tag)]
+    if o.op == "flush":
+        return [FenceOp(0, tag=tag)]
+    raise ValueError(o.op)

@@ -1,0 +1,5 @@
+from .fabric import Fabric, Link, CONTROL, DATA
+from .simple import SimpleNetwork, alpha_beta_time
+
+__all__ = ["Fabric", "Link", "CONTROL", "DATA", "SimpleNetwork",
+           "alpha_beta_time"]

@@ -1,0 +1,216 @@
+"""Event-driven network fabric (paper §4.5).
+
+One implementation serves both granularities:
+
+* the **NoC-level detailed backend** — nodes are CUs, NoC routers, HBM
+  channels and I/O ports; messages are cache-line-sized Wavefront Requests —
+  and
+* the **coarse Simple backend** — nodes are GPUs/NICs/switches; messages are
+  chunk-sized collective transfers.
+
+Links are store-and-forward servers with bandwidth, latency, and a two-class
+(control vs. data) arbitration policy; ``fifo`` lets large data messages
+block control traffic (the paper's Fig. 11 pathology), ``fair`` round-robins
+between the classes.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..engine import Engine
+
+CONTROL = 0
+DATA = 1
+
+
+class Flight:
+    """A message in transit along a precomputed route of links."""
+    __slots__ = ("size", "cls", "route", "hop", "on_arrive", "payload")
+
+    def __init__(self, size: int, cls: int, route: List["Link"],
+                 on_arrive: Callable[["Flight"], None], payload=None):
+        self.size = size
+        self.cls = cls
+        self.route = route
+        self.hop = 0
+        self.on_arrive = on_arrive
+        self.payload = payload
+
+
+class Link:
+    """Directed link: a serialization server + propagation latency.
+
+    ``policy``: "fifo" (single queue, arrival order) or "fair" (round-robin
+    between the control and data queues — paper §5.2's arbitration fix).
+    """
+    __slots__ = ("name", "bw", "lat_ns", "policy", "engine", "_q", "_busy",
+                 "_rr", "bytes_moved", "busy_ns", "min_ser_ns")
+
+    def __init__(self, engine: Engine, name: str, bandwidth_GBps: float,
+                 latency_ns: float, policy: str = "fifo",
+                 min_ser_ns: float = 0.0):
+        self.name = name
+        self.bw = bandwidth_GBps  # GB/s == bytes/ns
+        self.lat_ns = latency_ns
+        self.policy = policy
+        self.engine = engine
+        self._q: Tuple[deque, deque] = (deque(), deque())  # control, data
+        self._busy = False
+        self._rr = 0
+        self.bytes_moved = 0
+        self.busy_ns = 0.0
+        self.min_ser_ns = min_ser_ns
+
+    def enqueue(self, flight: Flight) -> None:
+        if self.policy == "fair":
+            self._q[flight.cls].append(flight)
+        else:
+            self._q[0].append(flight)
+        if not self._busy:
+            self._start_next()
+
+    def _pick(self) -> Optional[Flight]:
+        if self.policy == "fair":
+            for i in range(2):
+                c = (self._rr + i) % 2
+                q = self._q[c]
+                if q:
+                    self._rr = (c + 1) % 2  # other class goes first next time
+                    return q.popleft()
+            return None
+        q = self._q[0]
+        return q.popleft() if q else None
+
+    def _start_next(self) -> None:
+        flight = self._pick()
+        if flight is None:
+            self._busy = False
+            return
+        self._busy = True
+        ser = max(flight.size / self.bw if self.bw > 0 else 0.0, self.min_ser_ns)
+        self.bytes_moved += flight.size
+        self.busy_ns += ser
+        self.engine.schedule(ser, self._finish, flight)
+
+    def _finish(self, flight: Flight) -> None:
+        # serialization done: link free for the next message; this message
+        # propagates for lat_ns then arrives at the next node.
+        self._start_next()
+        self.engine.schedule(self.lat_ns, _advance, flight)
+
+
+def _advance(flight: Flight) -> None:
+    flight.hop += 1
+    if flight.hop >= len(flight.route):
+        flight.on_arrive(flight)
+    else:
+        flight.route[flight.hop].enqueue(flight)
+
+
+class Fabric:
+    """A named-node topology with cached shortest-path routing."""
+
+    def __init__(self, engine: Engine, default_policy: str = "fifo"):
+        self.engine = engine
+        self.default_policy = default_policy
+        self.node_names: List[str] = []
+        self.node_ids: Dict[str, int] = {}
+        # adjacency: node id -> list of (neighbor id, Link)
+        self.adj: List[List[Tuple[int, Link]]] = []
+        self._route_cache: Dict[Tuple[int, int], List[Link]] = {}
+        self.links: List[Link] = []
+
+    # ------------------------------------------------------------- building
+    def add_node(self, name: str) -> int:
+        if name in self.node_ids:
+            return self.node_ids[name]
+        nid = len(self.node_names)
+        self.node_names.append(name)
+        self.node_ids[name] = nid
+        self.adj.append([])
+        return nid
+
+    def node(self, name: str) -> int:
+        return self.node_ids[name]
+
+    def add_link(self, u: int, v: int, bandwidth_GBps: float, latency_ns: float,
+                 policy: Optional[str] = None, name: Optional[str] = None) -> Link:
+        link = Link(self.engine,
+                    name or f"{self.node_names[u]}->{self.node_names[v]}",
+                    bandwidth_GBps, latency_ns,
+                    policy or self.default_policy)
+        self.adj[u].append((v, link))
+        self.links.append(link)
+        self._route_cache.clear()
+        return link
+
+    def add_bidi(self, u: int, v: int, bandwidth_GBps: float, latency_ns: float,
+                 policy: Optional[str] = None) -> Tuple[Link, Link]:
+        return (self.add_link(u, v, bandwidth_GBps, latency_ns, policy),
+                self.add_link(v, u, bandwidth_GBps, latency_ns, policy))
+
+    # -------------------------------------------------------------- routing
+    def route(self, src: int, dst: int) -> List[Link]:
+        key = (src, dst)
+        hit = self._route_cache.get(key)
+        if hit is not None:
+            return hit
+        path = self._bfs(src, dst)
+        self._route_cache[key] = path
+        return path
+
+    def route_via(self, waypoints: List[int]) -> List[Link]:
+        """Concatenated shortest-path route through ``waypoints``."""
+        out: List[Link] = []
+        for a, b in zip(waypoints, waypoints[1:]):
+            if a != b:
+                out.extend(self.route(a, b))
+        return out
+
+    def _bfs(self, src: int, dst: int) -> List[Link]:
+        if src == dst:
+            return []
+        prev: Dict[int, Tuple[int, Link]] = {}
+        frontier = deque([src])
+        seen = {src}
+        while frontier:
+            u = frontier.popleft()
+            for v, link in self.adj[u]:
+                if v in seen:
+                    continue
+                seen.add(v)
+                prev[v] = (u, link)
+                if v == dst:
+                    path: List[Link] = []
+                    cur = dst
+                    while cur != src:
+                        cur, l = prev[cur]
+                        path.append(l)
+                    path.reverse()
+                    return path
+                frontier.append(v)
+        raise ValueError(f"no route {self.node_names[src]} -> {self.node_names[dst]}")
+
+    # --------------------------------------------------------------- sending
+    def send(self, route: List[Link], size: int, cls: int,
+             on_arrive: Callable[[Flight], None], payload=None) -> None:
+        """Inject a message onto a precomputed route."""
+        if not route:
+            # src == dst: deliver immediately (still via the event queue so
+            # causality is preserved)
+            f = Flight(size, cls, route, on_arrive, payload)
+            f.hop = 0
+            self.engine.schedule(0.0, on_arrive, f)
+            return
+        flight = Flight(size, cls, route, on_arrive, payload)
+        route[0].enqueue(flight)
+
+    # ------------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, float]:
+        return {
+            "links": len(self.links),
+            "nodes": len(self.node_names),
+            "bytes_moved": sum(l.bytes_moved for l in self.links),
+        }

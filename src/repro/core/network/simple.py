@@ -1,0 +1,149 @@
+"""Coarse Simple network backend (ASTRA-sim 2.0's alpha-beta model, §2.1).
+
+Two modes:
+
+* **event-driven** — ``SimpleNetwork``: GPU-granularity nodes over a Fabric;
+  one message per chunk transfer (this is what ASTRA-sim 2.0 did, and is the
+  low-fidelity baseline the paper's Fig. 4 argues against);
+* **closed-form** — ``alpha_beta_time`` and the ``collective_time_*``
+  estimators used by the step-time predictor at pod scale (256+ chips),
+  where event simulation of every chunk is unnecessary.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..engine import Engine
+from .fabric import CONTROL, DATA, Fabric, Flight
+
+
+def alpha_beta_time(size_bytes: float, alpha_ns: float, beta_GBps: float) -> float:
+    """Classic Hockney model: latency + size/bandwidth, in ns."""
+    return alpha_ns + (size_bytes / beta_GBps if beta_GBps > 0 else 0.0)
+
+
+@dataclass
+class SimpleTopology:
+    """A (possibly multi-dimensional) GPU-level topology description.
+
+    ``dims``: list of (size, bandwidth_GBps, latency_ns, kind) per dimension,
+    innermost first — mirroring ASTRA-sim 2.0's hierarchical Simple backend.
+    kind: "ring" | "fc" (fully connected) | "switch".
+    """
+    dims: List[Tuple[int, float, float, str]]
+
+    @property
+    def num_gpus(self) -> int:
+        n = 1
+        for d, *_ in self.dims:
+            n *= d
+        return n
+
+
+class SimpleNetwork:
+    """Event-driven coarse backend: chunk-granularity transfers on a Fabric."""
+
+    def __init__(self, topo: SimpleTopology, engine: Optional[Engine] = None,
+                 policy: str = "fifo"):
+        self.engine = engine or Engine()
+        self.topo = topo
+        self.fabric = Fabric(self.engine, default_policy=policy)
+        self._gpu_nodes: List[int] = []
+        self._build()
+
+    def _build(self) -> None:
+        fab = self.fabric
+        n = self.topo.num_gpus
+        self._gpu_nodes = [fab.add_node(f"gpu{g}") for g in range(n)]
+        # build links dimension by dimension: GPUs whose coordinates differ
+        # only in dim k are connected per that dim's kind
+        stride = 1
+        for k, (size, bw, lat, kind) in enumerate(self.topo.dims):
+            groups: Dict[int, List[int]] = {}
+            for g in range(n):
+                base = (g // (stride * size)) * (stride * size) + g % stride
+                groups.setdefault(base, []).append(g)
+            for base, members in groups.items():
+                members = sorted(members)
+                if kind == "ring":
+                    if len(members) > 1:
+                        for i, g in enumerate(members):
+                            nxt = members[(i + 1) % len(members)]
+                            fab.add_bidi(self._gpu_nodes[g],
+                                         self._gpu_nodes[nxt], bw, lat)
+                elif kind == "fc":
+                    for i, g in enumerate(members):
+                        for h in members[i + 1:]:
+                            fab.add_bidi(self._gpu_nodes[g],
+                                         self._gpu_nodes[h], bw, lat)
+                elif kind == "switch":
+                    sw = fab.add_node(f"sw.d{k}.{base}")
+                    for g in members:
+                        fab.add_bidi(self._gpu_nodes[g], sw, bw, lat / 2)
+                else:
+                    raise ValueError(f"unknown dim kind {kind!r}")
+            stride *= size
+
+    # ------------------------------------------------------------------ API
+    def send(self, src_gpu: int, dst_gpu: int, size: int,
+             on_done: Callable[[], None], cls: int = DATA) -> None:
+        route = self.fabric.route(self._gpu_nodes[src_gpu],
+                                  self._gpu_nodes[dst_gpu])
+        self.fabric.send(route, size, cls, lambda f: on_done())
+
+    def run(self, until_ns: Optional[float] = None) -> float:
+        return self.engine.run(until_ns)
+
+
+# --------------------------------------------------------------------------
+# Closed-form collective estimators (used at pod scale by the step predictor)
+# --------------------------------------------------------------------------
+
+def collective_time_ring(kind: str, size_bytes: float, n: int,
+                         link_GBps: float, alpha_ns: float) -> float:
+    """Ring algorithm time for a collective over ``n`` ranks.
+
+    ``size_bytes`` is the *global* payload (e.g. full gradient buffer for an
+    all-reduce, full gathered output for an all-gather).
+    """
+    if n <= 1:
+        return 0.0
+    if kind == "all_reduce":       # reduce-scatter + all-gather
+        steps = 2 * (n - 1)
+        bytes_per_step = size_bytes / n
+    elif kind in ("all_gather", "reduce_scatter"):
+        steps = n - 1
+        bytes_per_step = size_bytes / n
+    elif kind == "all_to_all":     # pairwise exchange schedule
+        steps = n - 1
+        bytes_per_step = size_bytes / n
+    else:
+        raise ValueError(kind)
+    return steps * alpha_beta_time(bytes_per_step, alpha_ns, link_GBps)
+
+
+def collective_time_hd(kind: str, size_bytes: float, n: int,
+                       link_GBps: float, alpha_ns: float) -> float:
+    """Recursive halving-doubling estimate (power-of-two ranks)."""
+    if n <= 1:
+        return 0.0
+    rounds = math.ceil(math.log2(n))
+    if kind == "all_reduce":
+        # RS (halving) + AG (doubling): each moves size*(n-1)/n total
+        vol = 2 * size_bytes * (n - 1) / n
+        return 2 * rounds * alpha_ns + vol / link_GBps
+    if kind in ("all_gather", "reduce_scatter"):
+        vol = size_bytes * (n - 1) / n
+        return rounds * alpha_ns + vol / link_GBps
+    return collective_time_ring(kind, size_bytes, n, link_GBps, alpha_ns)
+
+
+def best_collective_time(kind: str, size_bytes: float, n: int,
+                         link_GBps: float, alpha_ns: float) -> Tuple[float, str]:
+    """Pick the faster of ring vs halving-doubling (what a tuned CCL does)."""
+    ring = collective_time_ring(kind, size_bytes, n, link_GBps, alpha_ns)
+    hd = collective_time_hd(kind, size_bytes, n, link_GBps, alpha_ns)
+    return (ring, "ring") if ring <= hd else (hd, "halving_doubling")

@@ -1,0 +1,242 @@
+"""GPU operations (paper §4.1.2).
+
+A *GPU operation* is a sequence of primitive Load-Store instructions denoting
+a meaningful functional unit (load a memory range, synchronize a workgroup,
+...).  Operations are expanded lazily, per wavefront, into instruction
+streams; data operations stripe their memory range across the workgroup's
+wavefronts (wavefront ``i`` handles cache lines ``i, i+W, i+2W, ...``), while
+control operations are issued by wavefront zero only (paper §4.1.3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional
+
+from .instructions import IKind, Instruction, MemRef, Space
+
+
+@dataclass
+class OpContext:
+    """Expansion-time parameters handed down by the GPU model."""
+    cache_line: int = 128          # bytes per Wavefront Request
+    unroll: int = 1                # loop-unrolling factor (intra-wavefront ILP)
+    reduce_cycles_per_line: int = 1
+
+
+class GpuOp:
+    """Base class.  Subclasses yield instructions for one wavefront."""
+
+    #: operations with no instruction stream handled specially by the CU
+    sync_kind: Optional[str] = None  # None | "nop" | "barrier"
+
+    def instructions(self, wf: int, num_wf: int, ctx: OpContext) -> Iterator[Instruction]:
+        return iter(())
+
+    def lines(self, wf: int, num_wf: int, ctx: OpContext) -> int:
+        """Number of cache lines wavefront ``wf`` is responsible for."""
+        return 0
+
+
+def _nlines(size: int, cache_line: int) -> int:
+    return (size + cache_line - 1) // cache_line
+
+
+@dataclass
+class LoadOp(GpuOp):
+    """Load a memory range into the CU (wrapper of ``Load``)."""
+    src: MemRef
+    size: int
+    tag: Optional[str] = None
+
+    def lines(self, wf: int, num_wf: int, ctx: OpContext) -> int:
+        total = _nlines(self.size, ctx.cache_line)
+        return (total // num_wf) + (1 if wf < total % num_wf else 0)
+
+    def instructions(self, wf: int, num_wf: int, ctx: OpContext) -> Iterator[Instruction]:
+        cl = ctx.cache_line
+        total = _nlines(self.size, cl)
+        for line in range(wf, total, num_wf):
+            addr = self.src.addr + line * cl
+            sz = min(cl, self.size - line * cl)
+            yield Instruction.load(MemRef(self.src.gpu, self.src.space, addr), sz, self.tag)
+
+
+@dataclass
+class StoreOp(GpuOp):
+    """Store a memory range from the CU (wrapper of ``Store``)."""
+    dst: MemRef
+    size: int
+    tag: Optional[str] = None
+
+    def lines(self, wf: int, num_wf: int, ctx: OpContext) -> int:
+        total = _nlines(self.size, ctx.cache_line)
+        return (total // num_wf) + (1 if wf < total % num_wf else 0)
+
+    def instructions(self, wf: int, num_wf: int, ctx: OpContext) -> Iterator[Instruction]:
+        cl = ctx.cache_line
+        total = _nlines(self.size, cl)
+        for line in range(wf, total, num_wf):
+            addr = self.dst.addr + line * cl
+            sz = min(cl, self.size - line * cl)
+            yield Instruction.store(MemRef(self.dst.gpu, self.dst.space, addr), sz, self.tag)
+
+
+@dataclass
+class MemcpyOp(GpuOp):
+    """Memory-to-memory copy: Load xU -> Waitcnt -> Store xU groups (Fig. 7).
+
+    ``unroll`` (from the context unless overridden) controls how many loads
+    are put in flight before the ``Waitcnt`` memory fence, modeling
+    intra-wavefront instruction-level parallelism.
+    """
+    src: MemRef
+    dst: MemRef
+    size: int
+    unroll: Optional[int] = None   # None -> ctx.unroll
+    tag: Optional[str] = None
+
+    def lines(self, wf: int, num_wf: int, ctx: OpContext) -> int:
+        total = _nlines(self.size, ctx.cache_line)
+        return (total // num_wf) + (1 if wf < total % num_wf else 0)
+
+    def instructions(self, wf: int, num_wf: int, ctx: OpContext) -> Iterator[Instruction]:
+        cl = ctx.cache_line
+        u = max(1, self.unroll if self.unroll is not None else ctx.unroll)
+        total = _nlines(self.size, cl)
+        my_lines = list(range(wf, total, num_wf))
+        for g in range(0, len(my_lines), u):
+            group = my_lines[g:g + u]
+            for line in group:
+                sz = min(cl, self.size - line * cl)
+                yield Instruction.load(
+                    MemRef(self.src.gpu, self.src.space, self.src.addr + line * cl),
+                    sz, self.tag)
+            # fence: all loads of this group must land before stores issue
+            yield Instruction.waitcnt(0, self.tag)
+            for line in group:
+                sz = min(cl, self.size - line * cl)
+                yield Instruction.store(
+                    MemRef(self.dst.gpu, self.dst.space, self.dst.addr + line * cl),
+                    sz, self.tag)
+
+
+@dataclass
+class SemaphoreAcquireOp(GpuOp):
+    """Acquire (wait on) a semaphore.  Wavefront zero only."""
+    sem: MemRef
+    expected: int = 1              # wait until value >= expected
+    tag: Optional[str] = None
+
+    def instructions(self, wf: int, num_wf: int, ctx: OpContext) -> Iterator[Instruction]:
+        if wf != 0:
+            return
+        ins = Instruction.sem_acquire(self.sem, self.tag)
+        ins.threshold = self.expected
+        yield ins
+
+
+@dataclass
+class SemaphoreReleaseOp(GpuOp):
+    """Release (signal) a semaphore.  Wavefront zero only."""
+    sem: MemRef
+    tag: Optional[str] = None
+
+    def instructions(self, wf: int, num_wf: int, ctx: OpContext) -> Iterator[Instruction]:
+        if wf != 0:
+            return
+        yield Instruction.sem_release(self.sem, self.tag)
+
+
+@dataclass
+class ReduceOp(GpuOp):
+    """Abstract arithmetic work occupying the CU for some cycles.
+
+    ``size`` bytes of reduction work are striped over wavefronts; each
+    wavefront occupies the CU for ``lines * reduce_cycles_per_line`` cycles.
+    Alternatively pass explicit ``cycles``.
+    """
+    size: int = 0
+    cycles: Optional[int] = None
+    tag: Optional[str] = None
+
+    def instructions(self, wf: int, num_wf: int, ctx: OpContext) -> Iterator[Instruction]:
+        if self.cycles is not None:
+            if wf == 0:
+                yield Instruction.reduce(self.cycles, self.tag)
+            return
+        total = _nlines(self.size, ctx.cache_line)
+        mine = (total // num_wf) + (1 if wf < total % num_wf else 0)
+        if mine > 0:
+            yield Instruction.reduce(mine * ctx.reduce_cycles_per_line, self.tag)
+
+
+@dataclass
+class FusedReduceOp(GpuOp):
+    """Load k sources (local or remote), reduce, store — pipelined in
+    ``unroll``-sized line groups so reduction overlaps data movement at
+    cache-line granularity (the paper's get-based Reduce-Scatter insight,
+    §5.2: "This enables compute-communication overlap at cache-line
+    granularity")."""
+    srcs: List[MemRef] = field(default_factory=list)
+    dst: Optional[MemRef] = None
+    size: int = 0
+    unroll: Optional[int] = None
+    tag: Optional[str] = None
+
+    def lines(self, wf: int, num_wf: int, ctx: OpContext) -> int:
+        total = _nlines(self.size, ctx.cache_line)
+        return (total // num_wf) + (1 if wf < total % num_wf else 0)
+
+    def instructions(self, wf: int, num_wf: int, ctx: OpContext) -> Iterator[Instruction]:
+        cl = ctx.cache_line
+        u = max(1, self.unroll if self.unroll is not None else ctx.unroll)
+        total = _nlines(self.size, cl)
+        my_lines = list(range(wf, total, num_wf))
+        k = len(self.srcs)
+        for g in range(0, len(my_lines), u):
+            group = my_lines[g:g + u]
+            for src in self.srcs:
+                for line in group:
+                    sz = min(cl, self.size - line * cl)
+                    yield Instruction.load(
+                        MemRef(src.gpu, src.space, src.addr + line * cl),
+                        sz, self.tag)
+            yield Instruction.waitcnt(0, self.tag)
+            # accumulate: (k-1) adds per line group, at least 1 cycle
+            yield Instruction.reduce(
+                max(1, len(group) * max(1, k - 1) * ctx.reduce_cycles_per_line),
+                self.tag)
+            if self.dst is not None:
+                for line in group:
+                    sz = min(cl, self.size - line * cl)
+                    yield Instruction.store(
+                        MemRef(self.dst.gpu, self.dst.space,
+                               self.dst.addr + line * cl), sz, self.tag)
+
+
+@dataclass
+class FenceOp(GpuOp):
+    """Standalone memory fence: wait until this wavefront's in-flight
+    load/store count drops to ``threshold`` (a bare ``Waitcnt``)."""
+    threshold: int = 0
+    tag: Optional[str] = None
+
+    def instructions(self, wf: int, num_wf: int, ctx: OpContext) -> Iterator[Instruction]:
+        yield Instruction.waitcnt(self.threshold, self.tag)
+
+
+@dataclass
+class NopOp(GpuOp):
+    """Intra-workgroup synchronization (``__syncthreads``): all wavefronts
+    of the workgroup must arrive before any proceeds (paper §4.4.2)."""
+    sync_kind = "nop"
+    tag: Optional[str] = None
+
+
+@dataclass
+class BarrierOp(GpuOp):
+    """Inter-workgroup synchronization: all workgroups of the kernel must
+    arrive before any proceeds."""
+    sync_kind = "barrier"
+    tag: Optional[str] = None

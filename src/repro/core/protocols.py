@@ -1,0 +1,64 @@
+"""Analytical LL vs Simple protocol model (paper §3.2, Fig. 4).
+
+Most CCLs ship two communication protocols:
+
+* **Simple** — uses 100% of link bandwidth but requires synchronization
+  before and after the transfer (buffer-ready / completion handshakes);
+* **LL (low latency)** — embeds flags in the data (no synchronization) at
+  the cost of 50% effective bandwidth.
+
+With the Hockney alpha-beta model the transfer times are::
+
+    T_simple(S) = sync_hops * alpha + S / beta
+    T_LL(S)     =             alpha + S / (beta / 2)
+
+so the crossover size is  S* = (sync_hops - 1) * alpha * beta — directly
+proportional to the modeled latency.  The paper's point: misestimating
+``alpha`` by 10x moves the protocol-choice boundary by 10x, so fine-grained
+latency modeling (ASTRA-sim 3.0's GPU model) is a prerequisite for drawing
+the right design conclusions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+GiB = float(1 << 30)
+
+
+@dataclass
+class ProtocolModel:
+    alpha_ns: float                 # one-way link latency
+    beta_GBps: float                # link bandwidth (bytes/ns)
+    sync_hops: int = 3              # latency units paid by Simple's handshake
+
+    def t_simple_ns(self, size: int) -> float:
+        return self.sync_hops * self.alpha_ns + size / self.beta_GBps
+
+    def t_ll_ns(self, size: int) -> float:
+        return self.alpha_ns + size / (self.beta_GBps / 2)
+
+    def bw_simple_GBps(self, size: int) -> float:
+        return size / self.t_simple_ns(size)
+
+    def bw_ll_GBps(self, size: int) -> float:
+        return size / self.t_ll_ns(size)
+
+    def crossover_bytes(self) -> float:
+        """Size above which Simple beats LL (exact model solution)."""
+        return (self.sync_hops - 1) * self.alpha_ns * self.beta_GBps
+
+    def crossover_pow2_bytes(self, lo: int = 1 << 10, hi: int = 1 << 30) -> int:
+        """First power-of-two transfer size where Simple outperforms LL
+        (how the paper reads Fig. 4 off a discrete sweep)."""
+        s = lo
+        while s <= hi:
+            if self.t_simple_ns(s) < self.t_ll_ns(s):
+                return s
+            s *= 2
+        return -1
+
+    def sweep(self, sizes: List[int]) -> List[Tuple[int, float, float]]:
+        return [(s, self.bw_ll_GBps(s), self.bw_simple_GBps(s))
+                for s in sizes]

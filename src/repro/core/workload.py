@@ -1,0 +1,123 @@
+"""Fine-grained workload representation (paper §4.1.3–4.1.4).
+
+Kernel  = set of workgroups, each mapped to one CU, run in parallel.
+Workgroup = sequence of GPU operations executed by ``num_wavefronts``
+            lock-step wavefronts.
+Wavefront = per-wavefront instruction stream state (PC over the op list).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, List, Optional
+
+from .instructions import Instruction
+from .operations import GpuOp, OpContext
+
+_kernel_ids = itertools.count()
+
+
+@dataclass
+class Workgroup:
+    ops: List[GpuOp]
+    num_wavefronts: int = 4
+    name: str = ""
+
+    def total_ops(self) -> int:
+        return len(self.ops)
+
+
+@dataclass
+class Kernel:
+    """A GPU kernel: workgroups dispatched in parallel onto CUs."""
+    workgroups: List[Workgroup]
+    name: str = ""
+    gpu: int = 0                         # rank this kernel runs on
+    kid: int = field(default_factory=lambda: next(_kernel_ids))
+    on_done: Optional[Callable[["Kernel", float], None]] = None
+
+    # filled by the GPU model
+    start_ns: float = -1.0
+    end_ns: float = -1.0
+
+    def __post_init__(self) -> None:
+        if not self.name:
+            self.name = f"kernel{self.kid}"
+
+    @property
+    def duration_ns(self) -> float:
+        return self.end_ns - self.start_ns
+
+
+class WavefrontState:
+    """Execution cursor of one wavefront: iterates the workgroup's op list,
+    expanding each op into its instruction stream lazily."""
+
+    __slots__ = ("wf", "num_wf", "wg", "ctx", "op_idx", "_instrs",
+                 "outstanding", "waiting", "done", "current_op", "fetched",
+                 "sem_seen", "owner")
+
+    def __init__(self, wf: int, wg: Workgroup, ctx: OpContext):
+        self.wf = wf
+        self.num_wf = wg.num_wavefronts
+        self.wg = wg
+        self.ctx = ctx
+        self.op_idx = 0
+        self._instrs: Optional[Iterator[Instruction]] = None
+        self.outstanding = 0            # this wavefront's in-flight mem ops
+        self.waiting: Optional[str] = None  # None|"waitcnt"|"sem"|"sync"|"mem"
+        self.done = False
+        self.current_op: Optional[GpuOp] = None
+        self.fetched: Optional[Instruction] = None  # decoded but un-issued
+        self.sem_seen: int = 0          # semaphore value observed by poll
+        self.owner = None               # _WGExec backlink (set by the CU)
+
+    def retired(self) -> bool:
+        """Instruction stream exhausted AND all memory traffic landed."""
+        return self.done and self.outstanding == 0
+
+    def peek_sync(self) -> Optional[str]:
+        """If the next op is a sync op (no instructions), return its kind."""
+        if self.fetched is None and self.op_idx < len(self.wg.ops):
+            op = self.wg.ops[self.op_idx]
+            if self._instrs is None and op.sync_kind is not None:
+                return op.sync_kind
+        return None
+
+    def advance_sync(self) -> None:
+        """Consume a sync op (called when the barrier resolves)."""
+        self.op_idx += 1
+        self._instrs = None
+        self.current_op = None
+
+    def fetch(self) -> Optional[Instruction]:
+        """Return the next un-issued instruction without losing it.
+
+        The CU calls ``fetch()`` to decide issuability; once the instruction
+        is actually issued it must call ``consume()``.  ``None`` means the
+        wavefront is at a sync op (``peek_sync`` tells which) or done.
+        """
+        if self.fetched is None:
+            self.fetched = self._pull()
+        return self.fetched
+
+    def consume(self) -> None:
+        self.fetched = None
+
+    def _pull(self) -> Optional[Instruction]:
+        while self.op_idx < len(self.wg.ops):
+            op = self.wg.ops[self.op_idx]
+            if op.sync_kind is not None:
+                return None                      # CU must resolve the sync
+            if self._instrs is None:
+                self.current_op = op
+                self._instrs = op.instructions(self.wf, self.num_wf, self.ctx)
+            nxt = next(self._instrs, None)
+            if nxt is not None:
+                return nxt
+            self.op_idx += 1
+            self._instrs = None
+            self.current_op = None
+        self.done = True
+        return None

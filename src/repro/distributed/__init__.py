@@ -1,0 +1,4 @@
+from . import hints, sharding
+from .checkpoint import CheckpointManager
+
+__all__ = ["hints", "sharding", "CheckpointManager"]

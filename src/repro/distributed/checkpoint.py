@@ -1,0 +1,137 @@
+"""Fault-tolerant checkpointing with elastic restart (DESIGN.md §6).
+
+* sharded save: each host writes its local shards as npz + a JSON manifest
+  (here: single-host, full tree) — atomic via tmp + rename;
+* keep-N rotation, crash-consistent (a partial write never shadows the
+  previous checkpoint);
+* **elastic restore**: the manifest records only the *global* array shapes,
+  so a checkpoint written under one mesh restores onto any other mesh —
+  resharding happens on load via jax.device_put with the new sharding.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        out = {}
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], prefix + (k,)))
+        return out
+    if isinstance(tree, (list, tuple)):
+        out = {}
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, prefix + (str(i),)))
+        return out
+    return {"/".join(prefix): tree}
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+class CheckpointManager:
+    """save(step, tree) / restore(step|latest, shardings) with keep-N."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree) -> str:
+        flat = _flatten(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+            return self._path(step)
+        return self._write(step, host)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def _write(self, step: int, host: Dict[str, np.ndarray]) -> str:
+        final = self._path(step)
+        tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            manifest = {
+                "step": step,
+                "arrays": {k: {"shape": list(v.shape),
+                               "dtype": str(v.dtype)}
+                           for k, v in host.items()},
+                "format": 1,
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)          # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._rotate()
+        return final
+
+    def _rotate(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._path(s), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, shardings=None):
+        """Load a checkpoint; ``shardings`` (same pytree structure, or None)
+        reshard onto the *current* mesh — elastic restart."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self._path(step)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat = {k: data[k] for k in data.files}
+        tree = _unflatten(flat)
+        if shardings is not None:
+            flat_sh = _flatten(shardings)
+            tree = _unflatten({
+                k: jax.device_put(v, flat_sh[k]) if k in flat_sh else v
+                for k, v in flat.items()})
+        return step, tree

@@ -1,0 +1,6 @@
+from . import ops, ref
+from .flash_attention import flash_attention
+from .rg_lru import rg_lru_scan
+from .rwkv6_wkv import wkv6
+
+__all__ = ["ops", "ref", "flash_attention", "wkv6", "rg_lru_scan"]

@@ -1,0 +1,63 @@
+"""jit-ready wrappers dispatching Pallas kernels vs jnp references.
+
+On TPU the Pallas kernels run natively; on CPU the pure-jnp reference path
+is used (or the kernels in interpret mode when ``force="interpret"`` —
+that's how the test suite validates kernel bodies without hardware).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .rg_lru import rg_lru_scan as _rg_lru
+from .rwkv6_wkv import wkv6 as _wkv6
+
+
+def _use_pallas(force: Optional[str]) -> Optional[bool]:
+    if force == "pallas":
+        return True
+    if force == "interpret":
+        return None          # pallas with interpret=True
+    if force == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal=True, window=0, kv_len=None,
+              block_q=128, block_k=128, force: Optional[str] = None):
+    """Model-layout wrapper: q (B,T,H,D), kv (B,S,Kh,D) -> (B,T,H,D)."""
+    mode = _use_pallas(force)
+    if mode is False:
+        return ref.attention_ref(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3),
+                                 causal=causal, window=window,
+                                 kv_len=kv_len).transpose(0, 2, 1, 3)
+    out = _flash(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                 v.transpose(0, 2, 1, 3), causal=causal, window=window,
+                 kv_len=kv_len, block_q=block_q, block_k=block_k,
+                 interpret=(mode is None))
+    return out.transpose(0, 2, 1, 3)
+
+
+def wkv6(r, k, v, logw, u, *, chunk=32, force: Optional[str] = None):
+    """(B,H,T,N) in/out."""
+    mode = _use_pallas(force)
+    if mode is False:
+        return ref.wkv6_ref(r, k, v, logw, u)
+    return _wkv6(r, k, v, logw, u, chunk=chunk, interpret=(mode is None))
+
+
+def rg_lru_scan(a, b, h0, *, block_t=128, block_r=512,
+                force: Optional[str] = None):
+    """(B,T,R) in/out."""
+    mode = _use_pallas(force)
+    if mode is False:
+        return ref.rg_lru_ref(a, b, h0)
+    return _rg_lru(a, b, h0, block_t=block_t, block_r=block_r,
+                   interpret=(mode is None))

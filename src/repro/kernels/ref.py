@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+The oracles are deliberately the SIMPLEST possible formulations (direct
+masked softmax; step-by-step recurrences via lax.scan) — independent of the
+blockwise/chunked math used by both the kernels and the model code, so a
+bug in the clever form cannot hide in the reference.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, kv_len=None):
+    """q: (B, H, T, D); k, v: (B, Kh, S, D) -> (B, H, T, D)."""
+    B, H, T, D = q.shape
+    Kh, S = k.shape[1], k.shape[2]
+    G = H // Kh
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(D)
+    tpos = jnp.arange(T)[:, None]
+    spos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= spos <= tpos
+    if window:
+        mask &= spos > tpos - window
+    if kv_len is not None:
+        mask &= spos < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p,
+                      vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """Sequential RWKV-6 recurrence.  r,k,v,logw: (B,H,T,N); u: (H,N)."""
+    B, H, T, N = r.shape
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs          # (B, H, N)
+        kv = jnp.einsum("bhn,bhz->bhnz", kt, vt)
+        y = jnp.einsum("bhn,bhnz->bhz", rt, S + u[None, :, :, None] * kv)
+        S = S * jnp.exp(wt)[..., None] + kv
+        return S, y
+
+    xs = tuple(a.transpose(2, 0, 1, 3).astype(jnp.float32)
+               for a in (r, k, v, logw))
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype)     # (B, H, T, N)
+
+
+def rg_lru_ref(a, b, h0):
+    """Sequential h_t = a_t h_{t-1} + b_t.  a, b: (B,T,R); h0: (B,R)."""
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    xs = (a.transpose(1, 0, 2).astype(jnp.float32),
+          b.transpose(1, 0, 2).astype(jnp.float32))
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return hs.transpose(1, 0, 2).astype(a.dtype)

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for the RG-LRU gated linear recurrence (Griffin).
+
+    h_t = a_t * h_{t-1} + b_t        (elementwise in the feature dim)
+
+Feature dim tiled over a parallel grid axis (lane-aligned blocks of 128);
+time tiled over a sequential grid axis with the running h carried in VMEM
+scratch; within a time block a ``fori_loop`` steps the recurrence (the op
+is bandwidth-bound, so the VPU loop is fine — the win is keeping h
+resident in VMEM instead of round-tripping HBM each step).
+
+Layout: a, b: (B, T, R) -> h: (B, T, R).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _kernel(a_ref, b_ref, h0_ref, y_ref, h_ref, *, block_t: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)     # (block_t, block_r)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):                      # h: (1, block_r)
+        at = jax.lax.dynamic_slice_in_dim(a, t, 1, axis=0)
+        bt = jax.lax.dynamic_slice_in_dim(b, t, 1, axis=0)
+        h = at * h + bt
+        y_ref[0, pl.ds(t, 1), :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, step, h_ref[...])
+    h_ref[...] = h
+
+
+def rg_lru_scan(a, b, h0, *, block_t: int = 128, block_r: int = 512,
+                interpret: bool = False):
+    """a, b: (B, T, R); h0: (B, R) -> h: (B, T, R) (all steps' states)."""
+    B, T, R = a.shape
+    block_t = min(block_t, T)
+    block_r = min(block_r, R)
+    assert T % block_t == 0 and R % block_r == 0, (T, R, block_t, block_r)
+    grid = (B, R // block_r, T // block_t)
+    spec = pl.BlockSpec((1, block_t, block_r),
+                        lambda bb, ri, ti: (bb, ti, ri))
+    h0_spec = pl.BlockSpec((1, block_r), lambda bb, ri, ti: (bb, ri))
+    scratch = [_VMEM((1, block_r), jnp.float32)] if _VMEM is not None else []
+    params = {}
+    if pltpu is not None and not interpret:
+        try:
+            params["compiler_params"] = pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary"))
+        except Exception:
+            pass
+    kern = functools.partial(_kernel, block_t=block_t)
+    return pl.pallas_call(
+        kern, grid=grid,
+        in_specs=[spec, spec, h0_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, R), a.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **params,
+    )(a, b, h0)

@@ -1,0 +1,97 @@
+"""End-to-end training driver.
+
+CPU-runnable (reduced configs) and production-shaped: sharded state, data
+pipeline with prefetch + deterministic restart, checkpointing with keep-N
+rotation, elastic restore onto a different mesh, optional int8 gradient
+compression.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ShapeConfig, get, reduced
+from ..data.pipeline import PipelineConfig, TokenPipeline
+from ..distributed import hints
+from ..distributed import sharding as shard
+from ..distributed.checkpoint import CheckpointManager
+from ..models import api
+from ..optim.adamw import AdamWConfig
+from ..train.step import init_train_state, make_train_step
+from .mesh import make_cpu_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+
+    mesh = make_cpu_mesh(data=len(jax.devices()))
+    hints.set_mesh(mesh)
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(lr=args.lr),
+                                      compress_grads=args.compress_grads))
+
+    state = init_train_state(jax.random.PRNGKey(0), cfg,
+                             compress_grads=args.compress_grads)
+    start_step = 0
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        start_step, state = ckpt.restore()
+        print(f"resumed from step {start_step}")
+
+    pipe = TokenPipeline(cfg, shape, PipelineConfig(prefetch=2))
+    pipe.start(from_step=start_step)
+    t0 = time.time()
+    losses = []
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.get().items()}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(json.dumps({"step": step,
+                              "loss": round(losses[-1], 4),
+                              "grad_norm":
+                                  round(float(metrics["grad_norm"]), 3),
+                              "tok_per_s": round(
+                                  shape.tokens * (step - start_step + 1)
+                                  / max(dt, 1e-9))}))
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, state)
+    pipe.stop()
+    if ckpt:
+        ckpt.save(args.steps, state)
+        ckpt.wait()
+    hints.set_mesh(None)
+    print(json.dumps({"final_loss": losses[-1],
+                      "initial_loss": losses[0],
+                      "improved": losses[-1] < losses[0]}))
+    return 0 if losses[-1] < losses[0] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

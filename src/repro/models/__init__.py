@@ -1,0 +1,3 @@
+from . import api, encdec, griffin, layers, rwkv6, transformer
+
+__all__ = ["api", "layers", "transformer", "rwkv6", "griffin", "encdec"]

@@ -1,0 +1,177 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+The audio frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed frame embeddings (B, S_src, d_model).  Encoder: bidirectional
+self-attention stack.  Decoder: causal self-attention + cross-attention to
+the encoder memory.  Decode caches both the self-attn KV and the
+(precomputed) per-layer cross-attn K/V of the memory.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _enc_layer_init(key, cfg):
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.zeros((cfg.d_model,), dt),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "attn": L.gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, dt),
+            "mlp": L.glu_mlp_init(k2, cfg.d_model, cfg.d_ff, dt, cfg.act)}
+
+
+def _dec_layer_init(key, cfg):
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = _enc_layer_init(k1, cfg)
+    p["ln_x"] = jnp.zeros((cfg.d_model,), dt)
+    p["xattn"] = L.gqa_init(k3, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.hd, dt)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    ke, k1, k2, kh = jax.random.split(key, 4)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model, dt),
+        "enc": jax.vmap(lambda k: _enc_layer_init(k, cfg))(
+            jax.random.split(k1, cfg.enc_layers)),
+        "dec": jax.vmap(lambda k: _dec_layer_init(k, cfg))(
+            jax.random.split(k2, cfg.dec_layers)),
+        "norm_enc": jnp.zeros((cfg.d_model,), dt),
+        "norm_f": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, dt),
+    }
+
+
+def encode(params: Params, cfg: ArchConfig, frames: jnp.ndarray, *,
+           remat: bool = True) -> jnp.ndarray:
+    """frames: (B, S_src, D) stub embeddings -> encoder memory."""
+    S = frames.shape[1]
+    positions = jnp.arange(S)
+
+    def body(x, pl):
+        h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+        q, k, v = L.gqa_project(h, pl["attn"], cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, positions, cfg.rope_theta)
+        o = L.attention(q, k, v, causal=False)
+        x = x + o.reshape(*o.shape[:2], -1) @ pl["attn"]["wo"]
+        h2 = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+        return x + L.glu_mlp(h2, pl["mlp"], cfg.act), None
+
+    fn = jax.checkpoint(body,
+                        policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    x, _ = jax.lax.scan(fn, frames.astype(_dtype(cfg)), params["enc"])
+    return L.rmsnorm(x, params["norm_enc"], cfg.norm_eps)
+
+
+def _dec_layer(pl, x, cfg, positions, memory=None, mem_kv=None,
+               self_cache=None, pos=None):
+    """One decoder layer; returns (x, new self-kv segment or cache)."""
+    h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+    q, k, v = L.gqa_project(h, pl["attn"], cfg.n_heads, cfg.n_kv_heads,
+                            cfg.hd, positions, cfg.rope_theta)
+    if self_cache is not None:
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            self_cache[0], k.astype(self_cache[0].dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            self_cache[1], v.astype(self_cache[1].dtype), pos, axis=1)
+        o = L.attention(q, kc, vc, causal=False, q_offset=pos,
+                        kv_len=pos + 1)
+        new_kv = (kc, vc)
+    else:
+        o = L.attention(q, k, v, causal=True)
+        new_kv = (k, v)
+    x = x + o.reshape(*o.shape[:2], -1) @ pl["attn"]["wo"]
+    # cross attention to the encoder memory
+    hx = L.rmsnorm(x, pl["ln_x"], cfg.norm_eps)
+    B, T, _ = hx.shape
+    qx = (hx @ pl["xattn"]["wq"]).reshape(B, T, cfg.n_heads, cfg.hd)
+    if mem_kv is not None:
+        mk, mv = mem_kv
+    else:
+        Sm = memory.shape[1]
+        mk = (memory @ pl["xattn"]["wk"]).reshape(B, Sm, cfg.n_kv_heads,
+                                                  cfg.hd)
+        mv = (memory @ pl["xattn"]["wv"]).reshape(B, Sm, cfg.n_kv_heads,
+                                                  cfg.hd)
+    ox = L.attention(qx, mk, mv, causal=False)
+    x = x + ox.reshape(B, T, -1) @ pl["xattn"]["wo"]
+    h2 = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+    return x + L.glu_mlp(h2, pl["mlp"], cfg.act), new_kv, (mk, mv)
+
+
+def decode_train(params: Params, cfg: ArchConfig, memory, tokens, *,
+                 remat: bool = True, collect_cache: bool = False):
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, pl):
+        x, kv, mkv = _dec_layer(pl, x, cfg, positions, memory=memory)
+        return x, (kv, mkv) if collect_cache else None
+
+    fn = jax.checkpoint(body,
+                        policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    x, caches = jax.lax.scan(fn, x, params["dec"])
+    return L.rmsnorm(x, params["norm_f"], cfg.norm_eps), caches
+
+
+def forward_train(params, cfg, frames, tokens, remat=True):
+    memory = encode(params, cfg, frames, remat=remat)
+    h, _ = decode_train(params, cfg, memory, tokens, remat=remat)
+    return h
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, mem_len: int):
+    dt = _dtype(cfg)
+    kv = (cfg.dec_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    mem = (cfg.dec_layers, batch, mem_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+            "mk": jnp.zeros(mem, dt), "mv": jnp.zeros(mem, dt)}
+
+
+def prefill(params, cfg, frames, tokens):
+    """Encode the source and run the decoder prompt; returns cache."""
+    memory = encode(params, cfg, frames, remat=False)
+    h, caches = decode_train(params, cfg, memory, tokens, remat=False,
+                             collect_cache=True)
+    (k, v), (mk, mv) = caches
+    logits = h[:, -1:] @ params["lm_head"]
+    return {"k": k, "v": v, "mk": mk, "mv": mv}, logits
+
+
+def decode_step(params, cfg, token, pos, cache):
+    x = params["embed"][token]
+    positions = pos + jnp.arange(1)
+
+    def body(x, layer_in):
+        pl, kc, vc, mk, mv = layer_in
+        x, (kn, vn), _ = _dec_layer(pl, x, cfg, positions,
+                                    mem_kv=(mk, mv),
+                                    self_cache=(kc, vc), pos=pos)
+        return x, (kn, vn)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["mk"],
+                  cache["mv"]))
+    x = L.rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    return x @ params["lm_head"], {"k": k_new, "v": v_new,
+                                   "mk": cache["mk"], "mv": cache["mv"]}

@@ -1,0 +1,319 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local
+attention, pattern (rec, rec, attn) [arXiv:2402.19427].
+
+RG-LRU:  a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t)),  c = 8
+         h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(W_i x_t) * x_t)
+computed in parallel over the sequence with ``jax.lax.associative_scan``
+(prefill/train) or stepwise (decode).  The recurrent block is
+conv1d(4, causal, depthwise) -> RG-LRU on one branch, GeLU on the other,
+multiplied and projected back (Griffin Fig. 2).
+
+38 layers = 12 x (rec, rec, attn) + (rec, rec): executed as a scan over 12
+stacked macro-blocks plus a tail scan over the 2 leftover rec layers.
+Decode state: per rec layer (h, conv tail), per attn layer a ring-buffer KV
+cache of ``window`` entries — O(window) in context length (long_500k ✓).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers as L
+from ..distributed import hints
+
+Params = Dict[str, Any]
+C_RGLRU = 8.0
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + recurrent block
+# ---------------------------------------------------------------------------
+
+def rg_lru(x: jnp.ndarray, p: Params, h0: jnp.ndarray
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,T,R); h0: (B,R).  Parallel linear recurrence."""
+    with jax.named_scope("rg_lru_kernel"):
+        return _rg_lru_impl(x, p, h0)
+
+
+def _rg_lru_impl(x, p, h0):
+    xf = x.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r_gate
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_gate * xf)
+    # h_t = a_t h_{t-1} + b_t  via associative scan on (a, b) pairs
+    b = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def comb(u, v):
+        return (u[0] * v[0], v[0] * u[1] + v[1])
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(x: jnp.ndarray, p: Params, h: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,R) one step."""
+    xf = x.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32))
+    a = jnp.exp(-C_RGLRU * jax.nn.softplus(p["lam"].astype(jnp.float32))
+                * r_gate)
+    h = a * h + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * (i_gate * xf)
+    return h.astype(x.dtype), h
+
+
+def conv1d_causal(x: jnp.ndarray, w: jnp.ndarray, tail: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv, width K.  x: (B,T,R); w: (K,R);
+    tail: (B,K-1,R) — the previous K-1 inputs."""
+    K = w.shape[0]
+    xx = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xx[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out, xx[:, -(K - 1):]
+
+
+def rec_block_init(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    d, R = cfg.d_model, cfg.rec_d_rnn
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.zeros((d,), dt),
+        "w_x": L.dense_init(ks[0], d, R, dt),       # recurrent branch in
+        "w_y": L.dense_init(ks[1], d, R, dt),       # gate branch in
+        "w_out": L.dense_init(ks[2], R, d, dt),
+        "conv_w": (jax.random.normal(ks[3], (cfg.rec_conv, R)) * 0.1
+                   ).astype(dt),
+        "w_a": L.dense_init(ks[4], R, R, dt),
+        "w_i": L.dense_init(ks[5], R, R, dt),
+        "lam": jnp.ones((R,), jnp.float32) * 0.7,
+        "ln2": jnp.zeros((d,), dt),
+        "mlp": L.glu_mlp_init(jax.random.fold_in(key, 7), d, cfg.d_ff, dt, cfg.act),
+    }
+
+
+def rec_block_fwd(p: Params, x, cfg: ArchConfig, st: Dict
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    x = hints.constrain(x, "dp", None, None)
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ p["w_y"])
+    u = h @ p["w_x"]
+    gate = hints.constrain(gate, "dp", None, "model")
+    u = hints.constrain(u, "dp", None, "model")
+    if x.shape[1] == 1:
+        K = p["conv_w"].shape[0]
+        xx = jnp.concatenate([st["conv"].astype(u.dtype), u], axis=1)  # (B,K,R)
+        c = sum(xx[:, i] * p["conv_w"][i] for i in range(K))           # (B,R)
+        new_tail = xx[:, 1:]
+        y, hstate = rg_lru_step(c, p, st["h"])
+        y = y[:, None]
+    else:
+        c, new_tail = conv1d_causal(u, p["conv_w"], st["conv"])
+        y, hstate = rg_lru(c, p, st["h"])
+    x = x + (y * gate) @ p["w_out"]
+    h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.glu_mlp(h2, p["mlp"], cfg.act)
+    return x, {"h": hstate, "conv": new_tail}
+
+
+def rec_state_init(cfg: ArchConfig, batch: int, n: int) -> Dict:
+    R = cfg.rec_d_rnn
+    dt = _dtype(cfg)
+    return {"h": jnp.zeros((n, batch, R), jnp.float32),
+            "conv": jnp.zeros((n, batch, cfg.rec_conv - 1, R), dt)}
+
+
+# ---------------------------------------------------------------------------
+# local-attention block
+# ---------------------------------------------------------------------------
+
+def attn_block_init(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "attn": L.gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.hd, dt),
+        "mlp": L.glu_mlp_init(k2, cfg.d_model, cfg.d_ff, dt, cfg.act),
+    }
+
+
+def attn_block_fwd(p: Params, x, cfg: ArchConfig, positions,
+                   cache: Optional[Dict] = None, pos=None):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = L.gqa_project(h, p["attn"], cfg.n_heads, cfg.n_kv_heads,
+                            cfg.hd, positions, cfg.rope_theta)
+    if cache is None:
+        o = L.attention(q, k, v, causal=True, window=cfg.window)
+        # build the ring-buffer window cache from the last W positions so a
+        # following decode_step sees exactly the reachable keys
+        W = cfg.window
+        S = k.shape[1]
+        take = min(W, S)
+        slots = (jnp.arange(S - take, S) % W)
+        B = k.shape[0]
+        kc0 = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(
+            k[:, -take:])
+        vc0 = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(
+            v[:, -take:])
+        new_cache = {"k": kc0, "v": vc0}
+    else:
+        # ring-buffer window cache: slot = pos % window
+        W = cfg.window
+        slot = pos % W
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        # decode: attend to the window's entries; ring positions
+        ring_pos = ring_positions(pos, W)
+        o = attention_ring(q, kc, vc, ring_pos, pos)
+        new_cache = {"k": kc, "v": vc}
+    x = x + o.reshape(*o.shape[:2], -1) @ p["attn"]["wo"]
+    h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + L.glu_mlp(h2, p["mlp"], cfg.act), new_cache
+
+
+def ring_positions(pos, W: int):
+    """Absolute position stored in each ring slot after writing at
+    ``pos % W``: slot i holds position  pos - ((pos % W - i) mod W)."""
+    i = jnp.arange(W)
+    return pos - jnp.mod(pos % W - i, W)
+
+
+def attention_ring(q, kc, vc, ring_pos, pos):
+    """Decode attention over a ring-buffer window cache.
+
+    q: (B,1,H,Dh); kc/vc: (B,W,Kh,Dh); ring_pos: (W,) absolute positions
+    (<= pos valid, > pos means not yet written)."""
+    B, T, H, Dh = q.shape
+    Kh = kc.shape[2]
+    G = H // Kh
+    qs = (q / math.sqrt(Dh)).reshape(B, T, Kh, G, Dh)
+    s = jnp.einsum("btkgd,bskd->bkgts", qs, kc,
+                   preferred_element_type=jnp.float32)
+    valid = (ring_pos >= 0) & (ring_pos <= pos)
+    s = jnp.where(valid[None, None, None, None, :], s, L.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", p.astype(vc.dtype), vc)
+    return o.reshape(B, T, H, Dh)
+
+
+def attn_state_init(cfg: ArchConfig, batch: int, n: int) -> Dict:
+    dt = _dtype(cfg)
+    shape = (n, batch, cfg.window, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _counts(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(#macro blocks, #tail rec layers) for pattern (rec, rec, attn)."""
+    nmacro = cfg.n_layers // 3
+    tail = cfg.n_layers - 3 * nmacro
+    return nmacro, tail, 2 * nmacro + tail   # last = total rec layers
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    ke, k1, k2, k3, kh = jax.random.split(key, 5)
+    nmacro, tail, _ = _counts(cfg)
+
+    def macro_init(k):
+        ka, kb, kc = jax.random.split(k, 3)
+        return {"rec1": rec_block_init(ka, cfg),
+                "rec2": rec_block_init(kb, cfg),
+                "attn": attn_block_init(kc, cfg)}
+
+    p = {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model, dt),
+        "macro": jax.vmap(macro_init)(jax.random.split(k1, nmacro)),
+        "norm_f": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, dt),
+    }
+    if tail:
+        p["tail"] = jax.vmap(lambda k: rec_block_init(k, cfg))(
+            jax.random.split(k2, tail))
+    return p
+
+
+def init_state(cfg: ArchConfig, batch: int) -> Dict:
+    nmacro, tail, _ = _counts(cfg)
+    st = {
+        "rec1": rec_state_init(cfg, batch, nmacro),
+        "rec2": rec_state_init(cfg, batch, nmacro),
+        "attn": attn_state_init(cfg, batch, nmacro),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if tail:
+        st["tail"] = rec_state_init(cfg, batch, tail)
+    return st
+
+
+def forward(params: Params, cfg: ArchConfig, tokens, state=None, *,
+            remat: bool = True, decode_pos=None):
+    B, S = tokens.shape
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), _dtype(cfg))
+    if state is None:
+        state = init_state(cfg, B)
+    decode = decode_pos is not None
+    positions = (decode_pos + jnp.arange(S)) if decode else jnp.arange(S)
+
+    def macro_body(x, layer_in):
+        pl, s1, s2, sa = layer_in
+        x, s1n = rec_block_fwd(pl["rec1"], x, cfg, s1)
+        x, s2n = rec_block_fwd(pl["rec2"], x, cfg, s2)
+        if decode:
+            x, can = attn_block_fwd(pl["attn"], x, cfg, positions,
+                                    cache=sa, pos=decode_pos)
+        else:
+            x, can = attn_block_fwd(pl["attn"], x, cfg, positions)
+        return x, (s1n, s2n, can)
+
+    fn = jax.checkpoint(macro_body,
+                        policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else macro_body
+    x, (s1, s2, sa) = jax.lax.scan(
+        fn, x, (params["macro"], state["rec1"], state["rec2"],
+                state["attn"]))
+    new_state = {"rec1": s1, "rec2": s2, "attn": sa,
+                 "pos": state["pos"] + S}
+    if "tail" in params:
+        def tail_body(x, layer_in):
+            pl, st = layer_in
+            x, stn = rec_block_fwd(pl, x, cfg, st)
+            return x, stn
+        tfn = jax.checkpoint(tail_body,
+                             policy=jax.checkpoint_policies.nothing_saveable
+                             ) if remat else tail_body
+        x, st_t = jax.lax.scan(tfn, x, (params["tail"], state["tail"]))
+        new_state["tail"] = st_t
+    x = L.rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    return x, new_state
+
+
+def prefill(params, cfg, tokens, patches=None):
+    """Prefill via forward; the ring-buffer window caches are built from
+    the final ``window`` positions inside attn_block_fwd."""
+    x, st = forward(params, cfg, tokens, remat=False)
+    return st, x[:, -1:] @ params["lm_head"]
+
+
+def decode_step(params, cfg, token, pos, state):
+    x, st = forward(params, cfg, token, state, remat=False, decode_pos=pos)
+    return x @ params["lm_head"], st

@@ -1,0 +1,280 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay) [arXiv:2404.05892].
+
+Per head of size N: state S in R^{NxN};
+    y_t = (S_{t-1} + (u * k_t) v_t^T)^T r_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(ww_t))
+with token-shift data-dependent mixing (LoRA) for r/k/v/w/g and a gated
+GroupNorm output, plus the squared-ReLU channel-mix FFN.
+
+Prefill/train uses the **chunked parallel form** (the contract of the
+Pallas kernel in src/repro/kernels/rwkv6_wkv.py): within a chunk all decay
+factors appear as exp(c_i - c_j) with i >= j, which is <= 1 — numerically
+safe; across chunks the state is carried with exp(c_end - c_j) <= 1.
+Decode carries (S, shift states) — O(1) memory in context length.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers as L
+from ..distributed import hints
+
+Params = Dict[str, Any]
+LORA = 32
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_layer(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    H = cfg.n_heads
+    N = cfg.hd
+    s = 1.0 / math.sqrt(d)
+    return {
+        "ln1": jnp.zeros((d,), dt),
+        "ln2": jnp.zeros((d,), dt),
+        # token-shift mixing params (maa = "mix with shifted")
+        "maa_x": jnp.zeros((d,), dt),
+        "maa_rkvwg": jnp.zeros((5, d), dt),
+        "maa_w1": (jax.random.normal(ks[0], (d, 5 * LORA)) * s).astype(dt),
+        "maa_w2": (jax.random.normal(ks[1], (5, LORA, d)) * 0.01).astype(dt),
+        # decay base + LoRA
+        "decay": jnp.zeros((d,), jnp.float32) - 4.0,
+        "dec_w1": (jax.random.normal(ks[2], (d, 2 * LORA)) * s).astype(dt),
+        "dec_w2": (jax.random.normal(ks[3], (2 * LORA, d)) * 0.01).astype(dt),
+        "bonus": jnp.zeros((H, N), jnp.float32) + 0.5,        # u
+        "wr": L.dense_init(ks[4], d, d, dt),
+        "wk": L.dense_init(ks[5], d, d, dt),
+        "wv": L.dense_init(ks[6], d, d, dt),
+        "wg": L.dense_init(ks[7], d, d, dt),
+        "wo": L.dense_init(ks[8], d, d, dt),
+        "gn": jnp.ones((d,), dt),                             # group norm
+        # channel mix
+        "cm_mix_k": jnp.zeros((d,), dt),
+        "cm_mix_r": jnp.zeros((d,), dt),
+        "cm_k": L.dense_init(ks[9], d, cfg.d_ff, dt),
+        "cm_v": L.dense_init(ks[10], cfg.d_ff, d, dt),
+        "cm_r": L.dense_init(ks[11], d, d, dt),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    ke, kl, kh = jax.random.split(key, 3)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(
+        jax.random.split(kl, cfg.n_layers))
+    return {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model, dt),
+        "layers": stacked,
+        "norm_f": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core (chunked parallel form — reference for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def wkv6_chunked(r, k, v, logw, u, state, chunk: int = 32):
+    """r,k,v: (B,T,H,N); logw: (B,T,H,N) (log decay, < 0); u: (H,N);
+    state: (B,H,N,N).  Returns (y (B,T,H,N), new state).
+    """
+    with jax.named_scope("wkv6_kernel"):
+        return _wkv6_chunked_impl(r, k, v, logw, u, state, chunk)
+
+
+def _wkv6_chunked_impl(r, k, v, logw, u, state, chunk: int = 32):
+    B, T, H, N = r.shape
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        # pad tail with k=0 (no state contribution), logw=0 (w=1: state
+        # passes through unchanged); padded outputs are sliced off below
+        zeros = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(a, zeros) for a in (r, k, v))
+        logw = jnp.pad(logw, zeros)
+        T_out, T = T, T + pad
+    else:
+        T_out = T
+    nc = T // chunk
+    rc = r.reshape(B, nc, chunk, H, N)
+    kc = k.reshape(B, nc, chunk, H, N)
+    vc = v.reshape(B, nc, chunk, H, N)
+    wc = logw.reshape(B, nc, chunk, H, N).astype(jnp.float32)
+
+    def chunk_step(S, xs):
+        rch, kch, vch, wch = xs                 # (B, C, H, N)
+        S = hints.constrain(S, "dp", "model", None, None)
+        c = jnp.cumsum(wch, axis=1)             # inclusive logs
+        c_prev = c - wch                        # exclusive
+        c_end = c[:, -1:]                       # (B,1,H,N)
+        # intra-chunk: scores[t,s] = sum_n r[t]k[s]exp(c_prev[t]-c[s]), s<t
+        rt = rch.astype(jnp.float32) * jnp.exp(c_prev)
+        ks_ = kch.astype(jnp.float32) * jnp.exp(-c)
+        # mask strictly-lower triangular; bound each factor via the masked
+        # product trick: exp(c_prev[t]-c[s]) <= 1 for s <= t-1, but the
+        # factorized exps individually can overflow — so fold the bound in:
+        # compute scores via a (C,C,N) product with the exponent clamped.
+        expo = c_prev[:, :, None] - c[:, None]          # (B,C,C,H,N)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        expo = jnp.where(mask[None, :, :, None, None], expo, -jnp.inf)
+        scores = jnp.einsum("bthn,bshn,btshn->bhts",
+                            rch.astype(jnp.float32),
+                            kch.astype(jnp.float32), jnp.exp(expo))
+        y = jnp.einsum("bhts,bshn->bthn", scores, vch.astype(jnp.float32))
+        # bonus (diagonal) term
+        y += jnp.einsum("bthn,hn,bthn,bthm->bthm".replace("m", "z"),
+                        rch.astype(jnp.float32), u,
+                        kch.astype(jnp.float32),
+                        vch.astype(jnp.float32))
+        # inter-chunk: contribution of the carried state
+        y += jnp.einsum("bthn,bhnz->bthz", rt, S)
+        # state update: S' = diag(e^{c_end}) S + sum_s (k_s e^{c_end-c_s}) v_s
+        khat = kch.astype(jnp.float32) * jnp.exp(c_end - c)
+        S = S * jnp.exp(c_end[:, 0])[..., None] + \
+            jnp.einsum("bshn,bshz->bhnz", khat, vch.astype(jnp.float32))
+        return S, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3, 4) for a in (rc, kc, vc, wc))
+    state, ys = jax.lax.scan(chunk_step, state.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, N)[:, :T_out]
+    return y.astype(r.dtype), state
+
+
+def wkv6_step(r, k, v, logw, u, state):
+    """Single-token recurrence (decode).  r,k,v,logw: (B,H,N)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))                   # (B,H,N)
+    kv = jnp.einsum("bhn,bhz->bhnz", kf, vf)
+    y = jnp.einsum("bhn,bhnz->bhz", rf, state + u[..., None] * kv)
+    state = state * w[..., None] + kv
+    return y.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _ddlerp(x, x_prev, p):
+    """Data-dependent token-shift mixing -> (5, B, T, D) mixed inputs."""
+    xx = x_prev - x
+    xxx = x + xx * p["maa_x"]
+    z = jnp.tanh(xxx @ p["maa_w1"])                  # (B,T,5*LORA)
+    B, T, _ = z.shape
+    z = z.reshape(B, T, 5, LORA)
+    mix = jnp.einsum("btfk,fkd->btfd", z, p["maa_w2"].astype(z.dtype))
+    mix = mix + p["maa_rkvwg"].astype(z.dtype)       # (B,T,5,D)
+    out = x[:, :, None, :] + xx[:, :, None, :] * mix
+    return [out[:, :, i, :].astype(x.dtype) for i in range(5)]
+
+
+def _decay(xw, p):
+    z = jnp.tanh(xw @ p["dec_w1"][:, :LORA])
+    lora = z @ p["dec_w2"][:LORA].astype(z.dtype)
+    ww = p["decay"].astype(jnp.float32) + lora.astype(jnp.float32)
+    return -jnp.exp(ww)                              # log decay, < 0
+
+
+def _shift(x, last):
+    """Token shift: x_prev[t] = x[t-1]; position 0 gets ``last``."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def time_mix(p, x, last_x, state, cfg: ArchConfig, chunk: int = 32):
+    B, T, D = x.shape
+    H, N = cfg.n_heads, cfg.hd
+    xp = _shift(x, last_x)
+    xr, xk, xv, xw, xg = _ddlerp(x, xp, p)
+    r = hints.constrain((xr @ p["wr"]).reshape(B, T, H, N),
+                        "dp", None, "model", None)
+    k = hints.constrain((xk @ p["wk"]).reshape(B, T, H, N),
+                        "dp", None, "model", None)
+    v = hints.constrain((xv @ p["wv"]).reshape(B, T, H, N),
+                        "dp", None, "model", None)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = _decay(xw, p).reshape(B, T, H, N)
+    u = p["bonus"]
+    if T == 1:
+        y, state = wkv6_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0], u, state)
+        y = y[:, None]
+    else:
+        y, state = wkv6_chunked(r, k, v, logw, u, state, chunk=chunk)
+    # per-head group norm
+    yf = y.reshape(B, T, H, N).astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = ((yf - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, T, D)
+    out = (yn.astype(x.dtype) * p["gn"]) * g
+    return out @ p["wo"], x[:, -1, :], state
+
+
+def channel_mix(p, x, last_x):
+    xp = _shift(x, last_x)
+    xk = x + (xp - x) * p["cm_mix_k"]
+    xr = x + (xp - x) * p["cm_mix_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    return jax.nn.sigmoid(xr @ p["cm_r"]) * (kk @ p["cm_v"]), x[:, -1, :]
+
+
+def layer_fwd(p, x, cfg: ArchConfig, st: Dict[str, jnp.ndarray]
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    o, last_tm, S = time_mix(p, h, st["x_tm"], st["S"], cfg)
+    x = x + o
+    h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    o2, last_cm = channel_mix(p, h2, st["x_cm"])
+    return x + o2, {"S": S, "x_tm": last_tm, "x_cm": last_cm}
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: ArchConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    H, N, D, Lr = cfg.n_heads, cfg.hd, cfg.d_model, cfg.n_layers
+    dt = _dtype(cfg)
+    return {"S": jnp.zeros((Lr, batch, H, N, N), jnp.float32),
+            "x_tm": jnp.zeros((Lr, batch, D), dt),
+            "x_cm": jnp.zeros((Lr, batch, D), dt)}
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            state: Optional[Dict] = None, *, remat: bool = True,
+            collect_state: bool = False):
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if state is None:
+        state = init_state(cfg, B)
+
+    def body(x, layer_in):
+        pl, st = layer_in
+        x, st_new = layer_fwd(pl, x, cfg, st)
+        return x, st_new
+
+    fn = jax.checkpoint(body,
+                        policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    x, st = jax.lax.scan(fn, x, (params["layers"], state))
+    x = L.rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    return x, st
+
+
+def prefill(params, cfg, tokens, patches=None):
+    x, st = forward(params, cfg, tokens, remat=False)
+    return st, x[:, -1:] @ params["lm_head"]
+
+
+def decode_step(params, cfg, token, pos, state):
+    x, st = forward(params, cfg, token, state, remat=False)
+    return x @ params["lm_head"], st

@@ -1,0 +1,6 @@
+from .adamw import (AdamWConfig, apply_updates, compress_int8,
+                    compressed_grads, decompress_int8, init_residuals,
+                    init_state)
+
+__all__ = ["AdamWConfig", "apply_updates", "init_state", "compress_int8",
+           "decompress_int8", "compressed_grads", "init_residuals"]

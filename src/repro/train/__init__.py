@@ -1,0 +1,6 @@
+from .loss import chunked_xent
+from .step import (init_train_state, loss_fn, make_prefill_step,
+                   make_serve_step, make_train_step)
+
+__all__ = ["chunked_xent", "init_train_state", "loss_fn", "make_train_step",
+           "make_serve_step", "make_prefill_step"]

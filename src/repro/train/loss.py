@@ -1,0 +1,62 @@
+"""Sequence-chunked softmax cross-entropy.
+
+Materializing (B, S, V) logits for a 128k vocabulary at 4k sequence is
+~17 GB/device — so the loss scans over sequence chunks, computing each
+chunk's logits -> logsumexp -> label logit and discarding them.  Backward
+recomputes per chunk (the scan is rematerialized), keeping live memory at
+(B, chunk, V / model_shards).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import hints
+
+
+def chunked_xent(h: jnp.ndarray, w_vocab: jnp.ndarray, labels: jnp.ndarray,
+                 chunk: int = 16, tokens_per_chunk: int = 65_536
+                 ) -> jnp.ndarray:
+    """h: (B, S, D); w_vocab: (D, V); labels: (B, S) -> mean NLL (f32).
+
+    Chunks over the BATCH dim (not sequence): batch is data-sharded and the
+    sequence dim stays intact inside each chunk, so the logits chunk keeps
+    both the data sharding (B) and any sequence sharding (S under the fsdp
+    plan) — chunking over S would break sequence sharding and replicate the
+    vocab matmul over the model axis."""
+    B, S, D = h.shape
+    dp = hints.dp_size()
+    if B % dp:
+        dp = 1
+    bl = B // dp                       # per-device rows
+    per_chunk = min(bl, max(1, tokens_per_chunk // S))
+    nc = max(1, bl // per_chunk)
+    while bl % nc:
+        nc -= 1
+    # scan must iterate an UNSHARDED axis: split B = (dp, nc, rest) and
+    # bring nc to the front; dp (the sharded factor) stays inside each
+    # chunk, so the vocab matmul keeps its batch sharding
+    rest = bl // nc
+    hc = h.reshape(dp, nc, rest, S, D).transpose(1, 0, 2, 3, 4) \
+         .reshape(nc, dp * rest, S, D)
+    lc = labels.reshape(dp, nc, rest, S).transpose(1, 0, 2, 3) \
+        .reshape(nc, dp * rest, S)
+
+    def body(acc, xs):
+        hb, lb = xs                                   # (c, S, D), (c, S)
+        logits = (hb @ w_vocab).astype(jnp.float32)   # (c, S, V)
+        logits = hints.constrain(logits, "dp", "sp", "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        mask = (lb >= 0).astype(jnp.float32)
+        nll = (lse - ll) * mask
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(mask)), None
+
+    fn = jax.checkpoint(body)
+    (tot, cnt), _ = jax.lax.scan(fn, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,82 @@
+"""Functional correctness of every collective generator, under randomized
+interleavings (paper §4.2: custom collectives must be *correct* programs)."""
+
+import pytest
+
+from repro.core import collectives as C
+from repro.core.mscclpp import Program
+from repro.core.verify import check_program, execute, make_inputs
+
+NR = [2, 3, 4, 5, 8]
+NR_POW2 = [2, 4, 8]
+
+
+@pytest.mark.parametrize("n", NR)
+@pytest.mark.parametrize("proto", ["put", "get"])
+@pytest.mark.parametrize("nwg", [1, 3])
+def test_ring_all_gather(n, proto, nwg):
+    check_program(C.ring_all_gather(n, 64, nwg, proto), seed=n)
+
+
+@pytest.mark.parametrize("n", NR)
+@pytest.mark.parametrize("proto", ["put", "get"])
+def test_direct_all_gather(n, proto):
+    check_program(C.direct_all_gather(n, 64, 2, proto), seed=n)
+
+
+@pytest.mark.parametrize("n", NR)
+@pytest.mark.parametrize("proto", ["put", "get"])
+@pytest.mark.parametrize("nwg", [1, 2])
+def test_ring_reduce_scatter(n, proto, nwg):
+    check_program(C.ring_reduce_scatter(n, 48, nwg, proto), seed=n)
+
+
+@pytest.mark.parametrize("n", NR)
+@pytest.mark.parametrize("proto", ["put", "get"])
+def test_direct_reduce_scatter(n, proto):
+    check_program(C.direct_reduce_scatter(n, 48, 2, proto), seed=n)
+
+
+@pytest.mark.parametrize("n", NR)
+@pytest.mark.parametrize("proto", ["put"])
+@pytest.mark.parametrize("nwg", [1, 2])
+def test_ring_all_reduce(n, proto, nwg):
+    check_program(C.ring_all_reduce(n, 96, nwg, proto), seed=n)
+
+
+@pytest.mark.parametrize("n", NR)
+def test_double_binary_tree_all_reduce(n):
+    check_program(C.double_binary_tree_all_reduce(n, 96, 2), seed=n)
+
+
+@pytest.mark.parametrize("n", NR_POW2)
+def test_halving_doubling_all_reduce(n):
+    check_program(C.halving_doubling_all_reduce(n, 64, 2), seed=n)
+
+
+@pytest.mark.parametrize("n", NR)
+@pytest.mark.parametrize("proto", ["put", "get"])
+def test_direct_all_to_all(n, proto):
+    check_program(C.direct_all_to_all(n, 32, 2, proto), seed=n)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_schedule_independence(seed):
+    """The same program must be correct under many interleavings."""
+    prog = C.ring_all_reduce(4, 64, 2, "put")
+    check_program(prog, seed=seed)
+
+
+def test_json_round_trip():
+    prog = C.ring_reduce_scatter(4, 64, 2, "get")
+    prog2 = Program.from_json(prog.to_json())
+    assert prog2.num_ranks == prog.num_ranks
+    assert prog2.op_count() == prog.op_count()
+    check_program(prog2, seed=3)
+
+
+def test_unbalanced_sizes():
+    """Sizes not divisible by nranks/nworkgroups still correct."""
+    check_program(C.ring_all_reduce(3, 101, 2, "put"), seed=1)
+    check_program(C.ring_all_gather(5, 33, 3, "put"), seed=1)
+    check_program(C.double_binary_tree_all_reduce(6, 77, 3), seed=1)

@@ -1,0 +1,116 @@
+"""InfraGraph representation, blueprints, translators, visualizer."""
+
+import json
+
+import pytest
+
+from repro.core.engine import Engine
+from repro.core.infragraph import (Infrastructure, clos_fat_tree_fabric,
+                                   generic_gpu_device, single_tier_fabric,
+                                   summary, switch_device, to_dot, to_fabric,
+                                   to_simple_topology, torus2d_fabric,
+                                   tpu_pod_fabric, tpu_v5e_device)
+from repro.core.network.fabric import DATA
+
+
+def test_generic_gpu_expands_to_papers_endpoint_census():
+    dev = generic_gpu_device()  # paper §5.1 full size
+    infra = Infrastructure("one_gpu")
+    infra.add(dev, "gpu", 1)
+    g = infra.expand()
+    assert len(g.nodes_of_kind("cu")) == 128
+    assert len(g.nodes_of_kind("hbm")) == 32
+    assert len(g.nodes_of_kind("io")) == 32
+    assert len(g.nodes_of_kind("router")) == 32
+    assert g.connected()
+
+
+def test_fq_naming_convention():
+    infra = single_tier_fabric(num_hosts=2)
+    g = infra.expand()
+    assert "switch.0.port.0" in g.nodes
+    assert "host.1.nic.0" in g.nodes
+    # paper's edge example shape: (switch.0.asic.0, switch.0.port.0, link)
+    assert ("switch.0.port.0", "switch.0.asic.0") in g.edges
+
+
+def test_single_tier_paths_cross_the_switch():
+    infra = single_tier_fabric(num_hosts=4)
+    g = infra.expand()
+    p = g.path("host.0.gpu.0", "host.3.gpu.0")
+    assert any(n.startswith("switch.0") for n in p)
+
+
+def test_clos_fabric_structure_and_connectivity():
+    infra = clos_fat_tree_fabric(num_hosts=8, switch_ports=4)
+    g = infra.expand()
+    # 8 hosts / (4/2 per leaf) = 4 leaves, spine count = ports/2 = 2
+    assert len({n.split(".")[1] for n in g.nodes if n.startswith("leaf.")}) == 4
+    assert len({n.split(".")[1] for n in g.nodes if n.startswith("spine.")}) == 2
+    assert g.connected()
+    # host0 -> host7 must traverse leaf and spine tiers
+    p = g.path("host.0.gpu.0", "host.7.gpu.0")
+    assert any(n.startswith("spine.") for n in p)
+
+
+def test_torus_wraps():
+    infra = torus2d_fabric(4, 4)
+    g = infra.expand()
+    assert g.connected()
+    # wraparound: chip (0,0) to chip (3,0) is one hop through the -x link
+    p = g.path("chip.0.core.0", "chip.12.core.0")
+    # path: core -> ici port -> ici port -> core = 4 nodes
+    assert len(p) <= 5
+
+
+def test_json_round_trip():
+    infra = clos_fat_tree_fabric(num_hosts=4, switch_ports=4)
+    infra2 = Infrastructure.from_json(infra.to_json())
+    g1, g2 = infra.expand(), infra2.expand()
+    assert set(g1.nodes) == set(g2.nodes)
+    assert set(g1.edges) == set(g2.edges)
+
+
+def test_translator_to_fabric_moves_a_message():
+    infra = single_tier_fabric(num_hosts=2)
+    fab, g = to_fabric(infra)
+    done = {}
+    route = fab.route(fab.node("host.0.gpu.0"), fab.node("host.1.gpu.0"))
+    fab.send(route, 4096, DATA, lambda f: done.setdefault("t", fab.engine.now))
+    fab.engine.run()
+    assert "t" in done and done["t"] > 0
+
+
+def test_translator_pattern_detection():
+    t1 = to_simple_topology(single_tier_fabric(num_hosts=4))
+    assert t1.dims[0][3] == "switch" and t1.num_gpus == 4
+    t2 = to_simple_topology(clos_fat_tree_fabric(num_hosts=8, switch_ports=4))
+    assert len(t2.dims) == 2 and t2.num_gpus == 8
+    t3 = to_simple_topology(torus2d_fabric(4, 4))
+    assert [d[3] for d in t3.dims] == ["ring", "ring"] and t3.num_gpus == 16
+
+
+def test_multi_pod_tpu_fabric():
+    infra = tpu_pod_fabric(pods=2, dim_x=4, dim_y=4)
+    g = infra.expand()
+    assert len(g.nodes_of_kind("core")) == 32
+    assert g.connected()
+    # cross-pod path must use the DCN tier
+    p = g.path("chip.0.core.0", "chip.31.core.0")
+    assert any(n.startswith("dcn.") for n in p)
+
+
+def test_visualizer_outputs():
+    infra = clos_fat_tree_fabric(num_hosts=4, switch_ports=4)
+    dot = to_dot(infra)
+    assert dot.startswith("digraph") and "leaf.0" in dot
+    s = summary(infra)
+    assert "connected=True" in s
+
+
+def test_bad_fabric_edge_raises():
+    infra = single_tier_fabric(num_hosts=2)
+    infra.edges.append((("host", 9, "nic", 0), ("switch", 0, "port", 0),
+                        "eth"))
+    with pytest.raises(KeyError):
+        infra.expand()

@@ -1,0 +1,136 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import collectives as C
+from repro.core.engine import Engine
+from repro.core.protocols import ProtocolModel
+from repro.core.verify import check_program
+from repro.kernels import ref
+
+SLOW = settings(max_examples=20, deadline=None)
+FAST = settings(max_examples=50, deadline=None)
+
+
+# ----------------------------------------------------------------- engine
+@FAST
+@given(st.lists(st.tuples(st.floats(0, 1e6), st.integers(0, 99)),
+                min_size=1, max_size=60))
+def test_engine_fires_in_time_order(events):
+    e = Engine()
+    fired = []
+    for delay, tag in events:
+        e.schedule(delay, lambda t=tag: fired.append((e.now, t)))
+    e.run()
+    times = [t for t, _ in fired]
+    assert times == sorted(times)
+    assert len(fired) == len(events)
+
+
+@FAST
+@given(st.lists(st.floats(0, 1000), min_size=1, max_size=30),
+       st.floats(0.1, 100))
+def test_engine_until_boundary(delays, until):
+    e = Engine()
+    fired = []
+    for d in delays:
+        e.schedule(d, lambda d=d: fired.append(d))
+    e.run(until_ns=until)
+    eps = 1e-6
+    assert all(d <= until + eps for d in fired)
+    assert e.pending == sum(1 for d in delays if d > until + eps)
+
+
+# ------------------------------------------------------------- collectives
+@SLOW
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(8, 200),
+       st.sampled_from(["put", "get"]), st.integers(0, 5))
+def test_ring_all_gather_always_correct(n, nwg, size, proto, seed):
+    check_program(C.ring_all_gather(n, size, nwg, proto), seed=seed)
+
+
+@SLOW
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(8, 150),
+       st.sampled_from(["put", "get"]), st.integers(0, 5))
+def test_direct_reduce_scatter_always_correct(n, nwg, size, proto, seed):
+    check_program(C.direct_reduce_scatter(n, size, nwg, proto), seed=seed)
+
+
+@SLOW
+@given(st.integers(2, 5), st.integers(1, 2), st.integers(10, 120),
+       st.integers(0, 7))
+def test_ring_all_reduce_always_correct(n, nwg, size, seed):
+    check_program(C.ring_all_reduce(n, size, nwg, "put"), seed=seed)
+
+
+@SLOW
+@given(st.sampled_from([2, 4, 8]), st.integers(16, 120), st.integers(0, 5))
+def test_hd_all_reduce_always_correct(n, size, seed):
+    check_program(C.halving_doubling_all_reduce(n, size, 2), seed=seed)
+
+
+# -------------------------------------------------------------- protocols
+@FAST
+@given(st.floats(10, 10_000), st.floats(1, 2000))
+def test_protocol_crossover_monotone_in_alpha(alpha, beta):
+    m1 = ProtocolModel(alpha_ns=alpha, beta_GBps=beta)
+    m2 = ProtocolModel(alpha_ns=alpha * 2, beta_GBps=beta)
+    assert m2.crossover_bytes() >= m1.crossover_bytes()
+    # LL wins below the crossover, Simple above it
+    small = max(1, int(m1.crossover_bytes() * 0.5))
+    assert m1.t_ll_ns(small) < m1.t_simple_ns(small)
+    big = int(m1.crossover_bytes() * 16) + 1024
+    assert m1.t_simple_ns(big) < m1.t_ll_ns(big)
+
+
+# ----------------------------------------------------------------- kernels
+@SLOW
+@given(st.integers(1, 2), st.sampled_from([1, 2, 4]), st.sampled_from([2, 4]),
+       st.integers(0, 3))
+def test_attention_softmax_rows_sum_to_one(b, kh, g, seed):
+    """Attention output must be a convex combination of V rows: with V = 1
+    the output is exactly 1."""
+    key = jax.random.PRNGKey(seed)
+    h = kh * g
+    q = jax.random.normal(key, (b, h, 32, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kh, 32, 16))
+    v = jnp.ones((b, kh, 32, 16))
+    out = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5, atol=1e-5)
+
+
+@SLOW
+@given(st.integers(0, 5))
+def test_wkv6_zero_decay_is_cumulative_outer_products(seed):
+    """w == 1 (logw == 0), u == 0: y_t = r_t . (sum_{s<t} k_s v_s^T)."""
+    key = jax.random.PRNGKey(seed)
+    B, H, T, N = 1, 1, 12, 8
+    r = jax.random.normal(key, (B, H, T, N))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, T, N))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, T, N))
+    logw = jnp.zeros((B, H, T, N))
+    u = jnp.zeros((H, N))
+    got = np.asarray(ref.wkv6_ref(r, k, v, logw, u))[0, 0]
+    S = np.zeros((N, N))
+    rn, kn, vn = (np.asarray(a)[0, 0] for a in (r, k, v))
+    for t in range(T):
+        want = rn[t] @ S
+        np.testing.assert_allclose(got[t], want, rtol=2e-4, atol=2e-4)
+        S += np.outer(kn[t], vn[t])
+
+
+@SLOW
+@given(st.integers(0, 5))
+def test_rg_lru_zero_gate_preserves_state(seed):
+    """a == 1, b == 0: h stays at h0 forever."""
+    key = jax.random.PRNGKey(seed)
+    B, T, R = 1, 16, 8
+    a = jnp.ones((B, T, R))
+    b = jnp.zeros((B, T, R))
+    h0 = jax.random.normal(key, (B, R))
+    hs = np.asarray(ref.rg_lru_ref(a, b, h0))
+    for t in range(T):
+        np.testing.assert_allclose(hs[0, t], np.asarray(h0)[0], rtol=1e-6)

@@ -1,0 +1,96 @@
+"""End-to-end timing simulation: collectives + traces on the detailed model."""
+
+import pytest
+
+from repro.core import Cluster, NocConfig
+from repro.core import collectives as C
+from repro.core.chakra import ExecutionTrace, TraceExecutor
+from repro.core.protocols import ProtocolModel
+from repro.core.system import (simulate_collective, simulate_collective_coarse)
+
+SMALL_NOC = NocConfig(mesh_x=2, mesh_y=2, cus_per_router=2, mem_channels=4,
+                      io_ports=4)
+
+
+def test_fine_grained_all_gather_runs_and_scales_with_size():
+    r1 = simulate_collective(C.direct_all_gather(4, 4096, 2, "put"),
+                             noc=SMALL_NOC)
+    r2 = simulate_collective(C.direct_all_gather(4, 16384, 2, "put"),
+                             noc=SMALL_NOC)
+    assert r1.time_ns > 0 and r2.time_ns > r1.time_ns
+    assert r1.nranks == 4
+    # 4x payload should take roughly 2-6x longer (latency amortizes)
+    assert 1.5 < r2.time_ns / r1.time_ns < 8
+
+
+def test_ring_all_reduce_fine_vs_coarse_agree_roughly():
+    prog = C.ring_all_reduce(4, 8192, 2, "put")
+    fine = simulate_collective(prog, noc=SMALL_NOC)
+    coarse = simulate_collective_coarse(prog)
+    # same algorithm; coarse misses control-path latency so it's faster,
+    # but both should be the same order of magnitude
+    assert coarse.time_ns < fine.time_ns
+    assert fine.time_ns / coarse.time_ns < 50
+
+
+def test_collective_correct_even_with_straggler_injection():
+    prog = C.ring_all_gather(4, 2048, 1, "put")
+    base = simulate_collective(prog, noc=SMALL_NOC)
+    prog2 = C.ring_all_gather(4, 2048, 1, "put")
+    lag = simulate_collective(prog2, noc=SMALL_NOC,
+                              rank_delay_ns=[0, 0, 50_000, 0])
+    assert lag.time_ns >= base.time_ns + 40_000  # straggler propagates
+
+
+def test_unroll_improves_all_to_all_bandwidth():
+    """Paper Fig. 12: higher intra-wavefront ILP helps bandwidth-bound
+    collectives."""
+    times = {}
+    for unroll in (1, 8):
+        prog = C.direct_all_to_all(4, 8192, 2, "put")
+        r = simulate_collective(prog, noc=SMALL_NOC, unroll=unroll)
+        times[unroll] = r.time_ns
+    assert times[8] < times[1]
+
+
+def test_trace_executor_comp_then_collective():
+    et = ExecutionTrace(num_ranks=2)
+    comp = {r: et.comp(r, f"gemm.r{r}", flops=1e7) for r in range(2)}
+    et.coll(0, "all_reduce", 4096, "ring",
+            deps_by_rank={r: [comp[r]] for r in range(2)})
+    cl = Cluster(2, noc=SMALL_NOC)
+    res = TraceExecutor(et, cl, comp_workgroups=4, coll_workgroups=2).run()
+    assert res.time_ns > 0
+    # collective must start after its rank's compute
+    comp_end = max(res.node_times[c.nid][1] for c in comp.values())
+    coll_nodes = [n for n in et.nodes if n.kind == "coll"]
+    assert all(res.node_times[n.nid][0] >= min(
+        res.node_times[c.nid][1] for c in comp.values()) - 1
+        for n in coll_nodes)
+
+
+def test_two_collectives_on_one_cluster_do_not_collide():
+    """Semaphore namespacing: back-to-back collectives must both finish."""
+    et = ExecutionTrace(num_ranks=2)
+    first = et.coll(0, "all_gather", 2048, "ring")
+    et.coll(1, "all_gather", 2048, "ring",
+            deps_by_rank={r: [first[r]] for r in range(2)})
+    cl = Cluster(2, noc=SMALL_NOC)
+    res = TraceExecutor(et, cl).run()
+    assert res.time_ns > 0
+
+
+def test_protocol_crossover_scales_with_latency():
+    """Fig. 4: overestimating latency pushes the LL->Simple crossover out."""
+    m_fast = ProtocolModel(alpha_ns=500, beta_GBps=256 * 1.0737)
+    m_slow = ProtocolModel(alpha_ns=5000, beta_GBps=256 * 1.0737)
+    assert m_slow.crossover_bytes() == pytest.approx(
+        10 * m_fast.crossover_bytes())
+    m_wide = ProtocolModel(alpha_ns=500, beta_GBps=1024 * 1.0737)
+    assert m_wide.crossover_bytes() > m_fast.crossover_bytes()
+    # bandwidth asymptotes: LL -> beta/2, Simple -> beta
+    big = 1 << 30
+    assert m_fast.bw_ll_GBps(big) == pytest.approx(m_fast.beta_GBps / 2,
+                                                   rel=0.01)
+    assert m_fast.bw_simple_GBps(big) == pytest.approx(m_fast.beta_GBps,
+                                                       rel=0.01)
