@@ -1,0 +1,101 @@
+"""Event-engine throughput benchmark (tracked PR-over-PR).
+
+Runs the reference workload — a fine-grained 8-rank 1 MiB ring all-reduce
+on the default NoC — through the three fabric scheduling modes:
+
+* ``classic``  — the seed's two-events-per-hop reference implementation;
+* ``exact``    — one event per hop + sound lookahead chaining;
+* ``coalesce`` — ``exact`` + train coalescing (the default).
+
+Asserts that the fast paths are bit-exact against each other and FIFO-
+certified (``order_violations == 0``), then writes ``results/
+BENCH_engine.json`` with events, wall time, events/s and simulated-ns per
+wall-second so the perf trajectory is visible across PRs.
+
+Run:  PYTHONPATH=src python benchmarks/engine_throughput.py [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import collectives as C                        # noqa: E402
+from repro.core.cluster import Cluster, NocConfig              # noqa: E402
+from repro.core.system import simulate_collective              # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+NRANKS = 8
+SIZE = 1 << 20          # 1 MiB
+NWG = 1
+PROTOCOL = "put"
+
+#: seed baseline on this workload (measured at the fast-path PR; the seed
+#: predates BENCH_engine.json, so its numbers are pinned here once)
+SEED_BASELINE = {"events": 9_864_416, "wall_s": 23.32}
+
+
+def run_mode(mode: str, size: int):
+    cluster = Cluster(NRANKS, noc=NocConfig(fabric_mode=mode))
+    t0 = time.perf_counter()
+    r = simulate_collective(C.ring_all_reduce(NRANKS, size, NWG, PROTOCOL),
+                            cluster=cluster)
+    wall = time.perf_counter() - t0
+    return {
+        "mode": mode,
+        "time_ns": r.time_ns,
+        "per_rank_done_ns": r.per_rank_done_ns,
+        "events": r.events,
+        "wall_s": round(wall, 3),
+        "events_per_s": round(r.events / wall) if wall > 0 else None,
+        "sim_ns_per_wall_s": round(r.time_ns / wall) if wall > 0 else None,
+        "order_violations": cluster.fabric.order_violations,
+    }
+
+
+def main() -> None:
+    size = SIZE if "--quick" not in sys.argv else SIZE // 8
+    rows = {m: run_mode(m, size) for m in ("classic", "exact", "coalesce")}
+
+    # ---- correctness gates ------------------------------------------------
+    exact, coal, classic = rows["exact"], rows["coalesce"], rows["classic"]
+    assert coal["time_ns"] == exact["time_ns"], \
+        "coalesced result must be bit-exact vs the un-coalesced path"
+    assert coal["per_rank_done_ns"] == exact["per_rank_done_ns"]
+    assert coal["order_violations"] == 0, \
+        "FIFO monitor must certify the coalesced run"
+    assert classic["time_ns"] == exact["time_ns"], \
+        "fast path must reproduce the reference schedule"
+
+    out = {
+        "workload": {"collective": "ring_all_reduce", "nranks": NRANKS,
+                     "size_bytes": size, "nworkgroups": NWG,
+                     "protocol": PROTOCOL, "noc": "default"},
+        "modes": {m: {k: v for k, v in row.items()
+                      if k != "per_rank_done_ns"}
+                  for m, row in rows.items()},
+        "event_ratio_vs_classic": round(classic["events"] / coal["events"], 2),
+        "wall_speedup_vs_classic": round(classic["wall_s"] / coal["wall_s"], 2),
+    }
+    if size == SIZE:
+        out["seed_baseline"] = SEED_BASELINE
+        out["event_ratio_vs_seed"] = round(
+            SEED_BASELINE["events"] / coal["events"], 2)
+        out["wall_speedup_vs_seed"] = round(
+            SEED_BASELINE["wall_s"] / coal["wall_s"], 2)
+
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_engine.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(json.dumps(out, indent=1))
+    print(f"\nwrote {path}")
+
+
+if __name__ == "__main__":
+    main()

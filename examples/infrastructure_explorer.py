@@ -5,11 +5,13 @@ same collective.
 Run:  PYTHONPATH=src python examples/infrastructure_explorer.py
 """
 
+from repro.core.backends import simulate
+from repro.core.cluster import NocConfig
 from repro.core.collectives import ring_all_reduce
 from repro.core.infragraph import (clos_fat_tree_fabric, single_tier_fabric,
-                                   summary, to_dot, to_simple_topology,
-                                   torus2d_fabric, tpu_pod_fabric)
-from repro.core.system import simulate_collective_coarse
+                                   summary, to_dot, torus2d_fabric,
+                                   tpu_pod_fabric)
+from repro.core.infragraph.blueprints import ring_fabric
 
 for infra in (single_tier_fabric(8), clos_fat_tree_fabric(8, 4),
               torus2d_fabric(4, 2), tpu_pod_fabric(2, 4, 4)):
@@ -19,14 +21,25 @@ clos = clos_fat_tree_fabric(8, 4)
 print("\nDOT preview (first lines):")
 print("\n".join(to_dot(clos).splitlines()[:8]), "\n  ...")
 
-print("\nsame 1MiB ring all-reduce, different fabrics (coarse backend):")
-prog = ring_all_reduce(8, 1 << 20, 2, "put")
-for name, infra in [("single-tier", single_tier_fabric(8)),
-                    ("clos", clos_fat_tree_fabric(8, 4)),
-                    ("torus 4x2", torus2d_fabric(4, 2))]:
-    topo = to_simple_topology(infra)
-    r = simulate_collective_coarse(prog, topo=topo)
+print("\nsame 1MiB ring all-reduce, different fabrics (coarse fidelity):")
+prog = lambda: ring_all_reduce(8, 1 << 20, 2, "put")
+fabrics = [("single-tier", single_tier_fabric(8)),
+           ("clos", clos_fat_tree_fabric(8, 4)),
+           ("ring", ring_fabric(8)),
+           ("torus 4x2", torus2d_fabric(4, 2))]
+for name, infra in fabrics:
+    r = simulate(prog(), infra, fidelity="coarse")
     print(f"  {name:12s}: {r.time_ns/1e3:9.1f} us  bus {r.bus_GBps:.2f} GB/s")
+
+print("\nsame program, fine fidelity: InfraGraph edges wire the detailed "
+      "cluster's scale-up fabric:")
+small = NocConfig(mesh_x=2, mesh_y=2, cus_per_router=2, mem_channels=4,
+                  io_ports=4)
+small_prog = lambda: ring_all_reduce(4, 64 << 10, 1, "put")
+for name, infra in [("single-tier", single_tier_fabric(4)),
+                    ("ring", ring_fabric(4))]:
+    r = simulate(small_prog(), infra, fidelity="fine", noc=small)
+    print(f"  {name:12s}: {r.time_ns/1e3:9.1f} us  {r.events} events")
 
 # JSON round trip = the community-exchange story
 text = clos.to_json()

@@ -12,16 +12,22 @@ import jax
 import jax.numpy as jnp
 
 # --- 1. the simulator ------------------------------------------------------
+# one entry point, three fidelity tiers, one InfraGraph infrastructure:
+#   simulate(program, infra, fidelity="fine" | "coarse" | "analytic")
+from repro.core.backends import simulate
 from repro.core.collectives import direct_reduce_scatter
-from repro.core.system import simulate_collective
+from repro.core.infragraph import single_tier_fabric
 from repro.core.verify import check_program
 
 prog = direct_reduce_scatter(nranks=4, shard_bytes=16384, nworkgroups=2,
                              protocol="get")
 check_program(prog)                      # data-correctness proof
-res = simulate_collective(prog)          # fine-grained timing simulation
-print(f"[sim] get-based RS on 4 GPUs: {res.time_ns/1e3:.1f} us, "
-      f"bus bw {res.bus_GBps:.2f} GB/s, {res.events} events")
+infra = single_tier_fabric(4)            # InfraGraph scale-up description
+for fidelity in ("analytic", "coarse", "fine"):
+    res = simulate(prog, infra, fidelity=fidelity)
+    print(f"[sim:{fidelity:8s}] get-based RS on 4 GPUs: "
+          f"{res.time_ns/1e3:9.1f} us, bus bw {res.bus_GBps:6.2f} GB/s, "
+          f"{res.events} events")
 
 # --- 2. the framework -------------------------------------------------------
 from repro.configs import ShapeConfig, get, reduced

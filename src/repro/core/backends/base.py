@@ -1,0 +1,59 @@
+"""Backend seam shared types (paper §4: one program, many fidelities).
+
+Every fidelity tier consumes the same MSCCL++ :class:`~repro.core.mscclpp.
+Program` and the same InfraGraph :class:`~repro.core.infragraph.graph.
+Infrastructure`, and produces the same :class:`CollectiveResult` — so
+studies can dial fidelity up and down without touching the experiment
+code.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Protocol, runtime_checkable
+
+from ..mscclpp import Program
+
+
+@dataclass
+class CollectiveResult:
+    """Uniform result record across all fidelity tiers."""
+    program: str
+    collective: str
+    nranks: int
+    time_ns: float
+    moved_bytes: int               # payload bytes defined by the collective
+    events: int
+    wallclock_s: float
+    requests: int = 0
+    per_rank_done_ns: Optional[List[float]] = None
+    fidelity: str = "fine"
+
+    @property
+    def bus_GBps(self) -> float:
+        """Collective bandwidth: buffer size / collective time (paper §5.2)."""
+        return self.moved_bytes / self.time_ns if self.time_ns > 0 else 0.0
+
+
+def payload_bytes(program: Program) -> int:
+    """The 'buffer size' the paper divides by: per-rank output payload."""
+    return program.buffers.get("output", 0)
+
+
+@runtime_checkable
+class SimBackend(Protocol):
+    """A fidelity tier: runs a collective Program end to end.
+
+    Implementations: :class:`~repro.core.backends.fine.FineBackend`
+    (Load-Store granularity on a detailed Cluster),
+    :class:`~repro.core.backends.coarse.CoarseBackend` (chunk granularity
+    on the alpha-beta SimpleNetwork), and
+    :class:`~repro.core.backends.analytic.AnalyticBackend` (closed-form
+    estimators, no event simulation).
+    """
+
+    fidelity: str
+
+    def run(self, program: Program, **kwargs) -> CollectiveResult:
+        """Simulate ``program`` and return its timing result."""
+        ...

@@ -1,0 +1,69 @@
+"""Coarse backend: chunk granularity over the alpha-beta SimpleNetwork.
+
+ASTRA-sim 2.0 fidelity (paper §2.1): one event-driven message per
+put/get, zero-cost local ops, contended links — but no CU model and no
+per-cache-line control path.  Program semantics come from the shared
+:class:`~repro.core.backends.interpreter.ProgramInterpreter`.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+from ..mscclpp import Program
+from ..network.simple import SimpleNetwork, SimpleTopology
+from .base import CollectiveResult, payload_bytes
+from .interpreter import ProgramInterpreter
+
+
+class CoarseBackend:
+    """ASTRA-sim 2.0 fidelity tier."""
+
+    fidelity = "coarse"
+
+    def __init__(self, infra=None, topo: Optional[SimpleTopology] = None,
+                 link_GBps: float = 34.36 * 8, link_lat_ns: float = 1000.0,
+                 local_GBps: float = 1099.5, reduce_GBps: float = 4398.0):
+        self.infra = infra
+        self.topo = topo
+        self.link_GBps = link_GBps
+        self.link_lat_ns = link_lat_ns
+        self.local_GBps = local_GBps
+        self.reduce_GBps = reduce_GBps
+
+    def make_topology(self, num_ranks: int) -> SimpleTopology:
+        if self.topo is not None:
+            return self.topo
+        if self.infra is not None:
+            from ..infragraph.translate import to_simple_topology
+            return to_simple_topology(self.infra)
+        return SimpleTopology([(num_ranks, self.link_GBps, self.link_lat_ns,
+                                "switch")])
+
+    def run(self, program: Program,
+            rank_delay_ns: Optional[List[float]] = None,
+            until_ns: float = 5e10) -> CollectiveResult:
+        """ASTRA-sim 2.0-fidelity simulation of the same program."""
+        topo = self.make_topology(program.num_ranks)
+        if topo.num_gpus < program.num_ranks:
+            raise ValueError(
+                f"topology has {topo.num_gpus} endpoints but the program "
+                f"needs {program.num_ranks} ranks")
+        net = SimpleNetwork(topo)
+        ex = ProgramInterpreter(program, net, self.local_GBps,
+                                self.reduce_GBps, rank_delay_ns)
+        net.run(until_ns)
+        if len(ex.done_at) != program.num_ranks:
+            missing = [r for r in range(program.num_ranks)
+                       if r not in ex.done_at]
+            raise RuntimeError(f"coarse sim incomplete: ranks {missing}")
+        t = max(ex.done_at.values())
+        return CollectiveResult(
+            program=program.name + ".coarse", collective=program.collective,
+            nranks=program.num_ranks, time_ns=t,
+            moved_bytes=payload_bytes(program),
+            events=net.engine.events_processed,
+            wallclock_s=net.engine.wallclock_seconds(),
+            per_rank_done_ns=[ex.done_at[r]
+                              for r in range(program.num_ranks)],
+            fidelity=self.fidelity)

@@ -1,0 +1,173 @@
+"""The chunk-granularity MSCCL++ program interpreter.
+
+This is the single home of coarse op semantics (put/get = one network
+message, signal = control message, copy/reduce = memory-bandwidth cost,
+wait/barrier = ordering only) — extracted from the old
+``system._CoarseExec`` so the coarse and analytic backends can never
+drift apart: both execute programs through this one interpreter, differing
+only in the :class:`Transport` they plug in (a contended ``SimpleNetwork``
+fabric vs. contention-free alpha-beta delays).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
+
+from ..engine import Engine
+from ..mscclpp import Program
+from ..network.fabric import CONTROL, DATA
+
+
+class Transport(Protocol):
+    """What the interpreter needs from a network model."""
+
+    engine: Engine
+
+    def send(self, src_gpu: int, dst_gpu: int, size: int,
+             on_done: Callable[[], None], cls: int = DATA) -> None:
+        ...
+
+
+class AnalyticTransport:
+    """Contention-free alpha-beta message delays (closed-form per message).
+
+    The analytic tier's fallback for programs whose collective has no
+    closed-form estimator: every transfer takes ``alpha + size/beta``
+    independent of link occupancy, so the event count is proportional to
+    the *program* size, not the payload size.
+    """
+
+    def __init__(self, alpha_ns: float, beta_GBps: float,
+                 engine: Optional[Engine] = None):
+        self.engine = engine or Engine()
+        self.alpha_ns = alpha_ns
+        self.beta_GBps = beta_GBps
+
+    def send(self, src_gpu: int, dst_gpu: int, size: int,
+             on_done: Callable[[], None], cls: int = DATA) -> None:
+        if src_gpu == dst_gpu:
+            self.engine.schedule(0.0, on_done)
+            return
+        delay = self.alpha_ns + (size / self.beta_GBps
+                                 if self.beta_GBps > 0 else 0.0)
+        self.engine.schedule(delay, on_done)
+
+
+class ProgramInterpreter:
+    """Chunk-granularity interpreter of an MSCCL++ program.
+
+    Semantics: put/get = one network message of `size`; signal = one small
+    control message; copy/reduce = local, modeled with a memory-bandwidth
+    cost; wait/barrier = ordering only.  This is deliberately the 2.0-level
+    model — no CU contention, no per-cache-line control path.
+    """
+
+    HDR = 64  # control message bytes
+
+    def __init__(self, program: Program, net: Transport,
+                 local_GBps: float, reduce_GBps: float,
+                 rank_delay_ns: Optional[List[float]] = None):
+        self.p = program
+        self.net = net
+        self.e = net.engine
+        self.local_GBps = local_GBps
+        self.reduce_GBps = reduce_GBps
+        self.sems: Dict[Tuple[int, int], int] = {}
+        self.pcs: Dict[Tuple[int, int], int] = {}
+        self.blocked: Dict[Tuple[int, int], bool] = {}
+        self.done_at: Dict[int, float] = {}
+        self.live = 0
+        for r in range(program.num_ranks):
+            for w in range(len(program.gpus[r])):
+                self.pcs[(r, w)] = 0
+                self.blocked[(r, w)] = False
+                self.live += 1
+                delay = rank_delay_ns[r] if rank_delay_ns else 0.0
+                self.e.schedule(delay, self._advance, r, w)
+
+    # each (rank, wg) cursor advances op by op; ops take simulated time
+    def _advance(self, r: int, w: int) -> None:
+        ops = self.p.gpus[r][w]
+        pc = self.pcs[(r, w)]
+        if pc >= len(ops):
+            self._wg_done(r, w)
+            return
+        o = ops[pc]
+        if o.op in ("put", "get"):
+            peer = o.remote_rank
+            src, dst = (r, peer) if o.op == "put" else (peer, r)
+            self.pcs[(r, w)] = pc + 1
+            self.net.send(src, dst, o.size, lambda: self._advance(r, w),
+                          cls=DATA)
+        elif o.op == "copy":
+            self.pcs[(r, w)] = pc + 1
+            self.e.schedule(o.size / self.local_GBps, self._advance, r, w)
+        elif o.op == "reduce":
+            nsrc = max(1, len(o.srcs or []))
+            cost = o.size * nsrc / self.reduce_GBps
+            # remote sources pay a network round trip too
+            remote = [s for s in (o.srcs or []) if len(s) > 2 and s[2] >= 0
+                      and s[2] != r]
+            self.pcs[(r, w)] = pc + 1
+            if remote:
+                pend = {"n": len(remote)}
+
+                def got_one():
+                    pend["n"] -= 1
+                    if pend["n"] == 0:
+                        self.e.schedule(cost, self._advance, r, w)
+                for s in remote:
+                    self.net.send(s[2], r, o.size, got_one, cls=DATA)
+            else:
+                self.e.schedule(cost, self._advance, r, w)
+        elif o.op == "signal":
+            self.pcs[(r, w)] = pc + 1
+            peer, sem = o.remote_rank, o.sem
+
+            def deliver():
+                key = (peer, sem)
+                self.sems[key] = self.sems.get(key, 0) + 1
+                self._wake_waiters(peer)
+            self.net.send(r, peer, self.HDR, deliver, cls=CONTROL)
+            self.e.schedule(0, self._advance, r, w)
+        elif o.op == "wait":
+            if self.sems.get((r, o.sem), 0) >= o.expected:
+                self.pcs[(r, w)] = pc + 1
+                self.e.schedule(0, self._advance, r, w)
+            else:
+                self.blocked[(r, w)] = True
+        elif o.op == "barrier":
+            # coarse: barrier when every wg of the rank is at one
+            self.blocked[(r, w)] = True
+            if all(self.pcs[(r, w2)] >= len(self.p.gpus[r][w2]) or
+                   (self.blocked[(r, w2)] and
+                    self.p.gpus[r][w2][self.pcs[(r, w2)]].op == "barrier")
+                   for w2 in range(len(self.p.gpus[r]))):
+                for w2 in range(len(self.p.gpus[r])):
+                    pc2 = self.pcs[(r, w2)]
+                    if pc2 < len(self.p.gpus[r][w2]) and \
+                            self.p.gpus[r][w2][pc2].op == "barrier":
+                        self.pcs[(r, w2)] = pc2 + 1
+                        self.blocked[(r, w2)] = False
+                        self.e.schedule(0, self._advance, r, w2)
+        else:  # nop / flush: free at coarse granularity
+            self.pcs[(r, w)] = pc + 1
+            self.e.schedule(0, self._advance, r, w)
+
+    def _wake_waiters(self, rank: int) -> None:
+        for w in range(len(self.p.gpus[rank])):
+            if not self.blocked[(rank, w)]:
+                continue
+            pc = self.pcs[(rank, w)]
+            ops = self.p.gpus[rank][w]
+            if pc < len(ops) and ops[pc].op == "wait" and \
+                    self.sems.get((rank, ops[pc].sem), 0) >= ops[pc].expected:
+                self.blocked[(rank, w)] = False
+                self.pcs[(rank, w)] = pc + 1
+                self.e.schedule(0, self._advance, rank, w)
+
+    def _wg_done(self, r: int, w: int) -> None:
+        self.live -= 1
+        if all(self.pcs[(r, w2)] >= len(self.p.gpus[r][w2])
+               for w2 in range(len(self.p.gpus[r]))):
+            self.done_at.setdefault(r, self.e.now)

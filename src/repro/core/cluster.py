@@ -37,6 +37,8 @@ class NocConfig:
     io_GBps_per_port: float = 34.36       # 1 TiB/s cumulative / 32
     scaleup_lat_ns: float = 1000.0        # 1 us inter-GPU link latency
     arbitration: str = "fifo"             # "fifo" | "fair"  (Fig. 11)
+    fabric_mode: str = "coalesce"         # "coalesce" | "exact" | "classic"
+    coalesce_window_ns: Optional[float] = None   # None -> fabric default
 
     @property
     def num_cus(self) -> int:
@@ -56,7 +58,19 @@ class Cluster:
         cfg.num_cus = self.noc.num_cus
         cfg.hbm_latency_ns = self.noc.mem_lat_ns
         self.gpu_config = cfg
-        self.fabric = Fabric(self.engine, default_policy=self.noc.arbitration)
+        self.fabric = Fabric(self.engine, default_policy=self.noc.arbitration,
+                             mode=self.noc.fabric_mode,
+                             coalesce_window_ns=self.noc.coalesce_window_ns)
+        # lookahead regions, one per GPU: every link is tagged with the
+        # region whose events admit traffic onto it (on-chip links and the
+        # GPU's outbound scale-up side), so a region's horizon provably
+        # covers all traffic headed its way and chains can run ahead of
+        # other GPUs' clocks (engine docstring: Chandy-Misra-style
+        # lookahead).  Inbound scale-up links belong to the *destination*
+        # GPU's region: a train parking there becomes visible to that
+        # region's horizon before any of its downstream arrivals.
+        self.regions = [self.engine.new_region() for _ in range(num_gpus)]
+        self._hbm_lat_ps = int(round(cfg.hbm_latency_ns * 1000))
         self.gpus: List[GpuModel] = []
         self._build(num_gpus, topology)
         self._inflight = 0
@@ -67,6 +81,7 @@ class Cluster:
         fab = self.fabric
         n = self.noc
         for g in range(num_gpus):
+            rg = self.regions[g]
             routers = [[fab.add_node(f"g{g}.r{x}_{y}") for y in range(n.mesh_y)]
                        for x in range(n.mesh_x)]
             # 2-D mesh of routers
@@ -74,17 +89,19 @@ class Cluster:
                 for y in range(n.mesh_y):
                     if x + 1 < n.mesh_x:
                         fab.add_bidi(routers[x][y], routers[x + 1][y],
-                                     n.onchip_GBps, n.onchip_lat_ns)
+                                     n.onchip_GBps, n.onchip_lat_ns,
+                                     region=rg)
                     if y + 1 < n.mesh_y:
                         fab.add_bidi(routers[x][y], routers[x][y + 1],
-                                     n.onchip_GBps, n.onchip_lat_ns)
+                                     n.onchip_GBps, n.onchip_lat_ns,
+                                     region=rg)
             # CUs
             cu_nodes = []
             for i in range(n.num_cus):
                 r = routers[(i // n.cus_per_router) % n.mesh_x][
                     (i // n.cus_per_router) // n.mesh_x % n.mesh_y]
                 c = fab.add_node(f"g{g}.cu{i}")
-                fab.add_bidi(c, r, n.onchip_GBps, 1.0)
+                fab.add_bidi(c, r, n.onchip_GBps, 1.0, region=rg)
                 cu_nodes.append(c)
             # HBM channels on the top (y=0) and bottom (y=max) rows
             hbm_nodes = []
@@ -93,7 +110,7 @@ class Cluster:
                 col = i % n.mesh_x
                 h = fab.add_node(f"g{g}.hbm{i}")
                 fab.add_bidi(h, routers[col][row],
-                             n.mem_GBps_per_channel, 1.0)
+                             n.mem_GBps_per_channel, 1.0, region=rg)
                 hbm_nodes.append(h)
             # I/O ports on the left (x=0) and right (x=max) columns
             io_nodes = []
@@ -101,29 +118,51 @@ class Cluster:
                 col = 0 if i < n.io_ports // 2 else n.mesh_x - 1
                 row = i % n.mesh_y
                 p = fab.add_node(f"g{g}.io{i}")
-                fab.add_bidi(p, routers[col][row], n.io_GBps_per_port, 1.0)
+                fab.add_bidi(p, routers[col][row], n.io_GBps_per_port, 1.0,
+                             region=rg)
                 io_nodes.append(p)
             gpu = GpuModel(g, self.gpu_config, self.engine, fab, self,
-                           cu_nodes, hbm_nodes, io_nodes)
+                           cu_nodes, hbm_nodes, io_nodes, region=rg)
             self.gpus.append(gpu)
-        # scale-up fabric between the GPUs' I/O ports
-        if num_gpus > 1:
+        # scale-up fabric between the GPUs' I/O ports ("none" leaves the
+        # wiring to the caller — e.g. infragraph.translate.to_cluster,
+        # which wires it from InfraGraph fabric edges)
+        if num_gpus > 1 and topology != "none":
             if topology == "switch":
                 sw = fab.add_node("scaleup.sw0")
                 for g in range(num_gpus):
                     for p, io in enumerate(self.gpus[g].io_nodes):
+                        # both directions belong to GPU g's region: io->sw
+                        # is fed solely by g's chains, and sw->io is where
+                        # inbound trains park — the park must be visible to
+                        # g's horizon before any downstream arrival
                         fab.add_bidi(io, sw, n.io_GBps_per_port,
-                                     n.scaleup_lat_ns / 2)
+                                     n.scaleup_lat_ns / 2,
+                                     region=self.regions[g])
             elif topology == "ring":
                 for g in range(num_gpus):
                     nxt = (g + 1) % num_gpus
                     half = len(self.gpus[g].io_nodes) // 2
                     for p in range(half):
-                        fab.add_bidi(self.gpus[g].io_nodes[half + p],
-                                     self.gpus[nxt].io_nodes[p],
-                                     n.io_GBps_per_port, n.scaleup_lat_ns)
+                        a = self.gpus[g].io_nodes[half + p]
+                        b = self.gpus[nxt].io_nodes[p]
+                        # each direction tagged with the receiving GPU
+                        fab.add_link(a, b, n.io_GBps_per_port,
+                                     n.scaleup_lat_ns,
+                                     region=self.regions[nxt])
+                        fab.add_link(b, a, n.io_GBps_per_port,
+                                     n.scaleup_lat_ns,
+                                     region=self.regions[g])
             else:
                 raise ValueError(f"unknown scale-up topology {topology!r}")
+            # cross-GPU traffic enters a region through its inbound
+            # scale-up hop: that hop's latency bounds how fast foreign
+            # events can reach interior links
+            guard = (n.scaleup_lat_ns / 2 if topology == "switch"
+                     else n.scaleup_lat_ns)
+            for g in range(num_gpus):
+                fab.set_region_guard(self.regions[g], guard)
+                self.gpus[g].region_guard_ps = int(round(guard * 1000))
 
     # ------------------------------------------------------------ dispatch
     def dispatch(self, kernel: Kernel) -> None:
@@ -133,8 +172,8 @@ class Cluster:
         return self.engine.run(until_ns)
 
     # -------------------------------------------------- request/response flow
-    def send_request(self, req: WRequest) -> None:
-        """CU -> memory endpoint request leg."""
+    def send_request(self, req: WRequest, at_ps: Optional[int] = None) -> None:
+        """CU -> memory endpoint request leg (at ``at_ps``, default now)."""
         self.request_count += 1
         mem = req.mem
         target_gpu = self.gpus[mem.gpu]
@@ -150,7 +189,8 @@ class Cluster:
             size, cls = req.size + hdr, DATA
         route = self._route(src_gpu, src_cu.node, target_gpu, dst_node,
                             mem.addr)
-        self.fabric.send(route, size, cls, self._arrive_at_memory, payload=req)
+        self.fabric.send_at(route, size, cls, self._arrive_at_memory,
+                            payload=req, at_ps=at_ps, eager=True)
 
     def _route(self, src_gpu: GpuModel, src_node: int, dst_gpu: GpuModel,
                dst_node: int, addr: int) -> List:
@@ -165,31 +205,44 @@ class Cluster:
         return self.fabric.route_via(via)
 
     def _arrive_at_memory(self, flight: Flight) -> None:
+        """Request delivery at a memory endpoint.
+
+        This callback is *eager* (time-stamp driven): it may run at final-
+        hop commit time, before the simulated arrival — it reads the
+        arrival tick from ``flight.eta_ps`` and only schedules absolute-
+        time effects.  Per-endpoint FIFO makes those effects monotone.
+        """
         req: WRequest = flight.payload
         mem = req.mem
         target_gpu = self.gpus[mem.gpu]
-        # memory access latency, then the response leg
-        self.engine.schedule(target_gpu.config.hbm_latency_ns,
-                             self._respond, req)
-
-    def _respond(self, req: WRequest) -> None:
-        mem = req.mem
-        target_gpu = self.gpus[mem.gpu]
-        src_cu = req.cu
         hdr = target_gpu.config.header_bytes
-        if req.kind == IKind.LOAD:
+        kind = req.kind
+        eta = flight.eta_ps
+        if eta < 0:
+            eta = self.engine.now_ps
+        if kind == IKind.LOAD:
             size, cls = req.size + hdr, DATA      # data response
-        elif req.kind == IKind.SEM_ACQUIRE:
-            size, cls = hdr, CONTROL              # value response
-        elif req.kind == IKind.SEM_RELEASE:
-            target_gpu.sem_bump(mem.addr)         # value lands at home
+        elif kind == IKind.SEM_RELEASE:
+            # the value lands at its home endpoint after the access latency;
+            # the state change needs its own correctly-timed event
+            self.engine.schedule_abs_ps(eta + self._hbm_lat_ps,
+                                        target_gpu.sem_bump, mem.addr,
+                                        region=self.regions[mem.gpu])
             size, cls = hdr, CONTROL              # ack
-        else:  # STORE ack
+        else:  # STORE ack / SEM_ACQUIRE value response
             size, cls = hdr, CONTROL
+        # every response leaves exactly one fixed access latency after its
+        # request arrived, and requests arrive in per-endpoint FIFO order —
+        # so response injections per endpoint are monotone and the whole
+        # injection folds into this event via ``send_at`` (one heap event
+        # saved per round trip).  Folding *all* kinds keeps the per-link
+        # monotonicity contract airtight.
+        src_cu = req.cu
         src_node = target_gpu.hbm_node_for(mem.addr, mem.space)
         route = self._route(target_gpu, src_node, src_cu.gpu, src_cu.node,
                             mem.addr)
-        self.fabric.send(route, size, cls, self._arrive_at_cu, payload=req)
+        self.fabric.send_at(route, size, cls, self._arrive_at_cu,
+                            payload=req, at_ps=eta + self._hbm_lat_ps)
 
     def _arrive_at_cu(self, flight: Flight) -> None:
         req: WRequest = flight.payload

@@ -5,10 +5,20 @@ event queue.  Every model component (compute units, NoC links, semaphores,
 network interfaces) schedules callbacks here.  Time is kept in integer
 *picoseconds* internally to make event ordering exactly deterministic and
 immune to float round-off; the public API speaks float nanoseconds.
+
+Lookahead regions
+-----------------
+Events may carry a *region* tag (0 = untagged/global).  ``peek_region(r)``
+returns the earliest pending tick among region-``r`` and untagged events.
+The fabric fast path uses this as a per-region lookahead horizon: a GPU's
+NoC only receives traffic from its own region's events (plus global ones),
+so service can be committed ahead of the global clock without waiting on
+unrelated regions — the discrete-event analogue of Chandy-Misra lookahead.
 """
 
 from __future__ import annotations
 
+import gc as _gc
 import heapq
 import time as _wallclock
 from typing import Any, Callable, List, Optional, Tuple
@@ -25,15 +35,21 @@ class Engine:
     """
 
     __slots__ = ("_queue", "_now_ps", "_seq", "events_processed", "_running",
-                 "_wall_start")
+                 "_wall_start", "_rheaps", "_regioned")
 
     def __init__(self) -> None:
-        self._queue: List[Tuple[int, int, Callable[..., None], tuple]] = []
+        # (tick, seq, fn, args, region)
+        self._queue: List[Tuple[int, int, Callable[..., None], tuple, int]] = []
         self._now_ps: int = 0
         self._seq: int = 0
         self.events_processed: int = 0
         self._running = False
         self._wall_start: Optional[float] = None
+        # per-region pending-tick heaps; [0] tracks untagged events.
+        # Maintained only once a region exists — engines that never call
+        # new_region() (coarse/analytic tiers) skip the mirror bookkeeping.
+        self._rheaps: List[List[int]] = [[]]
+        self._regioned = False
 
     # ------------------------------------------------------------------ time
     @property
@@ -46,44 +62,126 @@ class Engine:
         return self._now_ps
 
     # ------------------------------------------------------------- scheduling
-    def schedule(self, delay_ns: float, fn: Callable[..., None], *args: Any) -> None:
+    def new_region(self) -> int:
+        """Allocate a lookahead region id (see module docstring)."""
+        if not self._regioned:
+            self._regioned = True
+            # backfill the untagged mirror with already-pending events
+            self._rheaps[0] = [e[0] for e in self._queue]
+            heapq.heapify(self._rheaps[0])
+        self._rheaps.append([])
+        return len(self._rheaps) - 1
+
+    def _push(self, at_ps: int, fn: Callable[..., None], args: tuple,
+              region: int) -> None:
+        heapq.heappush(self._queue, (at_ps, self._seq, fn, args, region))
+        self._seq += 1
+        if self._regioned:
+            heapq.heappush(self._rheaps[region], at_ps)
+
+    def schedule(self, delay_ns: float, fn: Callable[..., None], *args: Any,
+                 region: int = 0) -> None:
         """Schedule ``fn(*args)`` ``delay_ns`` nanoseconds from now."""
         if delay_ns < 0:
             raise ValueError(f"negative delay: {delay_ns}")
-        at_ps = self._now_ps + int(round(delay_ns * _PS_PER_NS))
-        heapq.heappush(self._queue, (at_ps, self._seq, fn, args))
-        self._seq += 1
+        self._push(self._now_ps + int(round(delay_ns * _PS_PER_NS)), fn, args,
+                   region)
 
-    def schedule_ps(self, delay_ps: int, fn: Callable[..., None], *args: Any) -> None:
-        heapq.heappush(self._queue, (self._now_ps + delay_ps, self._seq, fn, args))
-        self._seq += 1
+    def schedule_ps(self, delay_ps: int, fn: Callable[..., None], *args: Any,
+                    region: int = 0) -> None:
+        self._push(self._now_ps + delay_ps, fn, args, region)
+
+    def schedule_abs_ps(self, at_ps: int, fn: Callable[..., None], *args: Any,
+                        region: int = 0) -> None:
+        """Schedule at an absolute tick (used by the fabric fast path, which
+        precomputes service completion times in integer picoseconds)."""
+        if at_ps < self._now_ps:
+            raise ValueError(f"cannot schedule in the past: {at_ps} < {self._now_ps}")
+        self._push(at_ps, fn, args, region)
+
+    def peek_ps(self) -> Optional[int]:
+        """Timestamp of the earliest pending event, or None if idle.
+
+        The coalescing fast path uses this as its *lookahead horizon*: no new
+        flight can be injected or arrive anywhere before this tick, so link
+        service committed strictly before it can never violate FIFO order.
+        """
+        q = self._queue
+        return q[0][0] if q else None
+
+    def peek_region(self, region: int) -> Optional[int]:
+        """Earliest pending tick that could affect region ``region``.
+
+        Region 0 (untagged) can be reached by any event, so its horizon is
+        the global queue minimum; a tagged region is only reachable from its
+        own events plus untagged ones.
+        """
+        if not region:
+            q = self._queue
+            return q[0][0] if q else None
+        g = self._rheaps[0]
+        r = self._rheaps[region]
+        if r:
+            if g:
+                return r[0] if r[0] < g[0] else g[0]
+            return r[0]
+        return g[0] if g else None
 
     def at(self, time_ns: float, fn: Callable[..., None], *args: Any) -> None:
         """Schedule ``fn(*args)`` at absolute time ``time_ns``."""
         at_ps = int(round(time_ns * _PS_PER_NS))
         if at_ps < self._now_ps:
             raise ValueError(f"cannot schedule in the past: {time_ns} < {self.now}")
-        heapq.heappush(self._queue, (at_ps, self._seq, fn, args))
-        self._seq += 1
+        self._push(at_ps, fn, args, 0)
 
     # -------------------------------------------------------------- execution
     def run(self, until_ns: Optional[float] = None, max_events: Optional[int] = None) -> float:
-        """Drain the event queue.  Returns final simulation time (ns)."""
+        """Drain the event queue.  Returns final simulation time (ns).
+
+        The cyclic GC is paused for the duration: the event loop allocates
+        millions of short-lived tuples/flights and generational scans cost
+        20%+ of wall time, while true cycles only form in long-lived model
+        objects that a single collection at the end reclaims.
+        """
         until_ps = None if until_ns is None else int(round(until_ns * _PS_PER_NS))
         self._running = True
         self._wall_start = _wallclock.perf_counter()
         q = self._queue
+        rheaps = self._rheaps if self._regioned else None
+        pop = heapq.heappop
         n = 0
-        while q and self._running:
-            at_ps, _, fn, args = q[0]
-            if until_ps is not None and at_ps > until_ps:
-                break
-            heapq.heappop(q)
-            self._now_ps = at_ps
-            fn(*args)
-            n += 1
-            if max_events is not None and n >= max_events:
-                break
+        gc_was_enabled = _gc.isenabled()
+        if gc_was_enabled:
+            _gc.disable()
+        try:
+            if rheaps is None:
+                while q and self._running:
+                    at_ps = q[0][0]
+                    if until_ps is not None and at_ps > until_ps:
+                        break
+                    _, _, fn, args, _ = pop(q)
+                    self._now_ps = at_ps
+                    fn(*args)
+                    n += 1
+                    if max_events is not None and n >= max_events:
+                        break
+                    if self._regioned:      # a region appeared mid-run
+                        rheaps = self._rheaps
+                        break
+            while q and self._running:
+                at_ps, _, fn, args, region = q[0]
+                if until_ps is not None and at_ps > until_ps:
+                    break
+                pop(q)
+                pop(rheaps[region])
+                self._now_ps = at_ps
+                fn(*args)
+                n += 1
+                if max_events is not None and n >= max_events:
+                    break
+        finally:
+            if gc_was_enabled:
+                _gc.enable()
         self.events_processed += n
         self._running = False
         if until_ps is not None and q and q[0][0] > until_ps:

@@ -91,7 +91,8 @@ class _KernelExec:
 
 class ComputeUnit:
     __slots__ = ("gpu", "idx", "resident", "outstanding", "_rr",
-                 "_scheduled", "_busy_until", "node", "waiters_waitcnt")
+                 "_scheduled", "_busy_until", "node", "waiters_waitcnt",
+                 "_ticking", "_wake_again", "_order")
 
     def __init__(self, gpu: "GpuModel", idx: int, node: int):
         self.gpu = gpu
@@ -102,60 +103,163 @@ class ComputeUnit:
         self._rr = 0
         self._scheduled = False
         self._busy_until = 0.0           # REDUCE occupancy
+        self._ticking = False            # a batch scan is on the stack
+        self._wake_again = False         # state changed mid-scan: rescan
+        self._order: Optional[List[Tuple["_WGExec", WavefrontState]]] = None
 
     # ----------------------------------------------------------------- wake
     def wake(self) -> None:
         if self._scheduled:
             return
-        self._scheduled = True
+        if self._ticking:
+            # an issue scan is on the stack (e.g. a sync just resolved
+            # inside it): tell it to rescan instead of recursing
+            self._wake_again = True
+            return
         now = self.gpu.engine.now
-        delay = max(0.0, self._busy_until - now)
-        self.gpu.engine.schedule(delay, self._tick)
+        delay = self._busy_until - now
+        if delay <= 0.0:
+            # nothing to wait for: issue now, saving a zero-delay heap event
+            # (this runs inside the waking event, e.g. a response delivery)
+            self._tick()
+            return
+        self._scheduled = True
+        self.gpu.engine.schedule(delay, self._tick, region=self.gpu.region)
+
+    def wake_deferred(self) -> None:
+        """Schedule a tick instead of issuing inline (used by kernel
+        dispatch so that ``Cluster.dispatch`` never executes model code
+        synchronously — e.g. a cooperative-launch violation surfaces from
+        ``run()``, not from the dispatch call)."""
+        if self._scheduled:
+            return
+        if self._ticking:
+            self._wake_again = True
+            return
+        self._scheduled = True
+        delay = max(0.0, self._busy_until - self.gpu.engine.now)
+        self.gpu.engine.schedule(delay, self._tick, region=self.gpu.region)
 
     # ----------------------------------------------------------------- tick
     def _tick(self) -> None:
+        """Issue instructions, batching consecutive cycles into one event.
+
+        The classic cadence is one heap event per issued instruction (one
+        per cycle).  Since nothing can change this CU's issue decisions
+        before (a) the earliest pending event of its region and (b) the
+        soonest possible completion of a request issued in this very batch
+        (one memory access latency away, thanks to the response fold), the
+        cadence can run ahead on *virtual* time, injecting each Wavefront
+        Request at its exact future issue tick via the fabric's monotone
+        ``send_at`` — identical times, one heap event per stall instead of
+        per instruction.  Syncs, barriers and retirements always process on
+        a real event (the batch re-schedules itself for them).
+        """
         self._scheduled = False
         if not self.resident:
             return
-        issued = False
-        n_wf_total = sum(len(w.wavefronts) for w in self.resident)
-        scanned = 0
-        order: List[Tuple[_WGExec, WavefrontState]] = []
-        for wgx in self.resident:
-            for wf in wgx.wavefronts:
-                order.append((wgx, wf))
+        gpu = self.gpu
+        eng = gpu.engine
+        cycle_ns = gpu.config.cycle_ns
+        now_ps = eng.now_ps
+        t_ps = now_ps
+        bound = None
+        self._ticking = True
+        try:
+            while True:
+                self._wake_again = False
+                res = self._scan(t_ps)
+                if res == 0:                  # idle
+                    if self._wake_again:
+                        continue
+                    return
+                if res == 2:                  # sync/retire needs real event
+                    self._scheduled = True
+                    eng.schedule_abs_ps(t_ps, self._tick, region=gpu.region)
+                    return
+                # next issue slot, same arithmetic as the event cadence
+                delay = self._busy_until - t_ps / 1000.0
+                if delay < cycle_ns:
+                    delay = cycle_ns
+                nt = t_ps + int(round(delay * 1000))
+                if bound is None:
+                    bound = self._issue_bound(eng, now_ps)
+                if nt >= bound:
+                    self._scheduled = True
+                    eng.schedule_abs_ps(nt, self._tick, region=gpu.region)
+                    return
+                t_ps = nt
+        finally:
+            self._ticking = False
+
+    def _issue_bound(self, eng, now_ps: int) -> int:
+        """Latest tick (exclusive) this batch may issue at without missing
+        a state change: the region lookahead horizon, capped by the soonest
+        completion a request issued in this batch could produce."""
+        gpu = self.gpu
+        bound = eng.peek_region(gpu.region)
+        if gpu.region:
+            gmin = eng.peek_ps()
+            if gmin is not None:
+                cap = gmin + gpu.region_guard_ps
+                if bound is None or cap < bound:
+                    bound = cap
+        own = now_ps + gpu.completion_guard_ps
+        if bound is None or own < bound:
+            bound = own
+        return bound
+
+    def _scan(self, t_ps: int) -> int:
+        """One cadence step at (virtual) tick ``t_ps``.
+
+        Returns 1 if an instruction was issued, 0 if nothing is issuable,
+        2 if a sync/retire was encountered ahead of real time (the caller
+        must re-enter on a real event at ``t_ps``).
+        """
+        real = t_ps <= self.gpu.engine.now_ps
+        order = self._order
+        if order is None:
+            order = [(wgx, wf) for wgx in self.resident
+                     for wf in wgx.wavefronts]
+            self._order = order
         k = len(order)
         start = self._rr % k if k else 0
         for i in range(k):
             wgx, wf = order[(start + i) % k]
             if wf.done or wf.waiting is not None:
+                if wf.done and wf.outstanding == 0:
+                    # a virtual-time scan may have exhausted this wavefront
+                    # (fetch sets ``done``) and then aborted to a real event
+                    # before retiring: retirement must be retried here
+                    if not real:
+                        return 2
+                    self._maybe_retire(wgx)
                 continue
             sync = wf.peek_sync()
             if sync is not None:
+                if not real:
+                    return 2
                 self._handle_sync(wgx, wf, sync)
                 continue
             ins = wf.fetch()
             if ins is None:
                 # wavefront finished all ops
                 if wf.done:
+                    if not real:
+                        return 2
                     self._maybe_retire(wgx)
                 continue
-            if self._issue(wgx, wf, ins):
+            if self._issue(wgx, wf, ins, t_ps):
                 wf.consume()
                 self._rr = (start + i + 1) % k
-                issued = True
-                break
-        if issued:
-            # one instruction per cycle
-            self._scheduled = True
-            self.gpu.engine.schedule(
-                max(self.gpu.config.cycle_ns,
-                    self._busy_until - self.gpu.engine.now), self._tick)
+                return 1
+        return 0
 
     # ---------------------------------------------------------------- issue
-    def _issue(self, wgx: _WGExec, wf: WavefrontState, ins: Instruction) -> bool:
-        """Try to issue one instruction.  Returns True if it consumed the
-        issue slot for this cycle."""
+    def _issue(self, wgx: _WGExec, wf: WavefrontState, ins: Instruction,
+               t_ps: int) -> bool:
+        """Try to issue one instruction at tick ``t_ps``.  Returns True if
+        it consumed the issue slot for this cycle."""
         kind = ins.kind
         if kind == IKind.WAITCNT:
             if wf.outstanding <= ins.threshold:
@@ -164,7 +268,7 @@ class ComputeUnit:
             wf.fetched = ins             # re-check on completion
             return False
         if kind == IKind.REDUCE:
-            self._busy_until = self.gpu.engine.now + ins.cycles * self.gpu.config.cycle_ns
+            self._busy_until = t_ps / 1000.0 + ins.cycles * self.gpu.config.cycle_ns
             return True
         # memory instruction
         if self.outstanding >= self.gpu.config.max_outstanding:
@@ -175,23 +279,25 @@ class ComputeUnit:
             wf.waiting = "sem"
             req = WRequest(kind, ins.mem, self.gpu.config.header_bytes, self, wf)
             req.value = ins.threshold    # expected count rides along
-            self._inject(req)
+            self._inject(req, t_ps)
             return True
         if kind == IKind.SEM_RELEASE:
             req = WRequest(kind, ins.mem, self.gpu.config.header_bytes, self, wf)
             wf.outstanding += 1
-            self._inject(req)
+            self._inject(req, t_ps)
             return True
         # LOAD / STORE
         req = WRequest(kind, ins.mem, ins.size, self, wf)
         wf.outstanding += 1
-        self._inject(req)
+        self._inject(req, t_ps)
         return True
 
-    def _inject(self, req: WRequest) -> None:
+    def _inject(self, req: WRequest, at_ps: Optional[int] = None) -> None:
         self.outstanding += 1
-        req.issued_ns = self.gpu.engine.now
-        self.gpu.cluster.send_request(req)
+        if at_ps is None:
+            at_ps = self.gpu.engine.now_ps
+        req.issued_ns = at_ps / 1000.0
+        self.gpu.cluster.send_request(req, at_ps)
 
     # ------------------------------------------------------------ completion
     def complete(self, req: WRequest) -> None:
@@ -254,6 +360,7 @@ class ComputeUnit:
         if not wgx.done() or wgx not in self.resident:
             return
         self.resident.remove(wgx)
+        self._order = None
         self.gpu.wg_retired(self, wgx)
 
 
@@ -263,8 +370,15 @@ class GpuModel:
     def __init__(self, gid: int, config: GpuConfig, engine: Engine,
                  fabric: Fabric, cluster: "Cluster",
                  cu_nodes: List[int], hbm_nodes: List[int],
-                 io_nodes: List[int]):
+                 io_nodes: List[int], region: int = 0,
+                 region_guard_ps: int = 0):
         self.gid = gid
+        self.region = region
+        self.region_guard_ps = region_guard_ps
+        # soonest a request issued now can complete: it must at least reach
+        # its memory endpoint and pay the access latency (response folding
+        # guarantees nothing returns faster)
+        self.completion_guard_ps = int(round(config.hbm_latency_ns * 1000))
         self.config = config
         self.engine = engine
         self.fabric = fabric
@@ -298,7 +412,8 @@ class GpuModel:
                 wgx = _WGExec(wg, kx.kernel, self.config.op_context())
                 self._wg_to_kernel[id(wgx)] = kx
                 cu.resident.append(wgx)
-                cu.wake()
+                cu._order = None
+                cu.wake_deferred()
                 attempts = 0
 
     def wg_retired(self, cu: ComputeUnit, wgx: _WGExec) -> None:

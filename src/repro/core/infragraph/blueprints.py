@@ -63,12 +63,16 @@ def generic_gpu_device(mesh_x: int = 8, mesh_y: int = 4,
     return d
 
 
-def simple_gpu_device(nic_GBps: float = 50.0) -> Device:
-    """Coarse GPU: one compute vertex + one NIC (for scale-out studies)."""
-    d = Device("sgpu", [Component("gpu", 1), Component("nic", 1,
-                                                       (("GBps", nic_GBps),))])
+def simple_gpu_device(nic_GBps: float = 50.0, nics: int = 1) -> Device:
+    """Coarse GPU: one compute vertex + ``nics`` NICs (scale-out studies;
+    ring/torus fabrics need one NIC per direction)."""
+    d = Device("sgpu" if nics == 1 else f"sgpu{nics}n", [
+        Component("gpu", 1),
+        Component("nic", nics, (("GBps", nic_GBps),)),
+    ])
     d.add_link_type(LinkType("pcie", 64.0, 500.0))
-    d.wire(("gpu", 0), ("nic", 0), "pcie")
+    for i in range(nics):
+        d.wire(("gpu", 0), ("nic", i), "pcie")
     return d
 
 
@@ -139,6 +143,30 @@ def single_tier_fabric(num_hosts: int = 4, device: Optional[Device] = None,
     nic = "nic" if any(c.name == "nic" for c in dev.components) else "io"
     for h in range(num_hosts):
         infra.connect(("host", h, nic, 0), ("switch", 0, "port", h), "eth")
+    return infra
+
+
+def ring_fabric(num_hosts: int = 4, device: Optional[Device] = None,
+                link_GBps: float = 50.0,
+                link_lat_ns: float = 1000.0) -> Infrastructure:
+    """Ring scale-up fabric: host ``i``'s second NIC to host ``i+1``'s
+    first (directional pair per neighbor), no switch at all.  The
+    fine-grained translator maps these edges onto the detailed GPUs' I/O
+    ports, so the same blueprint exercises ring wiring at every fidelity
+    tier."""
+    dev = device or simple_gpu_device(link_GBps, nics=2)
+    port = ("nic" if any(c.name == "nic" for c in dev.components)
+            else ("ici" if any(c.name == "ici" for c in dev.components)
+                  else "io"))
+    nports = dev.component(port).count
+    if nports < 2:
+        raise ValueError("ring fabric needs >= 2 ports per device")
+    infra = Infrastructure(f"ring_{num_hosts}")
+    infra.add(dev, "host", num_hosts)
+    infra.add_link_type(LinkType("ring", link_GBps, link_lat_ns))
+    for h in range(num_hosts):
+        infra.connect(("host", h, port, 1),
+                      ("host", (h + 1) % num_hosts, port, 0), "ring")
     return infra
 
 

@@ -7,7 +7,10 @@ One InfraGraph description drives every network backend:
   and decomposes the node count into multi-dimensional groups (what the
   paper's Simple translator does);
 * ``to_cluster``         — builds a fine-grained GPU Cluster whose scale-up
-  wiring comes from the InfraGraph fabric edges instead of the built-ins.
+  wiring comes from the InfraGraph fabric edges instead of the built-ins:
+  ring, switch, leaf/spine or torus blueprints all become real scale-up
+  topologies between the detailed GPUs' I/O ports, and the graph's link
+  properties (bandwidth/latency) override the ``NocConfig`` defaults.
 """
 
 from __future__ import annotations
@@ -18,6 +21,9 @@ from ..engine import Engine
 from ..network.fabric import Fabric
 from ..network.simple import SimpleTopology
 from .graph import FQGraph, Infrastructure
+
+#: component kinds that carry collective ranks, in detection order
+ENDPOINT_KINDS = ("gpu", "core", "cu")
 
 
 def to_fabric(infra: Infrastructure, engine: Optional[Engine] = None,
@@ -32,7 +38,7 @@ def to_fabric(infra: Infrastructure, engine: Optional[Engine] = None,
     return fab, g
 
 
-def endpoint_nodes(g: FQGraph, kinds: Tuple[str, ...] = ("gpu", "core", "cu")
+def endpoint_nodes(g: FQGraph, kinds: Tuple[str, ...] = ENDPOINT_KINDS
                    ) -> List[str]:
     """Rank-bearing endpoints in deterministic order."""
     out: List[str] = []
@@ -53,6 +59,7 @@ def to_simple_topology(infra: Infrastructure) -> SimpleTopology:
       * leaf/spine (two tiers)    -> (hosts-per-leaf, "switch") x (leaves,
                                       "switch")
       * torus edges               -> per-axis "ring" dims
+      * anything else             -> one "ring" dim (direct neighbor wiring)
     """
     g = infra.expand()
     eps = endpoint_nodes(g)
@@ -89,16 +96,92 @@ def to_simple_topology(infra: Infrastructure) -> SimpleTopology:
     return SimpleTopology([(n, bw, lat, "ring")])
 
 
-def to_cluster(infra: Infrastructure, noc=None, gpu_config=None):
+def _endpoint_units(g: FQGraph) -> List[Tuple[str, int]]:
+    """(instance, index) device units that carry ranks, in rank order."""
+    units: List[Tuple[str, int]] = []
+    seen = set()
+    for name in endpoint_nodes(g):
+        inst, idx = name.split(".")[0], int(name.split(".")[1])
+        key = (inst, idx)
+        if key in seen:
+            raise NotImplementedError(
+                f"device instance {inst}.{idx} carries multiple rank "
+                f"endpoints; to_cluster maps one detailed GPU per device")
+        seen.add(key)
+        units.append(key)
+    return units
+
+
+def to_cluster(infra: Infrastructure, noc=None, gpu_config=None,
+               engine: Optional[Engine] = None):
     """Fine-grained Cluster whose scale-up topology mirrors the InfraGraph.
 
-    Endpoint devices become detailed GPUs (NoC + CUs + HBM); switch/torus
-    wiring between their I/O ports follows the InfraGraph edges.
+    Endpoint devices become detailed GPUs (NoC + CUs + HBM); the wiring
+    between their I/O ports follows the InfraGraph fabric edges — a port
+    component ``<dev>.<i>.<port>.<p>`` maps onto the detailed GPU ``i``'s
+    I/O port ``p`` (mod the NoC's port count), switch devices become fabric
+    nodes with their internal wiring, and every added link takes its
+    bandwidth/latency from the graph's LinkType, *not* from the
+    ``NocConfig`` scale-up defaults.
     """
-    from ..cluster import Cluster, NocConfig
+    from ..cluster import Cluster
 
     g = infra.expand()
-    eps = endpoint_nodes(g)
-    n = len(eps)
-    cluster = Cluster(n, gpu_config=gpu_config, noc=noc, topology="switch")
+    units = _endpoint_units(g)
+    n = len(units)
+    if n == 0:
+        raise ValueError("no endpoints (gpu/core/cu) in infrastructure")
+    rank_of = {unit: r for r, unit in enumerate(units)}
+    cluster = Cluster(n, gpu_config=gpu_config, noc=noc,
+                      engine=engine, topology="none")
+    fab = cluster.fabric
+
+    def is_unit(name: str) -> bool:
+        parts = name.split(".")
+        return (parts[0], int(parts[1])) in rank_of
+
+    def resolve(name: str) -> int:
+        """FQ node -> fabric node id (endpoint ports map onto GPU I/O)."""
+        inst, idx, comp, cidx = name.split(".")
+        unit = (inst, int(idx))
+        rank = rank_of.get(unit)
+        if rank is None:
+            return fab.add_node(name)         # switch-side component
+        gpu = cluster.gpus[rank]
+        return gpu.io_nodes[int(cidx) % len(gpu.io_nodes)]
+
+    # one scale-up region guard per GPU: the min latency of inbound edges
+    inbound_lat: Dict[int, float] = {}
+    wired = 0
+    for (src, dst), lt in g.edges.items():
+        src_unit, dst_unit = is_unit(src), is_unit(dst)
+        if src_unit and dst_unit and \
+                src.split(".")[:2] == dst.split(".")[:2]:
+            continue                          # device-internal edge: the
+                                              # detailed NoC already models it
+        if not src_unit and not dst_unit and \
+                src.split(".")[:2] == dst.split(".")[:2]:
+            # switch-internal edge (port <-> asic): wire as-is
+            fab.add_link(resolve(src), resolve(dst), lt.bandwidth_GBps,
+                         lt.latency_ns, name=f"{src}->{dst}:{lt.name}")
+            wired += 1
+            continue
+        u, v = resolve(src), resolve(dst)
+        region = 0
+        if dst_unit:
+            rank = rank_of[(dst.split(".")[0], int(dst.split(".")[1]))]
+            region = cluster.regions[rank]
+            lat = inbound_lat.get(rank)
+            inbound_lat[rank] = lt.latency_ns if lat is None \
+                else min(lat, lt.latency_ns)
+        fab.add_link(u, v, lt.bandwidth_GBps, lt.latency_ns, region=region,
+                     name=f"{src}->{dst}:{lt.name}")
+        wired += 1
+    if n > 1 and wired == 0:
+        raise ValueError(
+            f"infrastructure {infra.name!r} has no fabric edges between "
+            f"its {n} endpoint devices; the cluster would be disconnected")
+    for rank, lat in inbound_lat.items():
+        fab.set_region_guard(cluster.regions[rank], lat)
+        cluster.gpus[rank].region_guard_ps = int(round(lat * 1000))
     return cluster

@@ -28,16 +28,27 @@ class Space(enum.IntEnum):
     SEM = 1             # semaphore scratch space (one cache line per semaphore)
 
 
-@dataclass(frozen=True)
 class MemRef:
     """A memory location: ``(gpu, space, addr)``.
 
     ``addr`` is a byte address inside the space.  For HBM it selects the
     memory channel by cache-line interleaving; for SEM it is the semaphore id.
+    (A plain slotted class — one is allocated per simulated instruction, so
+    dataclass machinery is too heavy here.)
     """
-    gpu: int
-    space: Space
-    addr: int
+    __slots__ = ("gpu", "space", "addr")
+
+    def __init__(self, gpu: int, space: Space, addr: int):
+        self.gpu = gpu
+        self.space = space
+        self.addr = addr
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, MemRef) and self.gpu == other.gpu
+                and self.space == other.space and self.addr == other.addr)
+
+    def __hash__(self) -> int:
+        return hash((self.gpu, self.space, self.addr))
 
     def __repr__(self) -> str:  # compact traces
         return f"g{self.gpu}:{self.space.name.lower()}@{self.addr:#x}"

@@ -12,6 +12,37 @@ Links are store-and-forward servers with bandwidth, latency, and a two-class
 (control vs. data) arbitration policy; ``fifo`` lets large data messages
 block control traffic (the paper's Fig. 11 pathology), ``fair`` round-robins
 between the classes.
+
+Scheduling modes (``Fabric(mode=...)``)
+---------------------------------------
+
+``MODE_CLASSIC``
+    The reference implementation: every link hop costs two heap events (one
+    when serialization finishes, one when the message arrives at the next
+    node after propagation).  Same-tick ties resolve by the insertion order
+    of those intermediate events, which in rare configurations differs from
+    the fast paths' tie order by sub-nanosecond noise; the hard bit-exact
+    guarantee is between ``MODE_EXACT`` and ``MODE_COALESCE``.
+
+``MODE_EXACT``
+    FIFO links keep an absolute ``free_at`` clock in integer picoseconds.
+    Because FIFO service order equals arrival order, a flight's serialization
+    window is fully determined the moment it arrives, so each hop needs only
+    ONE heap event (the arrival at the next node).  Timing is identical to
+    classic down to the picosecond.
+
+``MODE_COALESCE`` (default)
+    ``MODE_EXACT`` plus *trains*: back-to-back flights queued on the same
+    link toward the same remaining route ride one shared hop event.  At each
+    hop the train commits as many member lines as the engine's lookahead
+    horizon (``Engine.peek_ps``) proves safe — no other event can fire before
+    the horizon, hence no competing arrival can interleave — and re-schedules
+    the rest.  Arrival times are bit-identical to the un-coalesced path; only
+    the heap-event count drops.
+
+``fair``-policy links always use the classic machinery (their round-robin
+pick depends on queue contents at serialization-finish time, which cannot be
+precomputed at arrival).
 """
 
 from __future__ import annotations
@@ -24,19 +55,55 @@ from ..engine import Engine
 CONTROL = 0
 DATA = 1
 
+MODE_CLASSIC = "classic"
+MODE_EXACT = "exact"
+MODE_COALESCE = "coalesce"
+
+_PS_PER_NS = 1000
+_NS_PER_PS = 0.001
+
 
 class Flight:
-    """A message in transit along a precomputed route of links."""
-    __slots__ = ("size", "cls", "route", "hop", "on_arrive", "payload")
+    """A message in transit along a precomputed route of links.
+
+    ``eager`` marks deliveries whose callback is *time-stamp driven*: it
+    reads the arrival tick from ``eta_ps`` and only schedules absolute-time
+    effects, so it may run early, at the moment the final hop's service is
+    committed (saving the delivery heap event).  Endpoint callbacks that
+    mutate state as of "now" (e.g. a CU receiving a response) must keep
+    ``eager=False``.
+    """
+    __slots__ = ("size", "cls", "route", "hop", "on_arrive", "payload",
+                 "eager", "eta_ps")
 
     def __init__(self, size: int, cls: int, route: List["Link"],
-                 on_arrive: Callable[["Flight"], None], payload=None):
+                 on_arrive: Callable[["Flight"], None], payload=None,
+                 eager: bool = False):
         self.size = size
         self.cls = cls
         self.route = route
         self.hop = 0
         self.on_arrive = on_arrive
         self.payload = payload
+        self.eager = eager
+        self.eta_ps = -1
+
+
+class _Train:
+    """Flights riding one shared hop event.
+
+    ``lines[i]`` arrives at node ``route[hop]``'s entry at absolute tick
+    ``at_ps[i]`` (non-decreasing); the single heap event fires at
+    ``at_ps[0]``.  Formed by :meth:`Link._admit` when a flight lands on a
+    link whose pending tail train shares the same remaining route.
+    """
+    __slots__ = ("route", "hop", "lines", "at_ps")
+
+    def __init__(self, route: List["Link"], hop: int):
+        self.route = route
+        self.hop = hop              # index of the link just serialized
+        self.lines: List[Flight] = []
+        self.at_ps: List[int] = []
 
 
 class Link:
@@ -46,11 +113,15 @@ class Link:
     between the control and data queues — paper §5.2's arbitration fix).
     """
     __slots__ = ("name", "bw", "lat_ns", "policy", "engine", "_q", "_busy",
-                 "_rr", "bytes_moved", "busy_ns", "min_ser_ns")
+                 "_rr", "bytes_moved", "busy_ns", "min_ser_ns",
+                 "fast", "coalesce", "_free_ps", "_lat_ps", "_ser_ps_cache",
+                 "_tails", "_win_ps", "_last_arr_ps", "order_violations",
+                 "region", "_rguard_ps", "_sole_feed")
 
     def __init__(self, engine: Engine, name: str, bandwidth_GBps: float,
                  latency_ns: float, policy: str = "fifo",
-                 min_ser_ns: float = 0.0):
+                 min_ser_ns: float = 0.0, mode: str = MODE_COALESCE,
+                 coalesce_window_ns: float = 0.0, region: int = 0):
         self.name = name
         self.bw = bandwidth_GBps  # GB/s == bytes/ns
         self.lat_ns = latency_ns
@@ -62,8 +133,96 @@ class Link:
         self.bytes_moved = 0
         self.busy_ns = 0.0
         self.min_ser_ns = min_ser_ns
+        # ---- fast path state ------------------------------------------
+        self.fast = mode != MODE_CLASSIC and policy == "fifo"
+        self.coalesce = self.fast and mode == MODE_COALESCE
+        self._free_ps = 0                   # absolute tick the server frees
+        self._lat_ps = int(round(latency_ns * _PS_PER_NS))
+        self._ser_ps_cache: Dict[int, int] = {}
+        # pending trains by route identity: joinable until their event fires
+        self._tails: Dict[int, _Train] = {}
+        # optimistic ahead-of-time commits are a coalescing feature; exact
+        # mode must stay strictly one event per hop
+        self._win_ps = (int(round(coalesce_window_ns * _PS_PER_NS))
+                        if self.coalesce else 0)
+        self._last_arr_ps = 0         # latest admitted arrival (FIFO monitor)
+        self.order_violations = 0     # admissions that broke arrival order
+        self.region = region          # lookahead region (0 = global)
+        self._rguard_ps = 0           # region entry transit (set by builder)
+        # unique upstream feeder link, if every registered route entering
+        # this link comes through the same predecessor (False = ambiguous /
+        # injection-fed).  FIFO order is then inherited from the feeder, so
+        # admissions can chain through unconditionally.
+        self._sole_feed = None
 
+    # ------------------------------------------------------------ fast path
+    def _ser_ps(self, size: int) -> int:
+        """Serialization delay in ticks, rounded exactly like classic mode."""
+        ps = self._ser_ps_cache.get(size)
+        if ps is None:
+            ser = max(size / self.bw if self.bw > 0 else 0.0, self.min_ser_ns)
+            ps = int(round(ser * _PS_PER_NS))
+            self._ser_ps_cache[size] = ps
+        return ps
+
+    def _service(self, size: int, arrive_ps: int) -> int:
+        """Commit FIFO service for a message arriving at ``arrive_ps``;
+        returns the tick at which it lands on the next node.
+
+        FIFO service order equals arrival order, so the serialization window
+        is fully determined at arrival time.  Callers guarantee that no other
+        message can still arrive at this link before ``arrive_ps`` — either
+        ``arrive_ps`` is *now*, or it lies strictly before the engine's
+        lookahead horizon (every admission is made by some heap event, and
+        none is pending earlier than the horizon).
+        """
+        ser = self._ser_ps(size)
+        if arrive_ps < self._last_arr_ps:
+            # an optimistic ahead-of-time commit beat this (earlier) arrival
+            # to the server: FIFO order is broken by at most the coalescing
+            # window.  Counted so runs can certify themselves exact.
+            self.order_violations += 1
+        else:
+            self._last_arr_ps = arrive_ps
+        start = self._free_ps if self._free_ps > arrive_ps else arrive_ps
+        fin = start + ser
+        self._free_ps = fin
+        self.bytes_moved += size
+        self.busy_ns += ser / _PS_PER_NS
+        return fin + self._lat_ps
+
+    # --------------------------------------------------------------- classic
     def enqueue(self, flight: Flight) -> None:
+        if self.fast:
+            # injection / classic handoff: a real arrival at *now*.  The
+            # flight starts chaining at its first hop event — committing
+            # ahead from inside an arbitrary callback would be unsound (the
+            # callback may still push earlier events after we return).
+            next_at = self._service(flight.size, self.engine._now_ps)
+            if self.coalesce:
+                key = id(flight.route)
+                tail = self._tails.get(key)
+                if (tail is not None and tail.hop == flight.hop
+                        and self.engine._now_ps < tail.at_ps[0]):
+                    # pending train on the same remaining route: ride along
+                    tail.lines.append(flight)
+                    tail.at_ps.append(next_at)
+                    return
+                train = _Train(flight.route, flight.hop)
+                train.lines.append(flight)
+                train.at_ps.append(next_at)
+                self._tails[key] = train
+            else:
+                train = _Train(flight.route, flight.hop)
+                train.lines.append(flight)
+                train.at_ps.append(next_at)
+            route = flight.route
+            nxt = flight.hop + 1
+            self.engine.schedule_abs_ps(
+                next_at, _propel, train,
+                region=route[nxt].region if nxt < len(route)
+                else route[-1].region)
+            return
         if self.policy == "fair":
             self._q[flight.cls].append(flight)
         else:
@@ -109,17 +268,233 @@ def _advance(flight: Flight) -> None:
         flight.route[flight.hop].enqueue(flight)
 
 
-class Fabric:
-    """A named-node topology with cached shortest-path routing."""
+def _deliver(flight: Flight) -> None:
+    flight.eta_ps = flight.route[0].engine._now_ps if flight.route else \
+        flight.eta_ps
+    flight.on_arrive(flight)
 
-    def __init__(self, engine: Engine, default_policy: str = "fifo"):
+
+def _enqueue_line(link: "Link", flight: Flight) -> None:
+    link.enqueue(flight)
+
+
+def _propel(train: _Train) -> None:
+    """Advance a train along its route; at most one heap event per region.
+
+    The train keeps moving within a single event while the next arrival tick
+    stays inside the *commit bound* of the region it is traversing:
+
+    * the region lookahead horizon (``Engine.peek_region``) — provably safe:
+      only events of this region (or untagged ones) can put traffic on these
+      links, none is pending earlier than the horizon, so no competing
+      arrival can interleave; and
+    * optionally the per-link optimistic window ``now + W`` — exact whenever
+      the links involved are uncontended; any flight an ahead-of-time commit
+      *did* cut in front of is detected by the per-link arrival-order
+      monitor (``order_violations``), so a run reporting zero violations is
+      certified bit-identical to the un-coalesced schedule.
+
+    The chain parks (schedules one event, tagged with the target region) at
+    region boundaries, at the destination, and wherever the bound runs out;
+    lines of a multi-line train the bound cannot cover split into a
+    re-scheduled remainder train.  Always invoked as a heap event (or
+    synchronously right after an admission at *now*), so a line whose
+    arrival tick equals *now* really is arriving and its callback may run
+    inline.
+    """
+    route = train.route
+    lines, at_ps = train.lines, train.at_ps
+    nroute = len(route)
+    hop = train.hop + 1
+    rlink = route[hop] if hop < nroute else route[-1]
+    reg = rlink.region
+    eng = rlink.engine
+    now = eng.now_ps
+    bound = eng.peek_region(reg)
+    if reg:
+        # traffic from another region must cross one of this region's entry
+        # links first: it can reach an interior link no sooner than the
+        # earliest pending event anywhere plus that entry transit
+        gmin = eng.peek_ps()
+        if gmin is not None:
+            cap = gmin + rlink._rguard_ps
+            if bound is None or cap < bound:
+                bound = cap
+    sched = eng.schedule_abs_ps
+    while True:
+        first = at_ps[0]
+        if hop >= nroute:
+            # destination: time-stamp-driven (eager) callbacks run inline on
+            # their committed arrival tick; stateful ones get an event so
+            # they observe their own arrival time.  Mark the train consumed
+            # (sentinel hop) so stale ``_tails`` entries at links it passed
+            # can never accept new joiners.
+            train.hop = nroute
+            n = len(lines)
+            inline0 = first <= now
+            dreg = route[-1].region     # deliveries affect the destination
+            for i in range(n):          # region's state, whatever region
+                g = lines[i]            # the chain started in
+                g.hop = hop
+                if g.eager:
+                    g.eta_ps = at_ps[i]
+                    g.on_arrive(g)
+                elif i == 0 and inline0:
+                    g.eta_ps = now
+                    g.on_arrive(g)
+                else:
+                    sched(at_ps[i], _deliver, g, region=dreg)
+            return
+        link = route[hop]
+        if first > now and link._sole_feed is not route[hop - 1]:
+            # ahead of real time on a link with other (or unknown) feeders:
+            # the usual lookahead rules apply
+            if link.region != reg:
+                # region boundary: park so the target region's horizon can
+                # see this traffic coming (its tag makes it visible)
+                train.hop = hop - 1
+                if link.coalesce:
+                    route[hop - 1]._tails[id(route)] = train
+                sched(first, _propel, train, region=link.region)
+                return
+            if bound is not None and first >= bound \
+                    and first - now > link._win_ps:
+                # neither provably safe (region horizon) nor within the
+                # optimistic window: park until arrival
+                train.hop = hop - 1
+                if link.coalesce:
+                    route[hop - 1]._tails[id(route)] = train
+                sched(first, _propel, train, region=reg)
+                return
+        if not link.fast:
+            # classic/fair link: per-line arrivals (its round-robin pick
+            # depends on queue state at serialization-finish time).  The
+            # train is consumed here (sentinel hop, see above).
+            train.hop = nroute
+            for i in range(len(lines)):
+                g = lines[i]
+                g.hop = hop
+                if at_ps[i] <= now:
+                    link.enqueue(g)
+                else:
+                    sched(max(at_ps[i], now), _enqueue_line, link, g,
+                          region=0)
+            return
+        if len(lines) == 1:
+            # hot path: single line, inlined FIFO service commit
+            f = lines[0]
+            size = f.size
+            ser = link._ser_ps_cache.get(size)
+            if ser is None:
+                ser = link._ser_ps(size)
+            if first < link._last_arr_ps:
+                link.order_violations += 1
+            else:
+                link._last_arr_ps = first
+            free = link._free_ps
+            start = free if free > first else first
+            fin = start + ser
+            link._free_ps = fin
+            link.bytes_moved += size
+            link.busy_ns += ser * _NS_PER_PS
+            at_ps[0] = fin + link._lat_ps
+            train.hop = hop
+            hop += 1
+            if link.region != reg:
+                # crossed a region boundary through a sole-fed link: later
+                # parks/deliveries must carry (and be bounded by) the new
+                # region's horizon
+                reg = link.region
+                bound = eng.peek_region(reg)
+                if reg:
+                    gmin = eng.peek_ps()
+                    if gmin is not None:
+                        cap = gmin + link._rguard_ps
+                        if bound is None or cap < bound:
+                            bound = cap
+            continue
+        # ---- multi-line train ------------------------------------------
+        n = len(lines)
+        sole = link._sole_feed is route[hop - 1]
+        if not sole:
+            stop = n
+            lim = now + link._win_ps
+            if bound is not None and bound > lim:
+                lim = bound
+            for i in range(1, n):
+                if at_ps[i] >= lim:
+                    stop = i
+                    break
+            if stop < n:
+                rest = _Train(route, hop - 1)
+                rest.lines = lines[stop:]
+                rest.at_ps = at_ps[stop:]
+                del lines[stop:]
+                del at_ps[stop:]
+                if link.coalesce:
+                    route[hop - 1]._tails[id(route)] = rest
+                sched(rest.at_ps[0], _propel, rest, region=reg)
+                n = stop
+        if link.coalesce:
+            key = id(route)
+            tail = link._tails.get(key)
+            if (tail is not None and tail.hop == hop
+                    and now < tail.at_ps[0]):
+                # merge into the pending train already queued on this link;
+                # this train is consumed (sentinel hop: stale ``_tails``
+                # entries pointing at it must reject future joiners)
+                train.hop = nroute
+                for i in range(n):
+                    lines[i].hop = hop
+                    tail.lines.append(lines[i])
+                    tail.at_ps.append(link._service(lines[i].size, at_ps[i]))
+                return
+        for i in range(n):
+            lines[i].hop = hop
+            at_ps[i] = link._service(lines[i].size, at_ps[i])
+        train.hop = hop
+        nxt = hop + 1
+        if n > 1 and nxt < nroute and route[nxt]._sole_feed is not link:
+            # multi-line trains advance one hop per event on contended
+            # links: a later line's committed arrival may exceed the first
+            # line's delivery time, and that delivery's callback may inject
+            # competing traffic.  Sole-fed links inherit FIFO order from
+            # this link, so the train may chain straight through them.
+            if link.coalesce:
+                link._tails[id(route)] = train
+            sched(at_ps[0], _propel, train, region=route[nxt].region)
+            return
+        hop += 1
+
+
+class Fabric:
+    """A named-node topology with cached shortest-path routing.
+
+    ``mode`` selects the link scheduling implementation (see module
+    docstring): :data:`MODE_COALESCE` (default), :data:`MODE_EXACT`, or
+    :data:`MODE_CLASSIC`.
+    """
+
+    # default optimistic window: 0 = off, the sound region-horizon bound
+    # alone governs ahead-of-time commits (bit-exact guarantee).  Positive
+    # values trade certified exactness for fewer events (see _propel).
+    DEFAULT_WINDOW_NS = 0.0
+
+    def __init__(self, engine: Engine, default_policy: str = "fifo",
+                 mode: str = MODE_COALESCE,
+                 coalesce_window_ns: Optional[float] = None):
         self.engine = engine
         self.default_policy = default_policy
+        self.mode = mode
+        self.coalesce_window_ns = (self.DEFAULT_WINDOW_NS
+                                   if coalesce_window_ns is None
+                                   else coalesce_window_ns)
         self.node_names: List[str] = []
         self.node_ids: Dict[str, int] = {}
         # adjacency: node id -> list of (neighbor id, Link)
         self.adj: List[List[Tuple[int, Link]]] = []
         self._route_cache: Dict[Tuple[int, int], List[Link]] = {}
+        self._via_cache: Dict[Tuple[int, ...], List[Link]] = {}
         self.links: List[Link] = []
 
     # ------------------------------------------------------------- building
@@ -136,20 +511,26 @@ class Fabric:
         return self.node_ids[name]
 
     def add_link(self, u: int, v: int, bandwidth_GBps: float, latency_ns: float,
-                 policy: Optional[str] = None, name: Optional[str] = None) -> Link:
+                 policy: Optional[str] = None, name: Optional[str] = None,
+                 region: int = 0) -> Link:
         link = Link(self.engine,
                     name or f"{self.node_names[u]}->{self.node_names[v]}",
                     bandwidth_GBps, latency_ns,
-                    policy or self.default_policy)
+                    policy or self.default_policy, mode=self.mode,
+                    coalesce_window_ns=self.coalesce_window_ns, region=region)
         self.adj[u].append((v, link))
         self.links.append(link)
         self._route_cache.clear()
+        self._via_cache.clear()
         return link
 
     def add_bidi(self, u: int, v: int, bandwidth_GBps: float, latency_ns: float,
-                 policy: Optional[str] = None) -> Tuple[Link, Link]:
-        return (self.add_link(u, v, bandwidth_GBps, latency_ns, policy),
-                self.add_link(v, u, bandwidth_GBps, latency_ns, policy))
+                 policy: Optional[str] = None,
+                 region: int = 0) -> Tuple[Link, Link]:
+        return (self.add_link(u, v, bandwidth_GBps, latency_ns, policy,
+                              region=region),
+                self.add_link(v, u, bandwidth_GBps, latency_ns, policy,
+                              region=region))
 
     # -------------------------------------------------------------- routing
     def route(self, src: int, dst: int) -> List[Link]:
@@ -159,15 +540,49 @@ class Fabric:
             return hit
         path = self._bfs(src, dst)
         self._route_cache[key] = path
+        self._register_feeders(path)
         return path
 
     def route_via(self, waypoints: List[int]) -> List[Link]:
-        """Concatenated shortest-path route through ``waypoints``."""
+        """Concatenated shortest-path route through ``waypoints``.
+
+        Cached per waypoint tuple: callers on the same via-path share one
+        route *object*, which is what lets the coalescing fast path recognize
+        same-route flights and merge them into trains.
+        """
+        key = tuple(waypoints)
+        hit = self._via_cache.get(key)
+        if hit is not None:
+            return hit
         out: List[Link] = []
         for a, b in zip(waypoints, waypoints[1:]):
             if a != b:
                 out.extend(self.route(a, b))
+        self._via_cache[key] = out
+        self._register_feeders(out)
         return out
+
+    def _register_feeders(self, path: List[Link]) -> None:
+        """Record each link's upstream feeder along a (cached) route.
+
+        A link fed by exactly one predecessor across every registered route
+        inherits that predecessor's FIFO order, letting the fast path chain
+        admissions through it without a lookahead check.  The first link of
+        a route is injection-fed, hence always ambiguous.
+        """
+        if not path:
+            return
+        if path[0]._sole_feed is not False:
+            path[0]._sole_feed = False
+        prev = path[0]
+        for link in path[1:]:
+            cur = link._sole_feed
+            if cur is None:
+                link._sole_feed = prev
+            elif cur is not prev:
+                link._sole_feed = False
+            prev = link
+        return
 
     def _bfs(self, src: int, dst: int) -> List[Link]:
         if src == dst:
@@ -195,22 +610,87 @@ class Fabric:
 
     # --------------------------------------------------------------- sending
     def send(self, route: List[Link], size: int, cls: int,
-             on_arrive: Callable[[Flight], None], payload=None) -> None:
+             on_arrive: Callable[[Flight], None], payload=None,
+             eager: bool = False) -> None:
         """Inject a message onto a precomputed route."""
         if not route:
             # src == dst: deliver immediately (still via the event queue so
             # causality is preserved)
-            f = Flight(size, cls, route, on_arrive, payload)
+            f = Flight(size, cls, route, on_arrive, payload, eager)
             f.hop = 0
+            f.eta_ps = self.engine._now_ps
             self.engine.schedule(0.0, on_arrive, f)
             return
-        flight = Flight(size, cls, route, on_arrive, payload)
+        flight = Flight(size, cls, route, on_arrive, payload, eager)
         route[0].enqueue(flight)
 
+    def send_at(self, route: List[Link], size: int, cls: int,
+                on_arrive: Callable[[Flight], None], payload=None,
+                at_ps: Optional[int] = None, eager: bool = False) -> None:
+        """Inject a message whose first-link arrival is at a *future* tick.
+
+        Contract: successive ``send_at`` calls targeting the same first link
+        must carry non-decreasing ``at_ps`` across events (e.g. responses
+        leaving a memory endpoint after a fixed access latency).  This lets
+        an endpoint fold its fixed-latency injection into the event that
+        requested it, saving one heap event per round trip; the per-link
+        arrival-order monitor still detects any contract breach.
+        """
+        now = self.engine._now_ps
+        if at_ps is None or at_ps < now:
+            at_ps = now
+        if not route:
+            f = Flight(size, cls, route, on_arrive, payload, eager)
+            f.hop = 0
+            if eager:
+                f.eta_ps = at_ps
+                on_arrive(f)
+            else:
+                self.engine.schedule_abs_ps(at_ps, _deliver, f)
+            return
+        flight = Flight(size, cls, route, on_arrive, payload, eager)
+        first = route[0]
+        if not first.fast:
+            if at_ps <= now:
+                first.enqueue(flight)
+            else:
+                self.engine.schedule_abs_ps(at_ps, _enqueue_line, first,
+                                            flight)
+            return
+        next_at = first._service(size, at_ps)
+        train = _Train(route, 0)
+        train.lines.append(flight)
+        train.at_ps.append(next_at)
+        if first.coalesce:
+            first._tails[id(route)] = train
+        self.engine.schedule_abs_ps(
+            next_at, _propel, train,
+            region=route[1].region if len(route) > 1 else route[-1].region)
+
     # ------------------------------------------------------------------ stats
+    @property
+    def order_violations(self) -> int:
+        """Total FIFO-order inversions caused by ahead-of-time commits.
+
+        Zero certifies that this run's link schedules are bit-identical to
+        the un-coalesced (``MODE_EXACT``) schedule.
+        """
+        return sum(l.order_violations for l in self.links)
+
+    def set_region_guard(self, region: int, guard_ns: float) -> None:
+        """Set a region's entry transit: a lower bound on the time any
+        message coming from *outside* the region needs to cross one of its
+        entry links (e.g. the inbound scale-up hop).  Sound lookahead for
+        the region extends to ``earliest pending event + guard``."""
+        guard_ps = int(round(guard_ns * _PS_PER_NS))
+        for link in self.links:
+            if link.region == region:
+                link._rguard_ps = guard_ps
+
     def stats(self) -> Dict[str, float]:
         return {
             "links": len(self.links),
             "nodes": len(self.node_names),
             "bytes_moved": sum(l.bytes_moved for l in self.links),
+            "order_violations": self.order_violations,
         }

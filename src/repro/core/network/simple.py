@@ -47,10 +47,12 @@ class SimpleNetwork:
     """Event-driven coarse backend: chunk-granularity transfers on a Fabric."""
 
     def __init__(self, topo: SimpleTopology, engine: Optional[Engine] = None,
-                 policy: str = "fifo"):
+                 policy: str = "fifo", mode: str = "coalesce",
+                 coalesce_window_ns: Optional[float] = None):
         self.engine = engine or Engine()
         self.topo = topo
-        self.fabric = Fabric(self.engine, default_policy=policy)
+        self.fabric = Fabric(self.engine, default_policy=policy, mode=mode,
+                             coalesce_window_ns=coalesce_window_ns)
         self._gpu_nodes: List[int] = []
         self._build()
 

@@ -1,49 +1,37 @@
 """System layer: execute collective programs / workloads on a backend.
 
-Two fidelity levels, mirroring the paper's 2.0 → 3.0 step:
+Three fidelity tiers, selected by ``fidelity=`` on the single
+:func:`repro.core.backends.simulate` entry point (re-exported here):
 
-* ``simulate_collective``        — fine-grained: lower the MSCCL++ program to
-  Load-Store kernels and run them on the detailed Cluster (NoC-level network,
-  CU contention, cache-line Wavefront Requests).  Paper §4.2–§4.4.
-* ``simulate_collective_coarse`` — ASTRA-sim 2.0 style: interpret the same
-  program at chunk granularity over the alpha-beta SimpleNetwork (one message
-  per put/get, zero-cost local ops).  Used to quantify what fidelity buys.
+* ``"fine"``     — lower the MSCCL++ program to Load-Store kernels and run
+  them on the detailed Cluster (NoC-level network, CU contention,
+  cache-line Wavefront Requests).  Paper §4.2-§4.4.
+* ``"coarse"``   — ASTRA-sim 2.0 style: interpret the same program at
+  chunk granularity over the alpha-beta SimpleNetwork (one message per
+  put/get, zero-cost local ops).
+* ``"analytic"`` — closed-form collective estimators (no event
+  simulation), for pod-scale sweeps.
+
+The historical helpers :func:`simulate_collective` (fine) and
+:func:`simulate_collective_coarse` are thin wrappers kept for callers and
+notebooks; new code should use ``simulate(program, infra, fidelity=...)``.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
+from .backends import (CollectiveResult, CoarseBackend, FineBackend,
+                       payload_bytes, simulate)
 from .cluster import Cluster, NocConfig
-from .engine import Engine
 from .gpu_model import GpuConfig
-from .mscclpp import Program, lower_program
-from .network.fabric import CONTROL, DATA
-from .network.simple import SimpleNetwork, SimpleTopology
+from .mscclpp import Program
+from .network.simple import SimpleTopology
 
-
-@dataclass
-class CollectiveResult:
-    program: str
-    collective: str
-    nranks: int
-    time_ns: float
-    moved_bytes: int               # payload bytes defined by the collective
-    events: int
-    wallclock_s: float
-    requests: int = 0
-    per_rank_done_ns: Optional[List[float]] = None
-
-    @property
-    def bus_GBps(self) -> float:
-        """Collective bandwidth: buffer size / collective time (paper §5.2)."""
-        return self.moved_bytes / self.time_ns if self.time_ns > 0 else 0.0
-
-
-def payload_bytes(program: Program) -> int:
-    """The 'buffer size' the paper divides by: per-rank output payload."""
-    return program.buffers.get("output", 0)
+__all__ = [
+    "CollectiveResult", "payload_bytes", "simulate",
+    "simulate_collective", "simulate_collective_coarse",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -61,163 +49,16 @@ def simulate_collective(program: Program,
     """Run a collective program at Load-Store granularity end to end.
 
     ``rank_delay_ns`` injects per-rank kernel-launch skew (straggler study).
+    Equivalent to ``simulate(program, fidelity="fine", ...)``.
     """
-    if cluster is None:
-        cluster = Cluster(program.num_ranks, gpu_config=gpu_config, noc=noc,
-                          topology=topology)
-    kernels = lower_program(program, unroll=unroll)
-    done_at: Dict[int, float] = {}
-
-    def on_done(kernel, t, rank=None):
-        done_at[kernel.gpu] = t
-
-    for k in kernels:
-        k.on_done = on_done
-        delay = rank_delay_ns[k.gpu] if rank_delay_ns else 0.0
-        if delay > 0:
-            cluster.engine.schedule(delay, cluster.dispatch, k)
-        else:
-            cluster.dispatch(k)
-    cluster.run(until_ns)
-    if len(done_at) != program.num_ranks:
-        missing = [r for r in range(program.num_ranks) if r not in done_at]
-        raise RuntimeError(
-            f"collective did not complete: ranks {missing} still running "
-            f"at {cluster.engine.now} ns (deadlock or until_ns too small)")
-    t = max(done_at.values())
-    return CollectiveResult(
-        program=program.name, collective=program.collective,
-        nranks=program.num_ranks, time_ns=t,
-        moved_bytes=payload_bytes(program),
-        events=cluster.engine.events_processed,
-        wallclock_s=cluster.engine.wallclock_seconds(),
-        requests=cluster.request_count,
-        per_rank_done_ns=[done_at[r] for r in range(program.num_ranks)])
+    backend = FineBackend(noc=noc, gpu_config=gpu_config, topology=topology)
+    return backend.run(program, cluster=cluster, unroll=unroll,
+                       rank_delay_ns=rank_delay_ns, until_ns=until_ns)
 
 
 # ---------------------------------------------------------------------------
 # Coarse path (ASTRA-sim 2.0 baseline)
 # ---------------------------------------------------------------------------
-
-class _CoarseExec:
-    """Chunk-granularity interpreter of an MSCCL++ program.
-
-    Semantics: put/get = one network message of `size`; signal = one small
-    control message; copy/reduce = local, modeled with a memory-bandwidth
-    cost; wait/barrier = ordering only.  This is deliberately the 2.0-level
-    model — no CU contention, no per-cache-line control path.
-    """
-
-    HDR = 64  # control message bytes
-
-    def __init__(self, program: Program, net: SimpleNetwork,
-                 local_GBps: float, reduce_GBps: float,
-                 rank_delay_ns: Optional[List[float]] = None):
-        self.p = program
-        self.net = net
-        self.e = net.engine
-        self.local_GBps = local_GBps
-        self.reduce_GBps = reduce_GBps
-        self.sems: Dict[Tuple[int, int], int] = {}
-        self.pcs: Dict[Tuple[int, int], int] = {}
-        self.blocked: Dict[Tuple[int, int], bool] = {}
-        self.done_at: Dict[int, float] = {}
-        self.live = 0
-        for r in range(program.num_ranks):
-            for w in range(len(program.gpus[r])):
-                self.pcs[(r, w)] = 0
-                self.blocked[(r, w)] = False
-                self.live += 1
-                delay = rank_delay_ns[r] if rank_delay_ns else 0.0
-                self.e.schedule(delay, self._advance, r, w)
-
-    # each (rank, wg) cursor advances op by op; ops take simulated time
-    def _advance(self, r: int, w: int) -> None:
-        ops = self.p.gpus[r][w]
-        pc = self.pcs[(r, w)]
-        if pc >= len(ops):
-            self._wg_done(r, w)
-            return
-        o = ops[pc]
-        if o.op in ("put", "get"):
-            peer = o.remote_rank
-            src, dst = (r, peer) if o.op == "put" else (peer, r)
-            self.pcs[(r, w)] = pc + 1
-            self.net.send(src, dst, o.size, lambda: self._advance(r, w),
-                          cls=DATA)
-        elif o.op == "copy":
-            self.pcs[(r, w)] = pc + 1
-            self.e.schedule(o.size / self.local_GBps, self._advance, r, w)
-        elif o.op == "reduce":
-            nsrc = max(1, len(o.srcs or []))
-            cost = o.size * nsrc / self.reduce_GBps
-            # remote sources pay a network round trip too
-            remote = [s for s in (o.srcs or []) if len(s) > 2 and s[2] >= 0
-                      and s[2] != r]
-            self.pcs[(r, w)] = pc + 1
-            if remote:
-                pend = {"n": len(remote)}
-
-                def got_one():
-                    pend["n"] -= 1
-                    if pend["n"] == 0:
-                        self.e.schedule(cost, self._advance, r, w)
-                for s in remote:
-                    self.net.send(s[2], r, o.size, got_one, cls=DATA)
-            else:
-                self.e.schedule(cost, self._advance, r, w)
-        elif o.op == "signal":
-            self.pcs[(r, w)] = pc + 1
-            peer, sem = o.remote_rank, o.sem
-
-            def deliver():
-                key = (peer, sem)
-                self.sems[key] = self.sems.get(key, 0) + 1
-                self._wake_waiters(peer)
-            self.net.send(r, peer, self.HDR, deliver, cls=CONTROL)
-            self.e.schedule(0, self._advance, r, w)
-        elif o.op == "wait":
-            if self.sems.get((r, o.sem), 0) >= o.expected:
-                self.pcs[(r, w)] = pc + 1
-                self.e.schedule(0, self._advance, r, w)
-            else:
-                self.blocked[(r, w)] = True
-        elif o.op == "barrier":
-            # coarse: barrier when every wg of the rank is at one
-            self.blocked[(r, w)] = True
-            if all(self.pcs[(r, w2)] >= len(self.p.gpus[r][w2]) or
-                   (self.blocked[(r, w2)] and
-                    self.p.gpus[r][w2][self.pcs[(r, w2)]].op == "barrier")
-                   for w2 in range(len(self.p.gpus[r]))):
-                for w2 in range(len(self.p.gpus[r])):
-                    pc2 = self.pcs[(r, w2)]
-                    if pc2 < len(self.p.gpus[r][w2]) and \
-                            self.p.gpus[r][w2][pc2].op == "barrier":
-                        self.pcs[(r, w2)] = pc2 + 1
-                        self.blocked[(r, w2)] = False
-                        self.e.schedule(0, self._advance, r, w2)
-        else:  # nop / flush: free at coarse granularity
-            self.pcs[(r, w)] = pc + 1
-            self.e.schedule(0, self._advance, r, w)
-
-    def _wake_waiters(self, rank: int) -> None:
-        for w in range(len(self.p.gpus[rank])):
-            if not self.blocked[(rank, w)]:
-                continue
-            pc = self.pcs[(rank, w)]
-            ops = self.p.gpus[rank][w]
-            if pc < len(ops) and ops[pc].op == "wait" and \
-                    self.sems.get((rank, ops[pc].sem), 0) >= ops[pc].expected:
-                self.blocked[(rank, w)] = False
-                self.pcs[(rank, w)] = pc + 1
-                self.e.schedule(0, self._advance, rank, w)
-
-    def _wg_done(self, r: int, w: int) -> None:
-        self.live -= 1
-        if all(self.pcs[(r, w2)] >= len(self.p.gpus[r][w2])
-               for w2 in range(len(self.p.gpus[r]))):
-            self.done_at.setdefault(r, self.e.now)
-
 
 def simulate_collective_coarse(program: Program,
                                topo: Optional[SimpleTopology] = None,
@@ -227,21 +68,12 @@ def simulate_collective_coarse(program: Program,
                                reduce_GBps: float = 4398.0,
                                rank_delay_ns: Optional[List[float]] = None,
                                until_ns: float = 5e10) -> CollectiveResult:
-    """ASTRA-sim 2.0-fidelity simulation of the same program."""
-    if topo is None:
-        topo = SimpleTopology([(program.num_ranks, link_GBps, link_lat_ns,
-                                "switch")])
-    net = SimpleNetwork(topo)
-    ex = _CoarseExec(program, net, local_GBps, reduce_GBps, rank_delay_ns)
-    net.run(until_ns)
-    if len(ex.done_at) != program.num_ranks:
-        missing = [r for r in range(program.num_ranks) if r not in ex.done_at]
-        raise RuntimeError(f"coarse sim incomplete: ranks {missing}")
-    t = max(ex.done_at.values())
-    return CollectiveResult(
-        program=program.name + ".coarse", collective=program.collective,
-        nranks=program.num_ranks, time_ns=t,
-        moved_bytes=payload_bytes(program),
-        events=net.engine.events_processed,
-        wallclock_s=net.engine.wallclock_seconds(),
-        per_rank_done_ns=[ex.done_at[r] for r in range(program.num_ranks)])
+    """ASTRA-sim 2.0-fidelity simulation of the same program.
+
+    Equivalent to ``simulate(program, fidelity="coarse", ...)``.
+    """
+    backend = CoarseBackend(topo=topo, link_GBps=link_GBps,
+                            link_lat_ns=link_lat_ns, local_GBps=local_GBps,
+                            reduce_GBps=reduce_GBps)
+    return backend.run(program, rank_delay_ns=rank_delay_ns,
+                       until_ns=until_ns)

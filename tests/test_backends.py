@@ -1,0 +1,127 @@
+"""Backend seam: one program + one InfraGraph through every fidelity tier.
+
+Covers the `simulate(program, infra, fidelity=...)` entry point, result
+metadata parity, the fidelity ordering the paper predicts (coarse event
+counts <= fine event counts; analytic is (near) event-free), and the
+InfraGraph-driven cluster wiring.
+"""
+
+import pytest
+
+from repro.core import collectives as C
+from repro.core.backends import (AnalyticBackend, CoarseBackend, FIDELITIES,
+                                 FineBackend, ProgramInterpreter, simulate)
+from repro.core.cluster import NocConfig
+from repro.core.infragraph import single_tier_fabric
+from repro.core.infragraph.blueprints import ring_fabric
+
+SMALL_NOC = dict(mesh_x=2, mesh_y=2, cus_per_router=2, mem_channels=4,
+                 io_ports=4)
+
+
+def small_noc(**kw):
+    return NocConfig(**SMALL_NOC, **kw)
+
+
+@pytest.fixture(scope="module")
+def results():
+    infra = single_tier_fabric(4, link_GBps=50.0)
+    out = {}
+    for fid in FIDELITIES:
+        prog = C.ring_all_reduce(4, 16384, 1, "put")
+        out[fid] = simulate(prog, infra, fidelity=fid, noc=small_noc()
+                            if fid == "fine" else None) \
+            if fid == "fine" else simulate(prog, infra, fidelity=fid)
+    return out
+
+
+def test_all_fidelities_run_and_agree_on_metadata(results):
+    for fid, r in results.items():
+        assert r.fidelity == fid
+        assert r.collective == "all_reduce"
+        assert r.nranks == 4
+        assert r.moved_bytes == 16384
+        assert r.time_ns > 0
+        assert r.per_rank_done_ns is not None and len(r.per_rank_done_ns) == 4
+        assert max(r.per_rank_done_ns) == r.time_ns
+
+
+def test_fidelity_event_count_ordering(results):
+    """Paper: fidelity buys detail — event counts rise with the tier."""
+    assert results["analytic"].events <= results["coarse"].events
+    assert results["coarse"].events < results["fine"].events
+
+
+def test_fidelity_time_plausibility(results):
+    """Coarser tiers skip control-path latency, so they run faster; all
+    tiers stay within a couple orders of magnitude of each other."""
+    fine, coarse = results["fine"], results["coarse"]
+    assert coarse.time_ns < fine.time_ns
+    assert fine.time_ns / coarse.time_ns < 200
+
+
+def test_analytic_closed_form_is_event_free(results):
+    assert results["analytic"].events == 0
+    assert "analytic" in results["analytic"].program
+
+
+def test_analytic_falls_back_to_interpreter_for_odd_programs():
+    # a custom program whose collective kind has no closed form
+    prog = C.ring_all_gather(3, 512, 1, "put")
+    prog.collective = "my_custom_exchange"
+    r = simulate(prog, fidelity="analytic")
+    assert r.events > 0 and r.time_ns > 0
+
+
+def test_unknown_fidelity_raises():
+    with pytest.raises(ValueError, match="unknown fidelity"):
+        simulate(C.ring_all_gather(2, 256, 1, "put"), fidelity="quantum")
+
+
+def test_infra_too_small_for_program_raises():
+    infra = single_tier_fabric(2)
+    with pytest.raises(ValueError, match="endpoints"):
+        simulate(C.ring_all_gather(4, 256, 1, "put"), infra,
+                 fidelity="coarse")
+
+
+def test_interpreter_is_shared_single_source():
+    """`_CoarseExec` logic exists exactly once: both non-fine tiers run
+    programs through the same ProgramInterpreter class."""
+    import repro.core.backends.analytic as A
+    import repro.core.backends.coarse as Co
+    import repro.core.system as S
+    assert Co.ProgramInterpreter is ProgramInterpreter
+    assert A.ProgramInterpreter is ProgramInterpreter
+    assert not hasattr(S, "_CoarseExec")
+
+
+def test_same_infra_different_fidelity_scenario_diversity():
+    """The same ring InfraGraph drives all three tiers (no hard-coded
+    switch): ring wiring must shape fine-grained timing differently from a
+    single-switch fabric."""
+    prog = lambda: C.ring_all_reduce(4, 8192, 1, "put")
+    ring = simulate(prog(), ring_fabric(4, link_GBps=34.36),
+                    fidelity="fine", noc=small_noc())
+    star = simulate(prog(), single_tier_fabric(4, link_GBps=34.36),
+                    fidelity="fine", noc=small_noc())
+    assert ring.time_ns != star.time_ns
+
+
+@pytest.mark.slow
+def test_backend_parity_sweep_larger():
+    """Expensive sweep: metadata parity over sizes x collectives."""
+    infra = single_tier_fabric(4)
+    for gen, kwargs in [(C.ring_all_gather, {}), (C.ring_all_reduce, {}),
+                        (C.direct_reduce_scatter, dict(protocol="get"))]:
+        for size in (4096, 65536):
+            rs = {}
+            for fid in FIDELITIES:
+                prog = gen(4, size, 2, **kwargs) if kwargs else \
+                    gen(4, size, 2)
+                rs[fid] = simulate(prog, infra, fidelity=fid,
+                                   **({"noc": small_noc()}
+                                      if fid == "fine" else {}))
+            assert rs["analytic"].events <= rs["coarse"].events \
+                <= rs["fine"].events
+            assert len({r.moved_bytes for r in rs.values()}) == 1

@@ -114,3 +114,88 @@ def test_bad_fabric_edge_raises():
                         "eth"))
     with pytest.raises(KeyError):
         infra.expand()
+
+
+# ---------------------------------------------------------------------------
+# to_cluster: InfraGraph-native fine-grained wiring
+# ---------------------------------------------------------------------------
+
+from repro.core.cluster import NocConfig
+from repro.core.infragraph import to_cluster
+from repro.core.infragraph.blueprints import ring_fabric
+
+
+def _noc():
+    return NocConfig(mesh_x=2, mesh_y=2, cus_per_router=2, mem_channels=4,
+                     io_ports=4)
+
+
+def _scaleup_links(cluster):
+    """Links added from InfraGraph edges (named with their link type)."""
+    return [l for l in cluster.fabric.links if ":" in l.name]
+
+
+def test_to_cluster_switch_wiring_from_graph():
+    infra = single_tier_fabric(num_hosts=4, link_GBps=50.0, link_lat_ns=777.0)
+    cl = to_cluster(infra, noc=_noc())
+    assert len(cl.gpus) == 4
+    # the switch device's ports/asic became fabric nodes
+    assert any(n.startswith("switch.0.") for n in cl.fabric.node_names)
+    # scale-up link properties come from the graph edge, NOT NocConfig
+    eth = [l for l in _scaleup_links(cl) if l.name.endswith(":eth")]
+    assert eth and all(l.bw == 50.0 and l.lat_ns == 777.0 for l in eth)
+    assert all(l.bw != _noc().io_GBps_per_port for l in eth)
+
+
+def test_to_cluster_ring_wiring_has_no_switch():
+    infra = ring_fabric(4, link_GBps=42.0, link_lat_ns=900.0)
+    cl = to_cluster(infra, noc=_noc())
+    assert len(cl.gpus) == 4
+    assert not any("switch" in n or "scaleup" in n
+                   for n in cl.fabric.node_names)
+    ring = [l for l in _scaleup_links(cl) if l.name.endswith(":ring")]
+    assert len(ring) == 8  # 4 directed pairs
+    assert all(l.bw == 42.0 and l.lat_ns == 900.0 for l in ring)
+
+
+def test_to_cluster_leaf_spine_wiring():
+    infra = clos_fat_tree_fabric(num_hosts=4, switch_ports=4)
+    cl = to_cluster(infra, noc=_noc())
+    names = cl.fabric.node_names
+    assert any(n.startswith("leaf.") for n in names)
+    assert any(n.startswith("spine.") for n in names)
+    # a cross-leaf route must traverse a spine port
+    g0 = cl.gpus[0].io_nodes[0]
+    g3 = cl.gpus[3].io_nodes[0]
+    path = cl.fabric.route(g0, g3)
+    assert any("spine." in l.name for l in path)
+
+
+def test_to_cluster_torus_wiring():
+    infra = torus2d_fabric(2, 2)
+    cl = to_cluster(infra, noc=_noc())
+    assert len(cl.gpus) == 4
+    ici = [l for l in _scaleup_links(cl) if l.name.endswith(":ici")]
+    assert len(ici) == 16  # 8 bidi torus edges (x-wrap + y-wrap per chip)
+
+
+def test_to_cluster_bandwidth_override_changes_collective_time():
+    """Regression: graph link bandwidth must actually shape timing — a
+    fatter InfraGraph fabric runs the same collective faster."""
+    from repro.core.backends import simulate
+    from repro.core import collectives as C
+    slow = simulate(C.ring_all_reduce(4, 32768, 1, "put"),
+                    ring_fabric(4, link_GBps=8.0), fidelity="fine",
+                    noc=_noc())
+    fast = simulate(C.ring_all_reduce(4, 32768, 1, "put"),
+                    ring_fabric(4, link_GBps=64.0), fidelity="fine",
+                    noc=_noc())
+    assert fast.time_ns < slow.time_ns
+
+
+def test_to_cluster_rejects_edgeless_multi_gpu_infra():
+    infra = Infrastructure("lonely")
+    from repro.core.infragraph.blueprints import simple_gpu_device
+    infra.add(simple_gpu_device(), "host", 3)
+    with pytest.raises(ValueError, match="no fabric edges"):
+        to_cluster(infra, noc=_noc())

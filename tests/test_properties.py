@@ -1,4 +1,13 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional test dependency (see the ``test`` extra in
+``pyproject.toml``); the whole module is skipped when it is absent so the
+tier-1 suite stays green on minimal installs.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 
 import jax
 import jax.numpy as jnp
