@@ -40,18 +40,33 @@ PROTOCOL = "put"
 SEED_BASELINE = {"events": 9_864_416, "wall_s": 23.32}
 
 
-def run_mode(mode: str, size: int):
-    cluster = Cluster(NRANKS, noc=NocConfig(fabric_mode=mode))
-    t0 = time.perf_counter()
-    r = simulate_collective(C.ring_all_reduce(NRANKS, size, NWG, PROTOCOL),
-                            cluster=cluster)
-    wall = time.perf_counter() - t0
+#: wall-clock trials per mode; the minimum is reported (the CI boxes run
+#: shared-CPU, so single samples swing by 30%; sim results are identical
+#: across trials and asserted so)
+WALL_TRIALS = 2
+
+
+def run_mode(mode: str, size: int, bulk: str = "on"):
+    wall = None
+    sims = set()
+    for _ in range(WALL_TRIALS):
+        cluster = Cluster(NRANKS, noc=NocConfig(fabric_mode=mode,
+                                                bulk_emission=bulk))
+        t0 = time.perf_counter()
+        r = simulate_collective(C.ring_all_reduce(NRANKS, size, NWG,
+                                                  PROTOCOL), cluster=cluster)
+        trial = time.perf_counter() - t0
+        wall = trial if wall is None else min(wall, trial)
+        sims.add((r.time_ns, r.events, cluster.fabric.order_violations))
+    assert len(sims) == 1, f"trials disagree on sim results: {sims}"
     return {
         "mode": mode,
+        "bulk_emission": bulk,
         "time_ns": r.time_ns,
         "per_rank_done_ns": r.per_rank_done_ns,
         "events": r.events,
         "wall_s": round(wall, 3),
+        "wall_trials": WALL_TRIALS,
         "events_per_s": round(r.events / wall) if wall > 0 else None,
         "sim_ns_per_wall_s": round(r.time_ns / wall) if wall > 0 else None,
         "order_violations": cluster.fabric.order_violations,
@@ -61,9 +76,11 @@ def run_mode(mode: str, size: int):
 def main() -> None:
     size = SIZE if "--quick" not in sys.argv else SIZE // 8
     rows = {m: run_mode(m, size) for m in ("classic", "exact", "coalesce")}
+    rows["coalesce_bulk_off"] = run_mode("coalesce", size, bulk="off")
 
     # ---- correctness gates ------------------------------------------------
     exact, coal, classic = rows["exact"], rows["coalesce"], rows["classic"]
+    nobulk = rows["coalesce_bulk_off"]
     assert coal["time_ns"] == exact["time_ns"], \
         "coalesced result must be bit-exact vs the un-coalesced path"
     assert coal["per_rank_done_ns"] == exact["per_rank_done_ns"]
@@ -71,6 +88,10 @@ def main() -> None:
         "FIFO monitor must certify the coalesced run"
     assert classic["time_ns"] == exact["time_ns"], \
         "fast path must reproduce the reference schedule"
+    assert nobulk["time_ns"] == coal["time_ns"], \
+        "bulk wavefront emission must be timing-neutral"
+    assert nobulk["per_rank_done_ns"] == coal["per_rank_done_ns"]
+    assert nobulk["order_violations"] == 0
 
     out = {
         "workload": {"collective": "ring_all_reduce", "nranks": NRANKS,
@@ -90,7 +111,10 @@ def main() -> None:
             SEED_BASELINE["wall_s"] / coal["wall_s"], 2)
 
     os.makedirs(RESULTS, exist_ok=True)
-    path = os.path.join(RESULTS, "BENCH_engine.json")
+    # --quick runs must not clobber the committed full-size baseline (the
+    # bench smoke test compares against it)
+    name = "BENCH_engine.json" if size == SIZE else "BENCH_engine_quick.json"
+    path = os.path.join(RESULTS, name)
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
     print(json.dumps(out, indent=1))

@@ -25,11 +25,18 @@ class FineBackend:
 
     def __init__(self, infra=None, noc: Optional[NocConfig] = None,
                  gpu_config: Optional[GpuConfig] = None,
-                 topology: str = "switch"):
+                 topology: str = "switch",
+                 bulk_emission: Optional[str] = None):
         self.infra = infra
         self.noc = noc
         self.gpu_config = gpu_config
         self.topology = topology
+        if bulk_emission is not None:
+            # convenience override of NocConfig.bulk_emission ("on"|"off");
+            # copy so the caller's config object is not mutated
+            import dataclasses
+            self.noc = dataclasses.replace(noc or NocConfig(),
+                                           bulk_emission=bulk_emission)
 
     def make_cluster(self, num_ranks: int) -> Cluster:
         if self.infra is not None:

@@ -12,12 +12,13 @@ messages (load responses, store payloads) arbitrated per-link.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 from .engine import Engine
-from .gpu_model import ComputeUnit, GpuConfig, GpuModel, WRequest
-from .instructions import IKind, MemRef, Space
+from .gpu_model import GpuConfig, GpuModel, WRequest
+from .instructions import LOAD, SEM_RELEASE, STORE
 from .network.fabric import CONTROL, DATA, Fabric, Flight
 from .workload import Kernel
 
@@ -39,6 +40,7 @@ class NocConfig:
     arbitration: str = "fifo"             # "fifo" | "fair"  (Fig. 11)
     fabric_mode: str = "coalesce"         # "coalesce" | "exact" | "classic"
     coalesce_window_ns: Optional[float] = None   # None -> fabric default
+    bulk_emission: str = "on"             # "on" | "off" (batched CU streaks)
 
     @property
     def num_cus(self) -> int:
@@ -58,6 +60,7 @@ class Cluster:
         cfg.num_cus = self.noc.num_cus
         cfg.hbm_latency_ns = self.noc.mem_lat_ns
         self.gpu_config = cfg
+        self.bulk = self.noc.bulk_emission != "off"
         self.fabric = Fabric(self.engine, default_policy=self.noc.arbitration,
                              mode=self.noc.fabric_mode,
                              coalesce_window_ns=self.noc.coalesce_window_ns)
@@ -71,8 +74,15 @@ class Cluster:
         # region's horizon before any of its downstream arrivals.
         self.regions = [self.engine.new_region() for _ in range(num_gpus)]
         self._hbm_lat_ps = int(round(cfg.hbm_latency_ns * 1000))
+        self._cl = cfg.cache_line
+        self._hdr = cfg.header_bytes
         self.gpus: List[GpuModel] = []
+        self._routes: Dict[tuple, list] = {}   # (src, dst, mp-key) -> route
         self._build(num_gpus, topology)
+        if topology != "none":
+            # "none" clusters get their scale-up wiring from the caller
+            # (to_cluster), which must call warm_routes() itself
+            self.warm_routes()
         self._inflight = 0
         self.request_count = 0
 
@@ -122,7 +132,8 @@ class Cluster:
                              region=rg)
                 io_nodes.append(p)
             gpu = GpuModel(g, self.gpu_config, self.engine, fab, self,
-                           cu_nodes, hbm_nodes, io_nodes, region=rg)
+                           cu_nodes, hbm_nodes, io_nodes, region=rg,
+                           bulk=self.bulk)
             self.gpus.append(gpu)
         # scale-up fabric between the GPUs' I/O ports ("none" leaves the
         # wiring to the caller — e.g. infragraph.translate.to_cluster,
@@ -164,45 +175,147 @@ class Cluster:
                 fab.set_region_guard(self.regions[g], guard)
                 self.gpus[g].region_guard_ps = int(round(guard * 1000))
 
+    def warm_routes(self) -> None:
+        """Pre-register every request/response route this cluster can use,
+        and build the per-CU multipath route tables the hot path indexes.
+
+        Correctness: the fast path's sole-feeder corridors are inferred
+        from *registered* routes (``Fabric._register_feeders``); a route
+        first registered mid-run could widen a link's feeder set after
+        traffic was already committed ahead through it, breaking the
+        per-link FIFO certificate.  Registering the whole (CU x memory
+        endpoint x multipath-key) route space up front makes the census
+        final before the first event — cheap, since routing uses per-source
+        BFS trees.
+
+        Speed: a request's route and destination node are then a single
+        list index by cache-line residue (``cu.reqtab`` / ``cu.resptab``)
+        instead of hashing/multipath arithmetic per Wavefront Request.
+        """
+        for src in self.gpus:
+            for cu in src.cus:
+                cu.reqtab = [None] * len(self.gpus)
+                cu.resptab = [None] * len(self.gpus)
+                for dst in self.gpus:
+                    if dst is src:
+                        # local: route per HBM channel, both legs
+                        period = len(dst.hbm_nodes)
+                    else:
+                        # cross-GPU: the multipath key space is the
+                        # cache-line residue modulo (io ports x channels)
+                        period = math.lcm(len(src.io_nodes),
+                                          len(dst.io_nodes),
+                                          len(dst.hbm_nodes))
+                    req_routes, resp_routes, nodes = [], [], []
+                    for line in range(period):
+                        addr = line * self._cl
+                        hnode = dst.hbm_node_for(addr, 0)
+                        nodes.append(hnode)
+                        req_routes.append(
+                            self._route(src, cu.node, dst, hnode, addr))
+                        resp_routes.append(
+                            self._route(dst, hnode, src, cu.node, addr))
+                    cu.reqtab[dst.gid] = (period, req_routes, nodes)
+                    cu.resptab[dst.gid] = (period, resp_routes)
+
     # ------------------------------------------------------------ dispatch
     def dispatch(self, kernel: Kernel) -> None:
+        if self.gpus[kernel.gpu].cus[0].reqtab is None:
+            raise RuntimeError(
+                "cluster routes not initialized: a topology='none' Cluster "
+                "must have its scale-up fabric wired by the caller and then "
+                "warm_routes() called before dispatching kernels")
         self.gpus[kernel.gpu].dispatch(kernel)
 
     def run(self, until_ns: Optional[float] = None) -> float:
         return self.engine.run(until_ns)
 
     # -------------------------------------------------- request/response flow
-    def send_request(self, req: WRequest, at_ps: Optional[int] = None) -> None:
-        """CU -> memory endpoint request leg (at ``at_ps``, default now)."""
-        self.request_count += 1
-        mem = req.mem
-        target_gpu = self.gpus[mem.gpu]
-        dst_node = target_gpu.hbm_node_for(mem.addr, mem.space)
-        src_cu = req.cu
-        src_gpu = src_cu.gpu
-        hdr = src_gpu.config.header_bytes
-        if req.kind in (IKind.LOAD, IKind.SEM_ACQUIRE):
-            size, cls = hdr, CONTROL
-        elif req.kind == IKind.SEM_RELEASE:
-            size, cls = hdr, CONTROL
-        else:  # STORE: payload travels on the request leg
-            size, cls = req.size + hdr, DATA
-        route = self._route(src_gpu, src_cu.node, target_gpu, dst_node,
-                            mem.addr)
-        self.fabric.send_at(route, size, cls, self._arrive_at_memory,
-                            payload=req, at_ps=at_ps, eager=True)
-
     def _route(self, src_gpu: GpuModel, src_node: int, dst_gpu: GpuModel,
                dst_node: int, addr: int) -> List:
         if src_gpu.gid == dst_gpu.gid:
             return self.fabric.route(src_node, dst_node)
         # cross-GPU: hash the cache line across I/O ports for multipathing
-        key = addr // src_gpu.config.cache_line
-        via = [src_node,
-               src_gpu.io_node_for(key),
-               dst_gpu.io_node_for(key),
-               dst_node]
-        return self.fabric.route_via(via)
+        line = addr // self._cl
+        skey = line % len(src_gpu.io_nodes)
+        dkey = line % len(dst_gpu.io_nodes)
+        rkey = (src_node, dst_node, skey, dkey)
+        route = self._routes.get(rkey)
+        if route is None:
+            via = [src_node, src_gpu.io_nodes[skey], dst_gpu.io_nodes[dkey],
+                   dst_node]
+            route = self.fabric.route_via(via)
+            self._routes[rkey] = route
+        return route
+
+    def send_request(self, req: WRequest, at_ps: Optional[int] = None) -> None:
+        """CU -> memory endpoint request leg (at ``at_ps``, default now)."""
+        self.request_count += 1
+        period, routes, _ = req.cu.reqtab[req.gpu]
+        req.route = routes[(req.addr // self._cl) % period]
+        if req.kind == STORE:          # payload travels on the request leg
+            req.size = req.psize + self._hdr
+            req.cls = DATA
+        else:                          # LOAD / SEM_*: control-class header
+            req.size = self._hdr
+            req.cls = CONTROL
+        req.eager = True
+        req.on_arrive = self._arrive_at_memory
+        if at_ps is None:
+            at_ps = self.engine._now_ps
+        self.fabric.send_flight_at(req, at_ps)
+
+    def send_request_bulk(self, cu, wf, n: int, t0_ps: int) -> None:
+        """Emit ``n`` lines of ``wf``'s load/store streak in one batch.
+
+        Issue ticks are ``t0, t0+cycle, ...`` — exactly the per-cycle
+        cadence the per-instruction path would produce.  Consecutive lines
+        that share a route ride one request train
+        (:meth:`Fabric.inject_train`); route changes (cache lines
+        interleaving across HBM channels / I/O ports) flush the group.
+        """
+        self.request_count += n
+        cu.outstanding += n
+        wf.outstanding += n
+        entries = wf.entries
+        pc = wf.pc
+        wf.pc = pc + n
+        cyc = cu._cyc_ps
+        cl = self._cl
+        hdr = self._hdr
+        reqtab = cu.reqtab
+        fab = self.fabric
+        arrive = self._arrive_at_memory
+        group: List[WRequest] = []
+        ats: List[int] = []
+        group_route = None
+        at = t0_ps
+        for j in range(n):
+            e = entries[pc + j]
+            kind = e[0]
+            period, routes, _ = reqtab[e[1]]
+            route = routes[(e[3] // cl) % period]
+            req = WRequest(kind, e[1], e[2], e[3], e[4], cu, wf)
+            req.route = route
+            if kind == STORE:
+                req.size = e[4] + hdr
+                req.cls = DATA
+            else:
+                req.size = hdr
+                req.cls = CONTROL
+            req.eager = True
+            req.on_arrive = arrive
+            if route is not group_route:
+                if group:
+                    fab.inject_train(group_route, group, ats)
+                group = []
+                ats = []
+                group_route = route
+            group.append(req)
+            ats.append(at)
+            at += cyc
+        if group:
+            fab.inject_train(group_route, group, ats)
 
     def _arrive_at_memory(self, flight: Flight) -> None:
         """Request delivery at a memory endpoint.
@@ -212,38 +325,35 @@ class Cluster:
         arrival tick from ``flight.eta_ps`` and only schedules absolute-
         time effects.  Per-endpoint FIFO makes those effects monotone.
         """
-        req: WRequest = flight.payload
-        mem = req.mem
-        target_gpu = self.gpus[mem.gpu]
-        hdr = target_gpu.config.header_bytes
+        req: WRequest = flight           # the request IS its own flight
         kind = req.kind
-        eta = flight.eta_ps
+        eta = req.eta_ps
         if eta < 0:
-            eta = self.engine.now_ps
-        if kind == IKind.LOAD:
-            size, cls = req.size + hdr, DATA      # data response
-        elif kind == IKind.SEM_RELEASE:
-            # the value lands at its home endpoint after the access latency;
-            # the state change needs its own correctly-timed event
-            self.engine.schedule_abs_ps(eta + self._hbm_lat_ps,
-                                        target_gpu.sem_bump, mem.addr,
-                                        region=self.regions[mem.gpu])
-            size, cls = hdr, CONTROL              # ack
-        else:  # STORE ack / SEM_ACQUIRE value response
-            size, cls = hdr, CONTROL
+            eta = self.engine._now_ps
+        if kind == LOAD:               # data response
+            req.size = req.psize + self._hdr
+            req.cls = DATA
+        else:
+            if kind == SEM_RELEASE:
+                # the value lands at its home endpoint after the access
+                # latency; the state change needs its own correctly-timed
+                # event
+                self.engine.schedule_abs_ps(eta + self._hbm_lat_ps,
+                                            self.gpus[req.gpu].sem_bump,
+                                            req.addr,
+                                            region=self.regions[req.gpu])
+            req.size = self._hdr       # STORE ack / SEM value response
+            req.cls = CONTROL
         # every response leaves exactly one fixed access latency after its
         # request arrived, and requests arrive in per-endpoint FIFO order —
         # so response injections per endpoint are monotone and the whole
-        # injection folds into this event via ``send_at`` (one heap event
-        # saved per round trip).  Folding *all* kinds keeps the per-link
-        # monotonicity contract airtight.
-        src_cu = req.cu
-        src_node = target_gpu.hbm_node_for(mem.addr, mem.space)
-        route = self._route(target_gpu, src_node, src_cu.gpu, src_cu.node,
-                            mem.addr)
-        self.fabric.send_at(route, size, cls, self._arrive_at_cu,
-                            payload=req, at_ps=eta + self._hbm_lat_ps)
-
-    def _arrive_at_cu(self, flight: Flight) -> None:
-        req: WRequest = flight.payload
-        req.cu.complete(req)
+        # injection folds into this event via ``send_flight_at`` (one heap
+        # event saved per round trip).  Folding *all* kinds keeps the
+        # per-link monotonicity contract airtight.  The flight is re-armed
+        # in place for the return leg; its delivery calls ``complete``.
+        period, routes = req.cu.resptab[req.gpu]
+        req.route = routes[(req.addr // self._cl) % period]
+        req.hop = 0
+        req.eager = False
+        req.on_arrive = req.cu.complete
+        self.fabric.send_flight_at(req, eta + self._hbm_lat_ps)

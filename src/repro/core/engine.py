@@ -94,10 +94,17 @@ class Engine:
     def schedule_abs_ps(self, at_ps: int, fn: Callable[..., None], *args: Any,
                         region: int = 0) -> None:
         """Schedule at an absolute tick (used by the fabric fast path, which
-        precomputes service completion times in integer picoseconds)."""
+        precomputes service completion times in integer picoseconds).
+
+        The ``_push`` body is inlined: this is the hottest scheduling call
+        in fine-grained runs (one per park/delivery).
+        """
         if at_ps < self._now_ps:
             raise ValueError(f"cannot schedule in the past: {at_ps} < {self._now_ps}")
-        self._push(at_ps, fn, args, region)
+        heapq.heappush(self._queue, (at_ps, self._seq, fn, args, region))
+        self._seq += 1
+        if self._regioned:
+            heapq.heappush(self._rheaps[region], at_ps)
 
     def peek_ps(self) -> Optional[int]:
         """Timestamp of the earliest pending event, or None if idle.
@@ -126,6 +133,38 @@ class Engine:
                 return r[0] if r[0] < g[0] else g[0]
             return r[0]
         return g[0] if g else None
+
+    def horizon_ps(self, region: int, guard_ps: int,
+                   cap_ps: Optional[int] = None) -> Optional[int]:
+        """Commit bound for ahead-of-time work touching region ``region``.
+
+        The sound lookahead horizon shared by the fabric's train chaining
+        and the CU's batched (bulk) issue: the earliest pending tick that
+        can reach the region — its own events, capped by the global minimum
+        plus the region's entry transit ``guard_ps`` for foreign traffic —
+        optionally clamped to ``cap_ps`` (e.g. the soonest completion a
+        batch's own requests could produce).  ``peek_region`` is inlined:
+        this runs once per fast-path hop event.
+        """
+        q = self._queue
+        if not region:
+            bound = q[0][0] if q else None
+        else:
+            g = self._rheaps[0]
+            r = self._rheaps[region]
+            if r:
+                bound = r[0]
+                if g and g[0] < bound:
+                    bound = g[0]
+            else:
+                bound = g[0] if g else None
+            if q:
+                cap = q[0][0] + guard_ps
+                if bound is None or cap < bound:
+                    bound = cap
+        if cap_ps is not None and (bound is None or cap_ps < bound):
+            bound = cap_ps
+        return bound
 
     def at(self, time_ns: float, fn: Callable[..., None], *args: Any) -> None:
         """Schedule ``fn(*args)`` at absolute time ``time_ns``."""
@@ -168,17 +207,18 @@ class Engine:
                     if self._regioned:      # a region appeared mid-run
                         rheaps = self._rheaps
                         break
-            while q and self._running:
-                at_ps, _, fn, args, region = q[0]
+            push = heapq.heappush
+            while rheaps is not None and q and self._running \
+                    and (max_events is None or n < max_events):
+                item = pop(q)           # pop-first: saves a peek per event
+                at_ps = item[0]
                 if until_ps is not None and at_ps > until_ps:
+                    push(q, item)       # past the horizon: put it back
                     break
-                pop(q)
-                pop(rheaps[region])
+                pop(rheaps[item[4]])
                 self._now_ps = at_ps
-                fn(*args)
+                item[2](*item[3])
                 n += 1
-                if max_events is not None and n >= max_events:
-                    break
         finally:
             if gc_was_enabled:
                 _gc.enable()

@@ -8,20 +8,33 @@ of its resident workgroups (wavefront-level parallelism); in-flight memory
 traffic is bounded per-CU (``max_outstanding`` — the paper's register-file
 proxy, Fig. 13) and per-wavefront fences are modeled via ``Waitcnt``.
 
+Instruction streams execute in their compiled (flat-tuple) form — see
+:class:`repro.core.instructions.InstrStream` — and when a wavefront's next
+run of instructions is a contiguous load/store streak with no intervening
+fence, the CU can emit the whole streak in one *bulk wavefront emission*
+(``NocConfig.bulk_emission``): every line's issue tick is computed up front
+and the batch enters the fabric as coalesced request trains instead of one
+scheduling round trip per cache line.  Timing is identical to the
+per-instruction cadence by construction (same ticks, same per-link FIFO
+commits).
+
 Memory-side behavior (HBM channels servicing loads/stores, semaphore
 homes) lives here too: endpoint handlers attached to fabric nodes.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 from .engine import Engine
-from .instructions import IKind, Instruction, MemRef, Space
+from .instructions import (LOAD, REDUCE, SEM_ACQUIRE, SEM_RELEASE, STORE,
+                           WAITCNT)
 from .operations import OpContext
-from .network.fabric import CONTROL, DATA, Fabric, Flight, Link
+from .network.fabric import Fabric, Flight
 from .workload import Kernel, WavefrontState, Workgroup
+
+_SEM_SPACE = 1            # int mirror of Space.SEM
 
 
 @dataclass
@@ -43,19 +56,31 @@ class GpuConfig:
                          reduce_cycles_per_line=self.reduce_cycles_per_line)
 
 
-class WRequest:
-    """One Wavefront Request round-trip (paper §4.4.3)."""
-    __slots__ = ("kind", "mem", "size", "cu", "wf", "value", "issued_ns")
+class WRequest(Flight):
+    """One Wavefront Request round-trip (paper §4.4.3).
 
-    def __init__(self, kind: IKind, mem: MemRef, size: int, cu: "ComputeUnit",
-                 wf: Optional[WavefrontState]):
+    Carries its memory operand as plain scalars (``gpu``/``space``/``addr``)
+    rather than a boxed ``MemRef`` — and IS its own :class:`Flight`: the
+    cluster fills in the wire fields (route/size/cls/eager/on_arrive) per
+    leg and re-uses the same object for the response, so a round trip costs
+    one allocation instead of three.  ``psize`` is the memory-operand byte
+    count; ``size`` is the current leg's wire size (payload and/or header).
+    """
+    __slots__ = ("kind", "gpu", "space", "addr", "psize", "cu", "wf", "value")
+
+    def __init__(self, kind: int, gpu: int, space: int, addr: int, psize: int,
+                 cu: "ComputeUnit", wf: Optional[WavefrontState]):
         self.kind = kind
-        self.mem = mem
-        self.size = size
+        self.gpu = gpu
+        self.space = space
+        self.addr = addr
+        self.psize = psize
         self.cu = cu
         self.wf = wf
         self.value = 0          # semaphore value carried by poll responses
-        self.issued_ns = 0.0
+        self.hop = 0
+        self.payload = None
+        self.eta_ps = -1
 
 
 class _WGExec:
@@ -91,8 +116,9 @@ class _KernelExec:
 
 class ComputeUnit:
     __slots__ = ("gpu", "idx", "resident", "outstanding", "_rr",
-                 "_scheduled", "_busy_until", "node", "waiters_waitcnt",
-                 "_ticking", "_wake_again", "_order")
+                 "_scheduled", "_busy_until", "node", "_ticking",
+                 "_wake_again", "_order", "_cyc_ps", "_bound",
+                 "reqtab", "resptab")
 
     def __init__(self, gpu: "GpuModel", idx: int, node: int):
         self.gpu = gpu
@@ -106,6 +132,13 @@ class ComputeUnit:
         self._ticking = False            # a batch scan is on the stack
         self._wake_again = False         # state changed mid-scan: rescan
         self._order: Optional[List[Tuple["_WGExec", WavefrontState]]] = None
+        self._cyc_ps = int(round(gpu.config.cycle_ns * 1000))
+        self._bound: Optional[int] = None   # current batch's commit bound
+        # per-target-GPU multipath route tables, built by
+        # Cluster.warm_routes: reqtab[gid] = (period, routes, dst_nodes),
+        # resptab[gid] = (period, routes); indexed by cache-line residue
+        self.reqtab: Optional[list] = None
+        self.resptab: Optional[list] = None
 
     # ----------------------------------------------------------------- wake
     def wake(self) -> None:
@@ -154,6 +187,12 @@ class ComputeUnit:
         ``send_at`` — identical times, one heap event per stall instead of
         per instruction.  Syncs, barriers and retirements always process on
         a real event (the batch re-schedules itself for them).
+
+        The commit bound is computed once, at batch start, *before* the
+        batch pushes its own events: the only state changes those pushes can
+        cause are request completions, which the ``completion_guard`` term
+        already covers — so the pre-push horizon is sound, and the batch is
+        not cut short by its own in-flight traffic.
         """
         self._scheduled = False
         if not self.resident:
@@ -161,9 +200,12 @@ class ComputeUnit:
         gpu = self.gpu
         eng = gpu.engine
         cycle_ns = gpu.config.cycle_ns
+        cyc_ps = self._cyc_ps
         now_ps = eng.now_ps
         t_ps = now_ps
-        bound = None
+        self._bound = eng.horizon_ps(gpu.region, gpu.region_guard_ps,
+                                     cap_ps=now_ps + gpu.completion_guard_ps)
+        bound = self._bound
         self._ticking = True
         try:
             while True:
@@ -173,17 +215,18 @@ class ComputeUnit:
                     if self._wake_again:
                         continue
                     return
-                if res == 2:                  # sync/retire needs real event
+                if res < 0:                   # sync/retire needs real event
                     self._scheduled = True
                     eng.schedule_abs_ps(t_ps, self._tick, region=gpu.region)
                     return
                 # next issue slot, same arithmetic as the event cadence
-                delay = self._busy_until - t_ps / 1000.0
-                if delay < cycle_ns:
-                    delay = cycle_ns
-                nt = t_ps + int(round(delay * 1000))
-                if bound is None:
-                    bound = self._issue_bound(eng, now_ps)
+                if res == 1:
+                    delay = self._busy_until - t_ps / 1000.0
+                    if delay < cycle_ns:
+                        delay = cycle_ns
+                    nt = t_ps + int(round(delay * 1000))
+                else:                         # bulk streak of ``res`` lines
+                    nt = t_ps + res * cyc_ps
                 if nt >= bound:
                     self._scheduled = True
                     eng.schedule_abs_ps(nt, self._tick, region=gpu.region)
@@ -192,29 +235,13 @@ class ComputeUnit:
         finally:
             self._ticking = False
 
-    def _issue_bound(self, eng, now_ps: int) -> int:
-        """Latest tick (exclusive) this batch may issue at without missing
-        a state change: the region lookahead horizon, capped by the soonest
-        completion a request issued in this batch could produce."""
-        gpu = self.gpu
-        bound = eng.peek_region(gpu.region)
-        if gpu.region:
-            gmin = eng.peek_ps()
-            if gmin is not None:
-                cap = gmin + gpu.region_guard_ps
-                if bound is None or cap < bound:
-                    bound = cap
-        own = now_ps + gpu.completion_guard_ps
-        if bound is None or own < bound:
-            bound = own
-        return bound
-
     def _scan(self, t_ps: int) -> int:
         """One cadence step at (virtual) tick ``t_ps``.
 
-        Returns 1 if an instruction was issued, 0 if nothing is issuable,
-        2 if a sync/retire was encountered ahead of real time (the caller
-        must re-enter on a real event at ``t_ps``).
+        Returns the number of issue slots consumed (1, or the streak length
+        for a bulk emission), 0 if nothing is issuable, -1 if a sync/retire
+        was encountered ahead of real time (the caller must re-enter on a
+        real event at ``t_ps``).
         """
         real = t_ps <= self.gpu.engine.now_ps
         order = self._order
@@ -224,70 +251,113 @@ class ComputeUnit:
             self._order = order
         k = len(order)
         start = self._rr % k if k else 0
+        gpu = self.gpu
+        maxo = gpu.config.max_outstanding
         for i in range(k):
             wgx, wf = order[(start + i) % k]
             if wf.done or wf.waiting is not None:
                 if wf.done and wf.outstanding == 0:
                     # a virtual-time scan may have exhausted this wavefront
-                    # (fetch sets ``done``) and then aborted to a real event
-                    # before retiring: retirement must be retried here
+                    # and then aborted to a real event before retiring:
+                    # retirement must be retried here
                     if not real:
-                        return 2
+                        return -1
                     self._maybe_retire(wgx)
                 continue
-            sync = wf.peek_sync()
-            if sync is not None:
-                if not real:
-                    return 2
-                self._handle_sync(wgx, wf, sync)
-                continue
-            ins = wf.fetch()
-            if ins is None:
-                # wavefront finished all ops
+            e = wf.next_entry()
+            if e is None:
                 if wf.done:
                     if not real:
-                        return 2
+                        return -1
                     self._maybe_retire(wgx)
+                    continue
+                # the cursor advanced onto a sync op — possibly just now,
+                # after exhausting an op's stream (the seed's lost-barrier
+                # deadlock: this arrival used to be dropped)
+                if not real:
+                    return -1
+                self._handle_sync(wgx, wf, wf.peek_sync())
                 continue
-            if self._issue(wgx, wf, ins, t_ps):
-                wf.consume()
+            kind = e[0]
+            if kind <= STORE:                 # LOAD / STORE: the data path
+                if self.outstanding >= maxo:
+                    continue                  # register file full: next wf
+                n = 1
+                if gpu.bulk:
+                    run = wf.runs[wf.pc]
+                    if run > 1:
+                        n = self._streak_len(order, wf, run, t_ps, maxo)
+                if n > 1:
+                    gpu.cluster.send_request_bulk(self, wf, n, t_ps)
+                else:
+                    wf.outstanding += 1
+                    self.outstanding += 1
+                    gpu.cluster.send_request(
+                        WRequest(kind, e[1], e[2], e[3], e[4], self, wf),
+                        t_ps)
+                    wf.pc += 1
+                self._rr = (start + i + 1) % k
+                return n
+            if self._issue_ctrl(wf, e, kind, t_ps):
+                wf.pc += 1
                 self._rr = (start + i + 1) % k
                 return 1
         return 0
 
     # ---------------------------------------------------------------- issue
-    def _issue(self, wgx: _WGExec, wf: WavefrontState, ins: Instruction,
-               t_ps: int) -> bool:
-        """Try to issue one instruction at tick ``t_ps``.  Returns True if
-        it consumed the issue slot for this cycle."""
-        kind = ins.kind
-        if kind == IKind.WAITCNT:
-            if wf.outstanding <= ins.threshold:
+    def _streak_len(self, order, wf: WavefrontState, run: int, t_ps: int,
+                    maxo: int) -> int:
+        """How many lines of ``wf``'s streak may be emitted in one batch.
+
+        Bulk emission must reproduce the per-cycle cadence exactly, so it
+        only fires when no other wavefront could claim an issue slot
+        mid-streak (they are all blocked or done — and can only unblock via
+        an event, which the commit bound excludes), capped by register-file
+        headroom and by the batch commit bound on the issue ticks.
+        """
+        for _, w2 in order:
+            if w2 is not wf and not w2.done and w2.waiting is None:
+                return 1
+        n = maxo - self.outstanding
+        if run < n:
+            n = run
+        if n <= 1:
+            return 1
+        bound = self._bound
+        if bound is not None:
+            # issue ticks t, t+cyc, ... must stay strictly below the bound
+            fit = (bound - 1 - t_ps) // self._cyc_ps + 1
+            if fit < n:
+                n = fit
+        return n if n > 1 else 1
+
+    def _issue_ctrl(self, wf: WavefrontState, e: tuple, kind: int,
+                    t_ps: int) -> bool:
+        """Issue a non-load/store entry.  Returns True if it consumed the
+        issue slot for this cycle."""
+        if kind == WAITCNT:
+            if wf.outstanding <= e[5]:
                 return True              # fence satisfied: costs one cycle
             wf.waiting = "waitcnt"
-            wf.fetched = ins             # re-check on completion
+            wf.wait_thresh = e[5]        # re-check on completion
             return False
-        if kind == IKind.REDUCE:
-            self._busy_until = t_ps / 1000.0 + ins.cycles * self.gpu.config.cycle_ns
+        if kind == REDUCE:
+            self._busy_until = t_ps / 1000.0 + e[5] * self.gpu.config.cycle_ns
             return True
-        # memory instruction
+        # semaphore instruction (control-path memory op)
         if self.outstanding >= self.gpu.config.max_outstanding:
             return False                 # register file full: try another wf
-        if kind == IKind.SEM_ACQUIRE:
+        hdr = self.gpu.config.header_bytes
+        if kind == SEM_ACQUIRE:
             # poll: issue a control-class load of the semaphore line; the
             # wavefront blocks until the poll observes value >= expected.
             wf.waiting = "sem"
-            req = WRequest(kind, ins.mem, self.gpu.config.header_bytes, self, wf)
-            req.value = ins.threshold    # expected count rides along
+            req = WRequest(kind, e[1], e[2], e[3], hdr, self, wf)
+            req.value = e[5]             # expected count rides along
             self._inject(req, t_ps)
             return True
-        if kind == IKind.SEM_RELEASE:
-            req = WRequest(kind, ins.mem, self.gpu.config.header_bytes, self, wf)
-            wf.outstanding += 1
-            self._inject(req, t_ps)
-            return True
-        # LOAD / STORE
-        req = WRequest(kind, ins.mem, ins.size, self, wf)
+        # SEM_RELEASE
+        req = WRequest(kind, e[1], e[2], e[3], hdr, self, wf)
         wf.outstanding += 1
         self._inject(req, t_ps)
         return True
@@ -296,37 +366,35 @@ class ComputeUnit:
         self.outstanding += 1
         if at_ps is None:
             at_ps = self.gpu.engine.now_ps
-        req.issued_ns = at_ps / 1000.0
         self.gpu.cluster.send_request(req, at_ps)
 
     # ------------------------------------------------------------ completion
     def complete(self, req: WRequest) -> None:
         self.outstanding -= 1
         wf = req.wf
-        if req.kind == IKind.SEM_ACQUIRE:
-            sem_home = self.gpu.cluster.gpus[req.mem.gpu]
+        if req.kind == SEM_ACQUIRE:
+            sem_home = self.gpu.cluster.gpus[req.gpu]
             expected = req.value if req.value else 1
-            cur = sem_home.sem_value(req.mem.addr)
-            if cur >= expected:
+            if sem_home.sem_value(req.addr) >= expected:
                 wf.waiting = None
                 self.wake()
             else:
                 # subscribe: when a release bumps this semaphore, re-poll.
-                sem_home.sem_subscribe(req.mem.addr, self, wf, expected)
+                sem_home.sem_subscribe(req.addr, self, wf, expected)
             return
         wf.outstanding -= 1
-        if wf.waiting == "waitcnt" and wf.fetched is not None \
-                and wf.outstanding <= wf.fetched.threshold:
+        if wf.waiting == "waitcnt" and wf.outstanding <= wf.wait_thresh:
             wf.waiting = None
-            wf.consume()
-        if wf.retired() and wf.owner is not None:
+            wf.pc += 1                   # consume the satisfied fence
+        if wf.done and wf.outstanding == 0 and wf.owner is not None:
             self._maybe_retire(wf.owner)
         self.wake()
 
-    def repoll(self, wf: WavefrontState, mem: MemRef, expected: int) -> None:
+    def repoll(self, wf: WavefrontState, gpu: int, addr: int,
+               expected: int) -> None:
         """Re-issue a semaphore poll after a release event."""
-        req = WRequest(IKind.SEM_ACQUIRE, mem, self.gpu.config.header_bytes,
-                       self, wf)
+        req = WRequest(SEM_ACQUIRE, gpu, _SEM_SPACE, addr,
+                       self.gpu.config.header_bytes, self, wf)
         req.value = expected
         self._inject(req)
 
@@ -371,7 +439,7 @@ class GpuModel:
                  fabric: Fabric, cluster: "Cluster",
                  cu_nodes: List[int], hbm_nodes: List[int],
                  io_nodes: List[int], region: int = 0,
-                 region_guard_ps: int = 0):
+                 region_guard_ps: int = 0, bulk: bool = True):
         self.gid = gid
         self.region = region
         self.region_guard_ps = region_guard_ps
@@ -383,6 +451,7 @@ class GpuModel:
         self.engine = engine
         self.fabric = fabric
         self.cluster = cluster
+        self.bulk = bulk
         self.cus = [ComputeUnit(self, i, cu_nodes[i]) for i in range(config.num_cus)]
         self.hbm_nodes = hbm_nodes
         self.io_nodes = io_nodes
@@ -456,7 +525,7 @@ class GpuModel:
         waiters = self._sem_waiters.pop(addr, None)
         if waiters:
             for cu, wf, expected in waiters:
-                cu.repoll(wf, MemRef(self.gid, Space.SEM, addr), expected)
+                cu.repoll(wf, self.gid, addr, expected)
 
     def sem_subscribe(self, addr: int, cu: ComputeUnit, wf: WavefrontState,
                       expected: int) -> None:
@@ -467,7 +536,7 @@ class GpuModel:
         self._sem_waiters.clear()
 
     # ------------------------------------------------------- memory endpoints
-    def hbm_node_for(self, addr: int, space: Space) -> int:
+    def hbm_node_for(self, addr: int, space: int) -> int:
         ch = (addr // self.config.cache_line) % len(self.hbm_nodes)
         return self.hbm_nodes[ch]
 

@@ -96,19 +96,17 @@ def to_simple_topology(infra: Infrastructure) -> SimpleTopology:
     return SimpleTopology([(n, bw, lat, "ring")])
 
 
-def _endpoint_units(g: FQGraph) -> List[Tuple[str, int]]:
-    """(instance, index) device units that carry ranks, in rank order."""
-    units: List[Tuple[str, int]] = []
-    seen = set()
+def _endpoint_units(g: FQGraph) -> List[Tuple[str, int, str, int]]:
+    """(instance, index, component, cindex) endpoints, in rank order.
+
+    One rank per endpoint *component*: a multi-GPU host device
+    (``host_device(gpus=8)``) contributes eight ranks, one per ``gpu``
+    component, not one per device.
+    """
+    units: List[Tuple[str, int, str, int]] = []
     for name in endpoint_nodes(g):
-        inst, idx = name.split(".")[0], int(name.split(".")[1])
-        key = (inst, idx)
-        if key in seen:
-            raise NotImplementedError(
-                f"device instance {inst}.{idx} carries multiple rank "
-                f"endpoints; to_cluster maps one detailed GPU per device")
-        seen.add(key)
-        units.append(key)
+        inst, idx, comp, cidx = name.split(".")
+        units.append((inst, int(idx), comp, int(cidx)))
     return units
 
 
@@ -116,13 +114,23 @@ def to_cluster(infra: Infrastructure, noc=None, gpu_config=None,
                engine: Optional[Engine] = None):
     """Fine-grained Cluster whose scale-up topology mirrors the InfraGraph.
 
-    Endpoint devices become detailed GPUs (NoC + CUs + HBM); the wiring
-    between their I/O ports follows the InfraGraph fabric edges — a port
-    component ``<dev>.<i>.<port>.<p>`` maps onto the detailed GPU ``i``'s
-    I/O port ``p`` (mod the NoC's port count), switch devices become fabric
-    nodes with their internal wiring, and every added link takes its
-    bandwidth/latency from the graph's LinkType, *not* from the
-    ``NocConfig`` scale-up defaults.
+    Every endpoint *component* becomes a detailed GPU (NoC + CUs + HBM) —
+    rank-per-component, so a multi-GPU host device yields one rank per GPU.
+    The wiring between their I/O ports follows the InfraGraph edges:
+
+    * a non-endpoint component that is wired (device-internally) to exactly
+      one endpoint of its device — e.g. ``host.0.nic.3`` next to
+      ``host.0.gpu.3`` — aliases onto that rank's I/O port ``cidx`` (mod
+      the NoC's port count); for single-endpoint devices every component
+      aliases onto the one rank (the historical behavior);
+    * shared components (a PCIe bridge wired to all of a host's GPUs)
+      become fabric nodes of their own, with their device-internal edges
+      wired — so intra-host GPU-to-GPU traffic crosses the bridge instead
+      of the scale-out network;
+    * switch devices become fabric nodes with their internal wiring.
+
+    Every added link takes its bandwidth/latency from the graph's LinkType,
+    *not* from the ``NocConfig`` scale-up defaults.
     """
     from ..cluster import Cluster
 
@@ -132,51 +140,66 @@ def to_cluster(infra: Infrastructure, noc=None, gpu_config=None,
     if n == 0:
         raise ValueError("no endpoints (gpu/core/cu) in infrastructure")
     rank_of = {unit: r for r, unit in enumerate(units)}
+    # per device instance: its endpoint units
+    per_device: Dict[Tuple[str, int], List[Tuple[str, int, str, int]]] = {}
+    for u in units:
+        per_device.setdefault((u[0], u[1]), []).append(u)
+    ep_names = {f"{i}.{x}.{c}.{k}" for (i, x, c, k) in units}
+
+    def _split(name: str) -> Tuple[str, int, str, int]:
+        inst, idx, comp, cidx = name.split(".")
+        return inst, int(idx), comp, int(cidx)
+
+    def unit_rank(name: str) -> Optional[int]:
+        """Rank a component belongs to, or None (switch-side / shared)."""
+        inst, idx, comp, cidx = _split(name)
+        r = rank_of.get((inst, idx, comp, cidx))
+        if r is not None:
+            return r
+        eps = per_device.get((inst, idx))
+        if not eps:
+            return None                       # switch-side component
+        if len(eps) == 1:
+            return rank_of[eps[0]]            # single-endpoint device
+        # multi-endpoint device: alias iff wired to exactly one endpoint
+        nbrs = {nb for nb in g.adj[name] if nb in ep_names
+                and nb.startswith(f"{inst}.{idx}.")}
+        if len(nbrs) == 1:
+            return rank_of[_split(nbrs.pop())]
+        return None                           # shared (bridge/cpu/...)
+
     cluster = Cluster(n, gpu_config=gpu_config, noc=noc,
                       engine=engine, topology="none")
     fab = cluster.fabric
 
-    def is_unit(name: str) -> bool:
-        parts = name.split(".")
-        return (parts[0], int(parts[1])) in rank_of
-
     def resolve(name: str) -> int:
-        """FQ node -> fabric node id (endpoint ports map onto GPU I/O)."""
-        inst, idx, comp, cidx = name.split(".")
-        unit = (inst, int(idx))
-        rank = rank_of.get(unit)
+        """FQ node -> fabric node id (rank components map onto GPU I/O)."""
+        rank = unit_rank(name)
         if rank is None:
-            return fab.add_node(name)         # switch-side component
+            return fab.add_node(name)
         gpu = cluster.gpus[rank]
-        return gpu.io_nodes[int(cidx) % len(gpu.io_nodes)]
+        cidx = int(name.rsplit(".", 1)[1])
+        return gpu.io_nodes[cidx % len(gpu.io_nodes)]
 
     # one scale-up region guard per GPU: the min latency of inbound edges
     inbound_lat: Dict[int, float] = {}
     wired = 0
     for (src, dst), lt in g.edges.items():
-        src_unit, dst_unit = is_unit(src), is_unit(dst)
-        if src_unit and dst_unit and \
-                src.split(".")[:2] == dst.split(".")[:2]:
-            continue                          # device-internal edge: the
+        sr, dr = unit_rank(src), unit_rank(dst)
+        if sr is not None and sr == dr:
+            continue                          # intra-rank wiring: the
                                               # detailed NoC already models it
-        if not src_unit and not dst_unit and \
-                src.split(".")[:2] == dst.split(".")[:2]:
-            # switch-internal edge (port <-> asic): wire as-is
-            fab.add_link(resolve(src), resolve(dst), lt.bandwidth_GBps,
-                         lt.latency_ns, name=f"{src}->{dst}:{lt.name}")
-            wired += 1
-            continue
         u, v = resolve(src), resolve(dst)
         region = 0
-        if dst_unit:
-            rank = rank_of[(dst.split(".")[0], int(dst.split(".")[1]))]
-            region = cluster.regions[rank]
-            lat = inbound_lat.get(rank)
-            inbound_lat[rank] = lt.latency_ns if lat is None \
+        if dr is not None:
+            region = cluster.regions[dr]
+            lat = inbound_lat.get(dr)
+            inbound_lat[dr] = lt.latency_ns if lat is None \
                 else min(lat, lt.latency_ns)
         fab.add_link(u, v, lt.bandwidth_GBps, lt.latency_ns, region=region,
                      name=f"{src}->{dst}:{lt.name}")
-        wired += 1
+        if sr is not None or dr is not None:
+            wired += 1
     if n > 1 and wired == 0:
         raise ValueError(
             f"infrastructure {infra.name!r} has no fabric edges between "
@@ -184,4 +207,7 @@ def to_cluster(infra: Infrastructure, noc=None, gpu_config=None,
     for rank, lat in inbound_lat.items():
         fab.set_region_guard(cluster.regions[rank], lat)
         cluster.gpus[rank].region_guard_ps = int(round(lat * 1000))
+    # wiring is final: make the route/feeder census final too (the fast
+    # path's FIFO certificate depends on it — see Cluster.warm_routes)
+    cluster.warm_routes()
     return cluster

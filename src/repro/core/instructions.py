@@ -22,6 +22,17 @@ class IKind(enum.IntEnum):
     WAITCNT = 5         # stall until in-flight load/store count <= threshold
 
 
+# plain-int mirrors of IKind for the simulation hot path (enum member access
+# and enum __eq__ are measurably slower than int compares at millions of
+# instructions per run); derived so they can never desync from the enum
+LOAD = int(IKind.LOAD)
+STORE = int(IKind.STORE)
+SEM_ACQUIRE = int(IKind.SEM_ACQUIRE)
+SEM_RELEASE = int(IKind.SEM_RELEASE)
+REDUCE = int(IKind.REDUCE)
+WAITCNT = int(IKind.WAITCNT)
+
+
 class Space(enum.IntEnum):
     """Memory spaces an instruction may address."""
     HBM = 0             # high-bandwidth memory, interleaved across channels
@@ -117,3 +128,55 @@ class Instruction:
         if self.kind == IKind.REDUCE:
             return f"REDUCE({self.cycles}cyc)"
         return f"WAITCNT(<={self.threshold})"
+
+
+# ---------------------------------------------------------------------------
+# Compiled instruction streams (bulk wavefront emission, paper §4.1.1 note on
+# scalability: per-line allocation is the detailed model's hot path)
+# ---------------------------------------------------------------------------
+
+#: one compiled instruction: (kind, gpu, space, addr, size, aux) where
+#: ``aux`` is REDUCE cycles, WAITCNT threshold, or SEM_ACQUIRE expected count
+Entry = tuple
+
+
+def entry_of(ins: Instruction) -> Entry:
+    """Compile one boxed :class:`Instruction` into a flat entry tuple."""
+    m = ins.mem
+    aux = ins.cycles if ins.kind == IKind.REDUCE else ins.threshold
+    if m is None:
+        return (int(ins.kind), -1, 0, 0, ins.size, aux)
+    return (int(ins.kind), m.gpu, int(m.space), m.addr, ins.size, aux)
+
+
+class InstrStream:
+    """The flyweight/arena form of one op's per-wavefront instruction stream.
+
+    Instead of a lazy generator yielding an ``Instruction`` + ``MemRef`` pair
+    per cache line (two heap objects and two Python constructor frames on the
+    simulator's hottest path), an op compiles — once per wavefront — into a
+    flat list of scalar tuples.  ``runs[i]`` is the length of the contiguous
+    LOAD/STORE streak starting at entry ``i`` (no intervening ``Waitcnt`` /
+    semaphore / reduce), which is exactly what the CU's bulk emission path
+    needs to size a batched request train.
+    """
+
+    __slots__ = ("entries", "runs", "tag")
+
+    def __init__(self, entries: list, tag: Optional[str] = None):
+        self.entries = entries
+        self.tag = tag
+        n = len(entries)
+        runs = [0] * n
+        streak = 0
+        for i in range(n - 1, -1, -1):
+            k = entries[i][0]
+            streak = streak + 1 if k <= STORE else 0
+            runs[i] = streak
+        self.runs = runs
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __repr__(self) -> str:
+        return f"InstrStream({len(self.entries)} entries, tag={self.tag!r})"

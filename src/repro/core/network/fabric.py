@@ -48,6 +48,7 @@ precomputed at arrival).
 from __future__ import annotations
 
 from collections import deque
+from heapq import heappush as _heappush
 from typing import Callable, Dict, List, Optional, Tuple
 
 from ..engine import Engine
@@ -113,7 +114,7 @@ class Link:
     between the control and data queues — paper §5.2's arbitration fix).
     """
     __slots__ = ("name", "bw", "lat_ns", "policy", "engine", "_q", "_busy",
-                 "_rr", "bytes_moved", "busy_ns", "min_ser_ns",
+                 "_rr", "bytes_moved", "_busy_ps", "min_ser_ns",
                  "fast", "coalesce", "_free_ps", "_lat_ps", "_ser_ps_cache",
                  "_tails", "_win_ps", "_last_arr_ps", "order_violations",
                  "region", "_rguard_ps", "_sole_feed")
@@ -131,7 +132,7 @@ class Link:
         self._busy = False
         self._rr = 0
         self.bytes_moved = 0
-        self.busy_ns = 0.0
+        self._busy_ps = 0           # integer-ps busy time (see busy_ns)
         self.min_ser_ns = min_ser_ns
         # ---- fast path state ------------------------------------------
         self.fast = mode != MODE_CLASSIC and policy == "fifo"
@@ -154,6 +155,11 @@ class Link:
         # injection-fed).  FIFO order is then inherited from the feeder, so
         # admissions can chain through unconditionally.
         self._sole_feed = None
+
+    @property
+    def busy_ns(self) -> float:
+        """Cumulative serialization time (stats; stored in integer ps)."""
+        return self._busy_ps / _PS_PER_NS
 
     # ------------------------------------------------------------ fast path
     def _ser_ps(self, size: int) -> int:
@@ -188,7 +194,7 @@ class Link:
         fin = start + ser
         self._free_ps = fin
         self.bytes_moved += size
-        self.busy_ns += ser / _PS_PER_NS
+        self._busy_ps += ser
         return fin + self._lat_ps
 
     # --------------------------------------------------------------- classic
@@ -198,13 +204,19 @@ class Link:
             # flight starts chaining at its first hop event — committing
             # ahead from inside an arbitrary callback would be unsound (the
             # callback may still push earlier events after we return).
+            watermark = self._free_ps + self._lat_ps
             next_at = self._service(flight.size, self.engine._now_ps)
             if self.coalesce:
                 key = id(flight.route)
                 tail = self._tails.get(key)
                 if (tail is not None and tail.hop == flight.hop
-                        and self.engine._now_ps < tail.at_ps[0]):
-                    # pending train on the same remaining route: ride along
+                        and self.engine._now_ps < tail.at_ps[0]
+                        and tail.at_ps[-1] == watermark):
+                    # pending train on the same remaining route whose last
+                    # member was this link's most recent service (nothing
+                    # foreign serviced in between, so the members stay
+                    # service-consecutive and downstream sole-feed chaining
+                    # cannot commit past an interleaved flight): ride along
                     tail.lines.append(flight)
                     tail.at_ps.append(next_at)
                     return
@@ -250,7 +262,7 @@ class Link:
         self._busy = True
         ser = max(flight.size / self.bw if self.bw > 0 else 0.0, self.min_ser_ns)
         self.bytes_moved += flight.size
-        self.busy_ns += ser
+        self._busy_ps += int(round(ser * _PS_PER_NS))
         self.engine.schedule(ser, self._finish, flight)
 
     def _finish(self, flight: Flight) -> None:
@@ -279,6 +291,120 @@ def _enqueue_line(link: "Link", flight: Flight) -> None:
 
 
 def _propel(train: _Train) -> None:
+    """Advance a train along its route (see ``_propel_multi`` for the full
+    commit rules).  Single-line trains — the overwhelming majority at
+    cache-line granularity — take a scalar fast walk: same decisions, no
+    per-hop list traffic, lazy horizon computation."""
+    lines = train.lines
+    if len(lines) != 1:
+        _propel_multi(train)
+        return
+    route = train.route
+    nroute = len(route)
+    hop = train.hop + 1
+    f = lines[0]
+    at = train.at_ps[0]
+    rlink = route[hop] if hop < nroute else route[-1]
+    reg = rlink.region
+    eng = rlink.engine
+    now = eng._now_ps
+    queue = eng._queue
+    rheaps = eng._rheaps if eng._regioned else None
+    bound = -1                       # lazily computed commit bound
+    prev = route[hop - 1]
+    while True:
+        if hop >= nroute:
+            train.hop = nroute
+            f.hop = hop
+            if f.eager:
+                f.eta_ps = at
+                f.on_arrive(f)
+            elif at <= now:
+                f.eta_ps = now
+                f.on_arrive(f)
+            else:
+                # the arrival tick is final: stamp eta now and schedule the
+                # endpoint callback directly (no _deliver trampoline)
+                train.at_ps[0] = at
+                f.eta_ps = at
+                dreg = route[-1].region
+                _heappush(queue, (at, eng._seq, f.on_arrive, (f,), dreg))
+                eng._seq += 1
+                if rheaps is not None:
+                    _heappush(rheaps[dreg], at)
+            return
+        link = route[hop]
+        if at > now and link._sole_feed is not prev:
+            if link.region != reg:
+                # region boundary: park so the target region's horizon can
+                # see this traffic coming.  (No tail registration: single
+                # lines are only joinable at injection, hop 0 — a parked
+                # 1-line train mid-route can never be merged into.)
+                train.hop = hop - 1
+                train.at_ps[0] = at
+                lreg = link.region
+                _heappush(queue, (at, eng._seq, _propel, (train,), lreg))
+                eng._seq += 1
+                if rheaps is not None:
+                    _heappush(rheaps[lreg], at)
+                return
+            if bound < 0:
+                # inline region horizon (Engine.horizon_ps)
+                if reg and rheaps is not None:
+                    r = rheaps[reg]
+                    g = rheaps[0]
+                    b = r[0] if r else None
+                    if g and (b is None or g[0] < b):
+                        b = g[0]
+                    if queue:
+                        cap = queue[0][0] + link._rguard_ps
+                        if b is None or cap < b:
+                            b = cap
+                else:
+                    b = queue[0][0] if queue else None
+                bound = b if b is not None else (1 << 62)
+            if at >= bound and at - now > link._win_ps:
+                train.hop = hop - 1
+                train.at_ps[0] = at
+                _heappush(queue, (at, eng._seq, _propel, (train,), reg))
+                eng._seq += 1
+                if rheaps is not None:
+                    _heappush(rheaps[reg], at)
+                return
+        if not link.fast:
+            train.hop = nroute
+            f.hop = hop
+            if at <= now:
+                link.enqueue(f)
+            else:
+                eng.schedule_abs_ps(at, _enqueue_line, link, f, region=0)
+            return
+        # FIFO service commit, inlined
+        size = f.size
+        ser = link._ser_ps_cache.get(size)
+        if ser is None:
+            ser = link._ser_ps(size)
+        if at < link._last_arr_ps:
+            link.order_violations += 1
+        else:
+            link._last_arr_ps = at
+        free = link._free_ps
+        start = free if free > at else at
+        fin = start + ser
+        link._free_ps = fin
+        link.bytes_moved += size
+        link._busy_ps += ser
+        at = fin + link._lat_ps
+        train.hop = hop
+        hop += 1
+        if link.region != reg:
+            # crossed a region boundary through a sole-fed link
+            reg = link.region
+            bound = -1
+        prev = link
+
+
+def _propel_multi(train: _Train) -> None:
     """Advance a train along its route; at most one heap event per region.
 
     The train keeps moving within a single event while the next arrival tick
@@ -309,17 +435,12 @@ def _propel(train: _Train) -> None:
     rlink = route[hop] if hop < nroute else route[-1]
     reg = rlink.region
     eng = rlink.engine
-    now = eng.now_ps
-    bound = eng.peek_region(reg)
-    if reg:
-        # traffic from another region must cross one of this region's entry
-        # links first: it can reach an interior link no sooner than the
-        # earliest pending event anywhere plus that entry transit
-        gmin = eng.peek_ps()
-        if gmin is not None:
-            cap = gmin + rlink._rguard_ps
-            if bound is None or cap < bound:
-                bound = cap
+    now = eng._now_ps
+    # commit bound, computed on first need: traffic from another region
+    # must cross one of this region's entry links first — it can reach an
+    # interior link no sooner than the earliest pending event anywhere
+    # plus that entry transit
+    bound = -1
     sched = eng.schedule_abs_ps
     while True:
         first = at_ps[0]
@@ -357,8 +478,10 @@ def _propel(train: _Train) -> None:
                     route[hop - 1]._tails[id(route)] = train
                 sched(first, _propel, train, region=link.region)
                 return
-            if bound is not None and first >= bound \
-                    and first - now > link._win_ps:
+            if bound < 0:
+                b = eng.horizon_ps(reg, link._rguard_ps)
+                bound = b if b is not None else (1 << 62)
+            if first >= bound and first - now > link._win_ps:
                 # neither provably safe (region horizon) nor within the
                 # optimistic window: park until arrival
                 train.hop = hop - 1
@@ -380,6 +503,13 @@ def _propel(train: _Train) -> None:
                     sched(max(at_ps[i], now), _enqueue_line, link, g,
                           region=0)
             return
+        if link.region != reg:
+            # entering this link's region — through a sole-fed crossing or
+            # with the head arrival already due: every further ahead-of-
+            # time commit (the multi-line split limit in particular) must
+            # be bounded by the NEW region's horizon, not the stale one
+            reg = link.region
+            bound = -1
         if len(lines) == 1:
             # hot path: single line, inlined FIFO service commit
             f = lines[0]
@@ -396,31 +526,35 @@ def _propel(train: _Train) -> None:
             fin = start + ser
             link._free_ps = fin
             link.bytes_moved += size
-            link.busy_ns += ser * _NS_PER_PS
+            link._busy_ps += ser
             at_ps[0] = fin + link._lat_ps
             train.hop = hop
             hop += 1
-            if link.region != reg:
-                # crossed a region boundary through a sole-fed link: later
-                # parks/deliveries must carry (and be bounded by) the new
-                # region's horizon
-                reg = link.region
-                bound = eng.peek_region(reg)
-                if reg:
-                    gmin = eng.peek_ps()
-                    if gmin is not None:
-                        cap = gmin + link._rguard_ps
-                        if bound is None or cap < bound:
-                            bound = cap
+            # (region crossings are handled by the refresh at the top of
+            # the per-link processing, before any commit)
             continue
         # ---- multi-line train ------------------------------------------
         n = len(lines)
         sole = link._sole_feed is route[hop - 1]
         if not sole:
+            if bound < 0:
+                b = eng.horizon_ps(reg, link._rguard_ps)
+                bound = b if b is not None else (1 << 62)
             stop = n
             lim = now + link._win_ps
-            if bound is not None and bound > lim:
+            if bound > lim:
                 lim = bound
+            # the horizon alone is not enough for a multi-line train: its
+            # OWN first delivery may wake a CU whose reinjected traffic
+            # arrives before the later lines' committed ticks (the horizon
+            # cannot see events this walk is about to schedule).  Cap the
+            # commit window at the first line's earliest possible delivery
+            # — no consequence of it can reach any link sooner.
+            own = at_ps[0]
+            for l in route[hop:]:
+                own += l._lat_ps
+            if lim > own:
+                lim = own
             for i in range(1, n):
                 if at_ps[i] >= lim:
                     stop = i
@@ -439,7 +573,8 @@ def _propel(train: _Train) -> None:
             key = id(route)
             tail = link._tails.get(key)
             if (tail is not None and tail.hop == hop
-                    and now < tail.at_ps[0]):
+                    and now < tail.at_ps[0]
+                    and tail.at_ps[-1] == link._free_ps + link._lat_ps):
                 # merge into the pending train already queued on this link;
                 # this train is consumed (sentinel hop: stale ``_tails``
                 # entries pointing at it must reject future joiners)
@@ -495,6 +630,7 @@ class Fabric:
         self.adj: List[List[Tuple[int, Link]]] = []
         self._route_cache: Dict[Tuple[int, int], List[Link]] = {}
         self._via_cache: Dict[Tuple[int, ...], List[Link]] = {}
+        self._bfs_trees: Dict[int, list] = {}
         self.links: List[Link] = []
 
     # ------------------------------------------------------------- building
@@ -522,6 +658,7 @@ class Fabric:
         self.links.append(link)
         self._route_cache.clear()
         self._via_cache.clear()
+        self._bfs_trees.clear()
         return link
 
     def add_bidi(self, u: int, v: int, bandwidth_GBps: float, latency_ns: float,
@@ -585,28 +722,40 @@ class Fabric:
         return
 
     def _bfs(self, src: int, dst: int) -> List[Link]:
+        """Shortest path via a cached per-source BFS parent tree.
+
+        One full BFS per distinct source amortizes across all destinations
+        (the cluster pre-registers every route it can ever use — see
+        ``Cluster.warm_routes``); discovery order matches the classic
+        per-pair BFS exactly, so paths — and therefore timings — are
+        unchanged.
+        """
         if src == dst:
             return []
-        prev: Dict[int, Tuple[int, Link]] = {}
-        frontier = deque([src])
-        seen = {src}
-        while frontier:
-            u = frontier.popleft()
-            for v, link in self.adj[u]:
-                if v in seen:
-                    continue
-                seen.add(v)
-                prev[v] = (u, link)
-                if v == dst:
-                    path: List[Link] = []
-                    cur = dst
-                    while cur != src:
-                        cur, l = prev[cur]
-                        path.append(l)
-                    path.reverse()
-                    return path
-                frontier.append(v)
-        raise ValueError(f"no route {self.node_names[src]} -> {self.node_names[dst]}")
+        tree = self._bfs_trees.get(src)
+        if tree is None:
+            tree = [None] * len(self.node_names)
+            frontier = deque([src])
+            seen = {src}
+            while frontier:
+                u = frontier.popleft()
+                for v, link in self.adj[u]:
+                    if v in seen:
+                        continue
+                    seen.add(v)
+                    tree[v] = (u, link)
+                    frontier.append(v)
+            self._bfs_trees[src] = tree
+        if tree[dst] is None:
+            raise ValueError(
+                f"no route {self.node_names[src]} -> {self.node_names[dst]}")
+        path: List[Link] = []
+        cur = dst
+        while cur != src:
+            cur, l = tree[cur]
+            path.append(l)
+        path.reverse()
+        return path
 
     # --------------------------------------------------------------- sending
     def send(self, route: List[Link], size: int, cls: int,
@@ -649,23 +798,124 @@ class Fabric:
                 self.engine.schedule_abs_ps(at_ps, _deliver, f)
             return
         flight = Flight(size, cls, route, on_arrive, payload, eager)
+        self.send_flight_at(flight, at_ps)
+
+    def send_flight_at(self, flight: Flight, at_ps: int) -> None:
+        """``send_at`` for a caller-prepared flight (zero allocation).
+
+        The flight's ``route`` (non-empty), ``size``, ``cls``, ``eager``,
+        ``on_arrive`` and ``hop == 0`` must be set; the cluster's request
+        path re-arms one object per round trip through here.
+        """
+        eng = self.engine
+        now = eng._now_ps
+        if at_ps < now:
+            at_ps = now
+        route = flight.route
         first = route[0]
         if not first.fast:
             if at_ps <= now:
                 first.enqueue(flight)
             else:
-                self.engine.schedule_abs_ps(at_ps, _enqueue_line, first,
-                                            flight)
+                eng.schedule_abs_ps(at_ps, _enqueue_line, first, flight)
             return
-        next_at = first._service(size, at_ps)
-        train = _Train(route, 0)
-        train.lines.append(flight)
-        train.at_ps.append(next_at)
+        # inline FIFO service commit on the first link
+        size = flight.size
+        ser = first._ser_ps_cache.get(size)
+        if ser is None:
+            ser = first._ser_ps(size)
+        if at_ps < first._last_arr_ps:
+            first.order_violations += 1
+        else:
+            first._last_arr_ps = at_ps
+        free = first._free_ps
+        start = free if free > at_ps else at_ps
+        fin = start + ser
+        first._free_ps = fin
+        first.bytes_moved += size
+        first._busy_ps += ser
+        next_at = fin + first._lat_ps
         if first.coalesce:
-            first._tails[id(route)] = train
-        self.engine.schedule_abs_ps(
-            next_at, _propel, train,
-            region=route[1].region if len(route) > 1 else route[-1].region)
+            key = id(route)
+            tail = first._tails.get(key)
+            if (tail is not None and tail.hop == 0
+                    and now < tail.at_ps[0]
+                    and tail.at_ps[-1] == free + first._lat_ps):
+                # a train is pending on this link for the same route, its
+                # hop event has not fired, AND its last member was this
+                # link's most recent service (the pre-commit ``free``
+                # watermark): the members stay service-consecutive, so
+                # downstream sole-feed chaining cannot commit past a
+                # foreign flight serviced in between.  Ride along.
+                tail.lines.append(flight)
+                tail.at_ps.append(next_at)
+                return
+            train = _Train(route, 0)
+            train.lines.append(flight)
+            train.at_ps.append(next_at)
+            first._tails[key] = train
+        else:
+            train = _Train(route, 0)
+            train.lines.append(flight)
+            train.at_ps.append(next_at)
+        reg1 = route[1].region if len(route) > 1 else route[-1].region
+        _heappush(eng._queue, (next_at, eng._seq, _propel, (train,), reg1))
+        eng._seq += 1
+        if eng._regioned:
+            _heappush(eng._rheaps[reg1], next_at)
+
+    def inject_train(self, route: List[Link], flights: List[Flight],
+                     ats: List[int]) -> None:
+        """Inject a pre-batched request train (bulk wavefront emission).
+
+        ``flights`` are caller-prepared (route/size/cls/eager/on_arrive
+        set); ``ats[i]`` is flight ``i``'s first-link arrival tick —
+        non-decreasing and in the future, e.g. the issue ticks of one CU
+        streak, which arrive in tick order on the CU's (single-injector)
+        first link.  The whole batch commits FIFO service up front and
+        rides ONE scheduled hop event through the existing lookahead /
+        coalescing machinery, instead of one ``send_at`` round trip per
+        cache line; a pending same-route tail train is joined when its hop
+        event has not fired yet.  Per-line service commit times are
+        identical to per-line injection, so timing is bit-exact.
+        """
+        first = route[0]
+        eng = self.engine
+        if not first.fast:
+            # classic/fair first link: the per-line machinery is the
+            # reference path (service order depends on queue state)
+            now = eng._now_ps
+            for i, f in enumerate(flights):
+                at_ps = ats[i]
+                if at_ps <= now:
+                    first.enqueue(f)
+                else:
+                    eng.schedule_abs_ps(at_ps, _enqueue_line, first, f)
+            return
+        train = None
+        if first.coalesce:
+            tail = first._tails.get(id(route))
+            if (tail is not None and tail.hop == 0
+                    and eng._now_ps < tail.at_ps[0]
+                    and tail.at_ps[-1] == first._free_ps + first._lat_ps):
+                # joinable only while service-consecutive (see
+                # send_flight_at): the tail's last member must be this
+                # link's most recent service
+                train = tail
+        new = train is None
+        if new:
+            train = _Train(route, 0)
+        lines, ticks = train.lines, train.at_ps
+        service = first._service
+        for i, f in enumerate(flights):
+            lines.append(f)
+            ticks.append(service(f.size, ats[i]))
+        if new:
+            if first.coalesce:
+                first._tails[id(route)] = train
+            eng.schedule_abs_ps(
+                ticks[0], _propel, train,
+                region=route[1].region if len(route) > 1 else route[-1].region)
 
     # ------------------------------------------------------------------ stats
     @property

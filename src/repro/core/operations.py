@@ -13,7 +13,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Iterator, List, Optional
 
-from .instructions import IKind, Instruction, MemRef, Space
+from .instructions import (IKind, Instruction, InstrStream, LOAD, MemRef,
+                           REDUCE, STORE, Space, WAITCNT, entry_of)
 
 
 @dataclass
@@ -33,6 +34,19 @@ class GpuOp:
     def instructions(self, wf: int, num_wf: int, ctx: OpContext) -> Iterator[Instruction]:
         return iter(())
 
+    def compile(self, wf: int, num_wf: int, ctx: OpContext) -> InstrStream:
+        """Compiled (flat-tuple) form of :meth:`instructions`.
+
+        The generator form remains the op's *specification* — tests compare
+        the two — but execution runs on the compiled stream.  Data ops
+        override this with arithmetic builders that never box an
+        ``Instruction``/``MemRef`` pair per cache line; this fallback keeps
+        custom/control ops correct by construction.
+        """
+        tag = getattr(self, "tag", None)
+        return InstrStream([entry_of(i)
+                            for i in self.instructions(wf, num_wf, ctx)], tag)
+
     def lines(self, wf: int, num_wf: int, ctx: OpContext) -> int:
         """Number of cache lines wavefront ``wf`` is responsible for."""
         return 0
@@ -40,6 +54,25 @@ class GpuOp:
 
 def _nlines(size: int, cache_line: int) -> int:
     return (size + cache_line - 1) // cache_line
+
+
+def _range_entries(kind: int, mem: MemRef, size: int, wf: int, num_wf: int,
+                   cl: int, out: Optional[list] = None) -> list:
+    """Append ``(kind, gpu, space, addr, size, 0)`` entries for wavefront
+    ``wf``'s stripe of a memory range — the arithmetic core all data-op
+    compilers share (no per-line object boxing)."""
+    if out is None:
+        out = []
+    total = _nlines(size, cl)
+    gpu, space, base = mem.gpu, int(mem.space), mem.addr
+    ap = out.append
+    for line in range(wf, total, num_wf):
+        off = line * cl
+        sz = size - off
+        if sz > cl:
+            sz = cl
+        ap((kind, gpu, space, base + off, sz, 0))
+    return out
 
 
 @dataclass
@@ -61,6 +94,10 @@ class LoadOp(GpuOp):
             sz = min(cl, self.size - line * cl)
             yield Instruction.load(MemRef(self.src.gpu, self.src.space, addr), sz, self.tag)
 
+    def compile(self, wf: int, num_wf: int, ctx: OpContext) -> InstrStream:
+        return InstrStream(_range_entries(LOAD, self.src, self.size, wf,
+                                          num_wf, ctx.cache_line), self.tag)
+
 
 @dataclass
 class StoreOp(GpuOp):
@@ -80,6 +117,10 @@ class StoreOp(GpuOp):
             addr = self.dst.addr + line * cl
             sz = min(cl, self.size - line * cl)
             yield Instruction.store(MemRef(self.dst.gpu, self.dst.space, addr), sz, self.tag)
+
+    def compile(self, wf: int, num_wf: int, ctx: OpContext) -> InstrStream:
+        return InstrStream(_range_entries(STORE, self.dst, self.size, wf,
+                                          num_wf, ctx.cache_line), self.tag)
 
 
 @dataclass
@@ -119,6 +160,30 @@ class MemcpyOp(GpuOp):
                 yield Instruction.store(
                     MemRef(self.dst.gpu, self.dst.space, self.dst.addr + line * cl),
                     sz, self.tag)
+
+    def compile(self, wf: int, num_wf: int, ctx: OpContext) -> InstrStream:
+        cl = ctx.cache_line
+        u = max(1, self.unroll if self.unroll is not None else ctx.unroll)
+        total = _nlines(self.size, cl)
+        size = self.size
+        sg, ssp, sbase = self.src.gpu, int(self.src.space), self.src.addr
+        dg, dsp, dbase = self.dst.gpu, int(self.dst.space), self.dst.addr
+        fence = (WAITCNT, -1, 0, 0, 0, 0)
+        ents: list = []
+        ap = ents.append
+        my_lines = range(wf, total, num_wf)
+        for g in range(0, len(my_lines), u):
+            group = my_lines[g:g + u]
+            for line in group:
+                off = line * cl
+                sz = size - off
+                ap((LOAD, sg, ssp, sbase + off, cl if sz > cl else sz, 0))
+            ap(fence)
+            for line in group:
+                off = line * cl
+                sz = size - off
+                ap((STORE, dg, dsp, dbase + off, cl if sz > cl else sz, 0))
+        return InstrStream(ents, self.tag)
 
 
 @dataclass
@@ -213,6 +278,38 @@ class FusedReduceOp(GpuOp):
                     yield Instruction.store(
                         MemRef(self.dst.gpu, self.dst.space,
                                self.dst.addr + line * cl), sz, self.tag)
+
+    def compile(self, wf: int, num_wf: int, ctx: OpContext) -> InstrStream:
+        cl = ctx.cache_line
+        u = max(1, self.unroll if self.unroll is not None else ctx.unroll)
+        total = _nlines(self.size, cl)
+        size = self.size
+        k = len(self.srcs)
+        rcpl = ctx.reduce_cycles_per_line
+        srcs = [(s.gpu, int(s.space), s.addr) for s in self.srcs]
+        dst = self.dst
+        if dst is not None:
+            dg, dsp, dbase = dst.gpu, int(dst.space), dst.addr
+        fence = (WAITCNT, -1, 0, 0, 0, 0)
+        ents: list = []
+        ap = ents.append
+        my_lines = range(wf, total, num_wf)
+        for g in range(0, len(my_lines), u):
+            group = my_lines[g:g + u]
+            for sg, ssp, sbase in srcs:
+                for line in group:
+                    off = line * cl
+                    sz = size - off
+                    ap((LOAD, sg, ssp, sbase + off, cl if sz > cl else sz, 0))
+            ap(fence)
+            cyc = len(group) * max(1, k - 1) * rcpl
+            ap((REDUCE, -1, 0, 0, 0, cyc if cyc > 1 else 1))
+            if dst is not None:
+                for line in group:
+                    off = line * cl
+                    sz = size - off
+                    ap((STORE, dg, dsp, dbase + off, cl if sz > cl else sz, 0))
+        return InstrStream(ents, self.tag)
 
 
 @dataclass

@@ -10,9 +10,8 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Iterator, List, Optional
+from typing import Callable, List, Optional
 
-from .instructions import Instruction
 from .operations import GpuOp, OpContext
 
 _kernel_ids = itertools.count()
@@ -51,12 +50,19 @@ class Kernel:
 
 
 class WavefrontState:
-    """Execution cursor of one wavefront: iterates the workgroup's op list,
-    expanding each op into its instruction stream lazily."""
+    """Execution cursor of one wavefront.
 
-    __slots__ = ("wf", "num_wf", "wg", "ctx", "op_idx", "_instrs",
-                 "outstanding", "waiting", "done", "current_op", "fetched",
-                 "sem_seen", "owner")
+    Iterates the workgroup's op list, compiling each op — once, on first
+    touch — into its flat :class:`~repro.core.instructions.InstrStream`
+    (kind/addr/size scalar tuples plus streak run-lengths).  The CU's scan
+    then reads entries by index: no generator frames, no per-cache-line
+    ``Instruction``/``MemRef`` boxing, and the streak metadata the bulk
+    emission path needs comes for free.
+    """
+
+    __slots__ = ("wf", "num_wf", "wg", "ctx", "op_idx", "entries", "runs",
+                 "pc", "outstanding", "waiting", "done", "current_op",
+                 "wait_thresh", "owner")
 
     def __init__(self, wf: int, wg: Workgroup, ctx: OpContext):
         self.wf = wf
@@ -64,13 +70,14 @@ class WavefrontState:
         self.wg = wg
         self.ctx = ctx
         self.op_idx = 0
-        self._instrs: Optional[Iterator[Instruction]] = None
+        self.entries: Optional[list] = None   # current op's compiled stream
+        self.runs: Optional[list] = None      # LOAD/STORE streak lengths
+        self.pc = 0                           # index into ``entries``
         self.outstanding = 0            # this wavefront's in-flight mem ops
-        self.waiting: Optional[str] = None  # None|"waitcnt"|"sem"|"sync"|"mem"
+        self.waiting: Optional[str] = None  # None|"waitcnt"|"sem"|"sync"
         self.done = False
         self.current_op: Optional[GpuOp] = None
-        self.fetched: Optional[Instruction] = None  # decoded but un-issued
-        self.sem_seen: int = 0          # semaphore value observed by poll
+        self.wait_thresh = 0            # threshold of the blocking Waitcnt
         self.owner = None               # _WGExec backlink (set by the CU)
 
     def retired(self) -> bool:
@@ -78,46 +85,41 @@ class WavefrontState:
         return self.done and self.outstanding == 0
 
     def peek_sync(self) -> Optional[str]:
-        """If the next op is a sync op (no instructions), return its kind."""
-        if self.fetched is None and self.op_idx < len(self.wg.ops):
-            op = self.wg.ops[self.op_idx]
-            if self._instrs is None and op.sync_kind is not None:
-                return op.sync_kind
+        """If the cursor sits on a sync op (no instructions), its kind."""
+        if self.entries is None and self.op_idx < len(self.wg.ops):
+            return self.wg.ops[self.op_idx].sync_kind
         return None
 
     def advance_sync(self) -> None:
         """Consume a sync op (called when the barrier resolves)."""
         self.op_idx += 1
-        self._instrs = None
         self.current_op = None
 
-    def fetch(self) -> Optional[Instruction]:
-        """Return the next un-issued instruction without losing it.
+    def next_entry(self) -> Optional[tuple]:
+        """The entry at the cursor, advancing across op boundaries.
 
-        The CU calls ``fetch()`` to decide issuability; once the instruction
-        is actually issued it must call ``consume()``.  ``None`` means the
-        wavefront is at a sync op (``peek_sync`` tells which) or done.
+        Returns ``None`` when the wavefront is parked at a sync op
+        (``peek_sync`` tells which) or finished (``done`` is set).  The
+        caller consumes an issued entry by incrementing ``pc``.
         """
-        if self.fetched is None:
-            self.fetched = self._pull()
-        return self.fetched
-
-    def consume(self) -> None:
-        self.fetched = None
-
-    def _pull(self) -> Optional[Instruction]:
-        while self.op_idx < len(self.wg.ops):
-            op = self.wg.ops[self.op_idx]
+        while True:
+            ents = self.entries
+            if ents is not None:
+                if self.pc < len(ents):
+                    return ents[self.pc]
+                self.entries = None
+                self.runs = None
+                self.current_op = None
+                self.op_idx += 1
+            ops = self.wg.ops
+            if self.op_idx >= len(ops):
+                self.done = True
+                return None
+            op = ops[self.op_idx]
             if op.sync_kind is not None:
-                return None                      # CU must resolve the sync
-            if self._instrs is None:
-                self.current_op = op
-                self._instrs = op.instructions(self.wf, self.num_wf, self.ctx)
-            nxt = next(self._instrs, None)
-            if nxt is not None:
-                return nxt
-            self.op_idx += 1
-            self._instrs = None
-            self.current_op = None
-        self.done = True
-        return None
+                return None                  # CU must resolve the sync
+            stream = op.compile(self.wf, self.num_wf, self.ctx)
+            self.current_op = op
+            self.entries = stream.entries
+            self.runs = stream.runs
+            self.pc = 0

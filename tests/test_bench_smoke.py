@@ -1,0 +1,49 @@
+"""Bench smoke check (ISSUE 2 satellite): the tracked benchmark must not
+regress against the committed ``results/BENCH_engine.json`` baseline.
+
+Runs the tracked workload (8-rank 1 MiB ring all-reduce, default NoC,
+coalesce + bulk emission) once and asserts, against the committed baseline:
+
+* ``time_ns`` is bit-identical (the simulation result is deterministic —
+  any drift means the schedule changed);
+* the heap-event count did not regress (> 2% more events fails);
+* the run stays FIFO-certified (``order_violations == 0``).
+
+Wall clock is intentionally NOT asserted — CI boxes are shared-CPU and a
+single sample swings by 30%; events/time are the stable proxies.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core import collectives as C
+from repro.core.cluster import Cluster, NocConfig
+from repro.core.system import simulate_collective
+
+BASELINE = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "BENCH_engine.json")
+
+
+@pytest.mark.slow
+def test_tracked_benchmark_matches_committed_baseline():
+    if not os.path.exists(BASELINE):
+        pytest.skip("no committed BENCH_engine.json baseline")
+    with open(BASELINE) as f:
+        base = json.load(f)
+    wl = base["workload"]
+    assert wl["collective"] == "ring_all_reduce"
+    ref = base["modes"]["coalesce"]
+
+    cluster = Cluster(wl["nranks"], noc=NocConfig())
+    r = simulate_collective(
+        C.ring_all_reduce(wl["nranks"], wl["size_bytes"],
+                          wl["nworkgroups"], wl["protocol"]),
+        cluster=cluster)
+
+    assert r.time_ns == ref["time_ns"], \
+        f"simulated time drifted: {r.time_ns} != baseline {ref['time_ns']}"
+    assert cluster.fabric.order_violations == 0
+    assert r.events <= ref["events"] * 1.02, \
+        f"event count regressed: {r.events} vs baseline {ref['events']}"

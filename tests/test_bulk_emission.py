@@ -1,0 +1,197 @@
+"""Bulk wavefront emission (ISSUE 2 tentpole).
+
+The CU may emit a contiguous load/store streak as one batched request train
+(``NocConfig.bulk_emission="on"``, the default) instead of one scheduling
+round trip per cache line.  The contract: *identical* simulated timing —
+``time_ns`` and every rank's completion time match the per-instruction path
+bit for bit, certified by the per-link FIFO monitor — across scale-up
+wirings and collectives; only the wall-clock/event cost may differ.
+"""
+
+import pytest
+
+from repro.core import collectives as C
+from repro.core.cluster import Cluster, NocConfig
+from repro.core.engine import Engine
+from repro.core.instructions import LOAD, REDUCE, STORE, WAITCNT, entry_of
+from repro.core.network.fabric import (DATA, Fabric, Flight, MODE_COALESCE,
+                                       MODE_EXACT)
+from repro.core.operations import (FusedReduceOp, LoadOp, MemcpyOp,
+                                   OpContext, StoreOp)
+from repro.core.instructions import MemRef, Space
+from repro.core.system import simulate_collective
+
+SMALL = dict(mesh_x=2, mesh_y=2, cus_per_router=2, mem_channels=4,
+             io_ports=4)
+
+
+def run_bulk_pair(prog_fn, nranks, *, topology="switch", mode="coalesce",
+                  **sim_kw):
+    out = {}
+    for bulk in ("on", "off"):
+        cluster = Cluster(nranks, noc=NocConfig(fabric_mode=mode,
+                                                bulk_emission=bulk, **SMALL),
+                          topology=topology)
+        r = simulate_collective(prog_fn(), cluster=cluster, **sim_kw)
+        out[bulk] = (r, cluster)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# property-style parity: bulk on == bulk off, across wirings x collectives
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology", ["switch", "ring"])
+@pytest.mark.parametrize("gen,args,kw", [
+    (C.ring_all_reduce, (4, 16384, 2, "put"), {}),
+    (C.ring_all_gather, (4, 8192, 1, "get"), {}),
+    (C.direct_reduce_scatter, (4, 8192, 2, "get"), {}),
+    (C.direct_all_to_all, (4, 8192, 1, "put"), dict(unroll=8)),
+    (C.halving_doubling_all_reduce, (4, 8192, 2), {}),
+])
+def test_bulk_parity_cluster_wirings(topology, gen, args, kw):
+    res = run_bulk_pair(lambda: gen(*args), args[0], topology=topology, **kw)
+    r_on, c_on = res["on"]
+    r_off, c_off = res["off"]
+    assert r_on.time_ns == r_off.time_ns
+    assert r_on.per_rank_done_ns == r_off.per_rank_done_ns
+    assert c_on.fabric.order_violations == 0
+    assert c_off.fabric.order_violations == 0
+
+
+@pytest.mark.parametrize("mode", [MODE_EXACT, MODE_COALESCE])
+def test_bulk_parity_torus_infragraph(mode):
+    """Torus wiring from an InfraGraph (to_cluster path)."""
+    from repro.core.backends import FineBackend
+    from repro.core.infragraph.blueprints import torus2d_fabric
+    times = {}
+    for bulk in ("on", "off"):
+        noc = NocConfig(fabric_mode=mode, bulk_emission=bulk, **SMALL)
+        be = FineBackend(infra=torus2d_fabric(2, 2), noc=noc)
+        cluster = be.make_cluster(4)
+        r = be.run(C.ring_all_reduce(4, 8192, 2, "put"), cluster=cluster)
+        times[bulk] = (r.time_ns, tuple(r.per_rank_done_ns))
+        assert cluster.fabric.order_violations == 0
+    assert times["on"] == times["off"]
+
+
+def test_bulk_emission_emits_fewer_or_equal_events():
+    """Bulk emission trims scheduling events (or at worst matches)."""
+    res = run_bulk_pair(lambda: C.ring_all_reduce(4, 32768, 1, "put"), 4)
+    assert res["on"][0].events <= res["off"][0].events
+    assert res["on"][0].requests == res["off"][0].requests
+
+
+# ---------------------------------------------------------------------------
+# compiled instruction streams (the arena the bulk path reads)
+# ---------------------------------------------------------------------------
+
+def _hbm(gpu, addr):
+    return MemRef(gpu, Space.HBM, addr)
+
+
+@pytest.mark.parametrize("op", [
+    LoadOp(_hbm(0, 0), 128 * 10 + 17),
+    StoreOp(_hbm(1, 4096), 128 * 7),
+    MemcpyOp(_hbm(0, 0), _hbm(1, 1 << 20), 128 * 9 + 5, unroll=4),
+    FusedReduceOp(srcs=[_hbm(0, 0), _hbm(1, 8192)], dst=_hbm(0, 1 << 20),
+                  size=128 * 6 + 64, unroll=2),
+])
+@pytest.mark.parametrize("wf,num_wf", [(0, 4), (3, 4), (1, 2)])
+def test_compiled_stream_matches_generator_spec(op, wf, num_wf):
+    """The arithmetic compilers must equal the generator specification."""
+    ctx = OpContext(cache_line=128, unroll=1, reduce_cycles_per_line=2)
+    want = [entry_of(i) for i in op.instructions(wf, num_wf, ctx)]
+    stream = op.compile(wf, num_wf, ctx)
+    assert stream.entries == want
+
+
+def test_compiled_stream_runs_mark_streaks():
+    """runs[i] = length of the LOAD/STORE streak starting at entry i."""
+    ctx = OpContext(cache_line=128, unroll=4)
+    stream = MemcpyOp(_hbm(0, 0), _hbm(0, 1 << 20), 128 * 8).compile(
+        0, 1, ctx)
+    kinds = [e[0] for e in stream.entries]
+    assert kinds == [LOAD] * 4 + [WAITCNT] + [STORE] * 4 + \
+                    [LOAD] * 4 + [WAITCNT] + [STORE] * 4
+    # at the first load of each unroll group the whole group is one streak
+    assert stream.runs[0] == 4
+    assert stream.runs[3] == 1          # last load before the fence
+    assert stream.runs[4] == 0          # the fence itself
+    # group 0's stores run straight into group 1's loads (no fence between)
+    assert stream.runs[5] == 4 + 4
+    assert stream.runs[8] == 1 + 4      # last store + next group's 4 loads
+
+
+def test_fused_reduce_compile_includes_reduce_cycles():
+    ctx = OpContext(cache_line=128, reduce_cycles_per_line=3)
+    stream = FusedReduceOp(srcs=[_hbm(0, 0), _hbm(0, 4096), _hbm(1, 0)],
+                           dst=_hbm(0, 1 << 20), size=128 * 4).compile(0, 4, ctx)
+    kinds = [e[0] for e in stream.entries]
+    assert kinds == [LOAD, LOAD, LOAD, WAITCNT, REDUCE, STORE]
+    reduce_entry = stream.entries[4]
+    assert reduce_entry[5] == 1 * 2 * 3  # lines * (k-1) * cycles_per_line
+
+
+# ---------------------------------------------------------------------------
+# Fabric.inject_train: batched injection rides the coalescing machinery
+# ---------------------------------------------------------------------------
+
+def _mk_flight(size, route):
+    f = Flight(size, DATA, route, lambda g: None)
+    return f
+
+
+def test_inject_train_matches_per_line_send_at():
+    """A batched train must produce bit-identical arrivals to per-line
+    ``send_at`` at the same ticks, with no FIFO violations."""
+    def run(batched):
+        eng = Engine()
+        fab = Fabric(eng, mode=MODE_COALESCE)
+        a, b, c = fab.add_node("a"), fab.add_node("b"), fab.add_node("c")
+        fab.add_link(a, b, 2.0, 30.0)
+        fab.add_link(b, c, 2.0, 30.0)
+        route = fab.route(a, c)
+        arrivals = []
+
+        def on_arrive(f):
+            arrivals.append((eng.now_ps, f.size))
+
+        ticks = [1000 * (i + 1) for i in range(16)]
+        if batched:
+            flights = []
+            for i in range(16):
+                f = Flight(100 + i, DATA, route, on_arrive)
+                flights.append(f)
+            fab.inject_train(route, flights, ticks)
+        else:
+            for i in range(16):
+                fab.send_at(route, 100 + i, DATA, on_arrive, at_ps=ticks[i])
+        eng.run()
+        return arrivals, eng.events_processed, fab.order_violations
+
+    per_line, ev_line, viol_line = run(False)
+    batched, ev_batch, viol_batch = run(True)
+    assert batched == per_line
+    assert viol_line == 0 and viol_batch == 0
+    assert ev_batch <= ev_line
+
+
+def test_inject_train_joins_pending_tail():
+    """A second batch injected while the first train's hop event is still
+    pending joins it instead of scheduling another event."""
+    eng = Engine()
+    fab = Fabric(eng, mode=MODE_COALESCE)
+    a, b = fab.add_node("a"), fab.add_node("b")
+    fab.add_link(a, b, 1.0, 500.0)
+    route = fab.route(a, b)
+    got = []
+    flights = [Flight(64, DATA, route, lambda f: got.append(eng.now_ps))
+               for _ in range(2)]
+    fab.inject_train(route, flights[:1], [0])
+    fab.inject_train(route, flights[1:], [10])
+    # both lines ride the first train's single pending event
+    tail = route[0]._tails[id(route)]
+    assert len(tail.lines) == 2
+    eng.run()
+    assert len(got) == 2 and got == sorted(got)

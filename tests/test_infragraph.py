@@ -199,3 +199,73 @@ def test_to_cluster_rejects_edgeless_multi_gpu_infra():
     infra.add(simple_gpu_device(), "host", 3)
     with pytest.raises(ValueError, match="no fabric edges"):
         to_cluster(infra, noc=_noc())
+
+
+def _multi_gpu_host_infra(hosts=2, gpus=2):
+    """Two host_device(gpus=2) servers, each GPU's NIC on its own switch
+    port — the ISSUE's rank-per-component scenario."""
+    from repro.core.infragraph.blueprints import host_device
+    from repro.core.infragraph.graph import LinkType
+    dev = host_device(gpus=gpus)
+    infra = Infrastructure("mg_hosts")
+    infra.add(dev, "host", hosts)
+    infra.add(switch_device(hosts * gpus, 50.0), "switch", 1)
+    infra.add_link_type(LinkType("eth", 50.0, 600.0))
+    for h in range(hosts):
+        for k in range(gpus):
+            infra.connect(("host", h, "nic", k),
+                          ("switch", 0, "port", h * gpus + k), "eth")
+    return infra
+
+
+def test_to_cluster_multi_gpu_host_maps_rank_per_component():
+    infra = _multi_gpu_host_infra(hosts=2, gpus=2)
+    cl = to_cluster(infra, noc=_noc())
+    # one detailed GPU per endpoint *component*, not per device
+    assert len(cl.gpus) == 4
+    # each GPU's NIC edge lands on the matching rank's own I/O port:
+    # rank order is host.0.gpu.0, host.0.gpu.1, host.1.gpu.0, host.1.gpu.1
+    for h in range(2):
+        for k in range(2):
+            rank = h * 2 + k
+            assert any(l.name == f"host.{h}.nic.{k}"
+                                 f"->switch.0.port.{rank}:eth"
+                       for l in cl.fabric.links)
+            # the NIC aliases onto rank's own I/O port: one eth hop from
+            # that port to the switch
+            io = cl.gpus[rank].io_nodes[k % len(cl.gpus[rank].io_nodes)]
+            route = cl.fabric.route(
+                io, cl.fabric.node(f"switch.0.port.{rank}"))
+            assert len(route) == 1 and route[0].lat_ns == 600.0
+
+
+def test_to_cluster_multi_gpu_host_shares_bridge_intra_host():
+    """The host's PCIe bridge (wired to every GPU) stays a fabric node, so
+    intra-host GPU-to-GPU traffic crosses the bridge, not the switch."""
+    infra = _multi_gpu_host_infra(hosts=2, gpus=2)
+    cl = to_cluster(infra, noc=_noc())
+    assert "host.0.bridge.0" in cl.fabric.node_names
+    # intra-host: io -> bridge -> io (2 hops), never via the switch
+    r = cl.fabric.route(cl.gpus[0].io_nodes[0], cl.gpus[1].io_nodes[0])
+    assert any("bridge" in l.name for l in r)
+    assert not any("switch" in l.name for l in r)
+    # cross-host: must use the scale-out switch
+    r2 = cl.fabric.route(cl.gpus[0].io_nodes[0], cl.gpus[2].io_nodes[0])
+    assert any("switch" in l.name for l in r2)
+
+
+def test_to_cluster_multi_gpu_host_runs_collective():
+    """End-to-end: a fine-tier all-reduce over rank-per-component mapping
+    completes, stays FIFO-certified, and agrees across fabric modes."""
+    from repro.core import collectives as C
+    from repro.core.backends import FineBackend
+    times = set()
+    for mode in ("exact", "coalesce"):
+        noc = _noc()
+        noc.fabric_mode = mode
+        be = FineBackend(infra=_multi_gpu_host_infra(hosts=2, gpus=2),
+                         noc=noc)
+        r = be.run(C.ring_all_reduce(4, 4096, 1, "put"))
+        assert r.time_ns > 0
+        times.add(r.time_ns)
+    assert len(times) == 1
