@@ -22,6 +22,11 @@ import os
 import sys
 import time
 
+# pin JAX to the CPU backend before anything imports it (as test_system
+# does): on the bench boxes accelerator-plugin probing — not compute —
+# costs upwards of 400 s and masquerades as a hang
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import collectives as C                        # noqa: E402
@@ -46,12 +51,13 @@ SEED_BASELINE = {"events": 9_864_416, "wall_s": 23.32}
 WALL_TRIALS = 2
 
 
-def run_mode(mode: str, size: int, bulk: str = "on"):
+def run_mode(mode: str, size: int, bulk: str = "on", ledger: str = "on"):
     wall = None
     sims = set()
     for _ in range(WALL_TRIALS):
         cluster = Cluster(NRANKS, noc=NocConfig(fabric_mode=mode,
-                                                bulk_emission=bulk))
+                                                bulk_emission=bulk,
+                                                fabric_ledger=ledger))
         t0 = time.perf_counter()
         r = simulate_collective(C.ring_all_reduce(NRANKS, size, NWG,
                                                   PROTOCOL), cluster=cluster)
@@ -62,6 +68,7 @@ def run_mode(mode: str, size: int, bulk: str = "on"):
     return {
         "mode": mode,
         "bulk_emission": bulk,
+        "fabric_ledger": ledger,
         "time_ns": r.time_ns,
         "per_rank_done_ns": r.per_rank_done_ns,
         "events": r.events,
@@ -77,10 +84,13 @@ def main() -> None:
     size = SIZE if "--quick" not in sys.argv else SIZE // 8
     rows = {m: run_mode(m, size) for m in ("classic", "exact", "coalesce")}
     rows["coalesce_bulk_off"] = run_mode("coalesce", size, bulk="off")
+    rows["coalesce_ledger_off"] = run_mode("coalesce", size, ledger="off")
+    rows["exact_ledger_off"] = run_mode("exact", size, ledger="off")
 
     # ---- correctness gates ------------------------------------------------
     exact, coal, classic = rows["exact"], rows["coalesce"], rows["classic"]
     nobulk = rows["coalesce_bulk_off"]
+    noled, noled_ex = rows["coalesce_ledger_off"], rows["exact_ledger_off"]
     assert coal["time_ns"] == exact["time_ns"], \
         "coalesced result must be bit-exact vs the un-coalesced path"
     assert coal["per_rank_done_ns"] == exact["per_rank_done_ns"]
@@ -92,6 +102,13 @@ def main() -> None:
         "bulk wavefront emission must be timing-neutral"
     assert nobulk["per_rank_done_ns"] == coal["per_rank_done_ns"]
     assert nobulk["order_violations"] == 0
+    assert noled["time_ns"] == coal["time_ns"] \
+        and noled_ex["time_ns"] == coal["time_ns"], \
+        "reservation ledgers must be timing-neutral"
+    assert noled["per_rank_done_ns"] == coal["per_rank_done_ns"]
+    assert noled["order_violations"] == 0 and noled_ex["order_violations"] == 0
+    assert coal["events"] < noled["events"], \
+        "ledger chaining must strictly reduce heap events"
 
     out = {
         "workload": {"collective": "ring_all_reduce", "nranks": NRANKS,

@@ -72,9 +72,13 @@ class FineBackend:
             k.on_done = on_done
             delay = rank_delay_ns[k.gpu] if rank_delay_ns else 0.0
             if delay > 0:
-                cluster.engine.schedule(delay, cluster.dispatch, k)
+                cluster.dispatch_at(delay, k)
             else:
                 cluster.dispatch(k)
+        # every dispatch above either happened or is an engine event the
+        # ledger can see: promise that no callback springs new work on an
+        # idle CU (lets channel clocks treat idle CUs as quiet)
+        cluster.seal()
         cluster.run(until_ns)
         if len(done_at) != program.num_ranks:
             missing = [r for r in range(program.num_ranks)

@@ -16,10 +16,13 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+from heapq import heappush as _heappush
+
 from .engine import Engine
 from .gpu_model import GpuConfig, GpuModel, WRequest
 from .instructions import LOAD, SEM_RELEASE, STORE
-from .network.fabric import CONTROL, DATA, Fabric, Flight
+from .network import fabric as _fabric
+from .network.fabric import CONTROL, DATA, EndpointSource, Fabric, Flight
 from .workload import Kernel
 
 
@@ -41,6 +44,8 @@ class NocConfig:
     fabric_mode: str = "coalesce"         # "coalesce" | "exact" | "classic"
     coalesce_window_ns: Optional[float] = None   # None -> fabric default
     bulk_emission: str = "on"             # "on" | "off" (batched CU streaks)
+    fabric_ledger: str = "on"             # "on" | "off" (per-link reservation
+                                          # ledgers / channel clocks)
 
     @property
     def num_cus(self) -> int:
@@ -61,9 +66,13 @@ class Cluster:
         cfg.hbm_latency_ns = self.noc.mem_lat_ns
         self.gpu_config = cfg
         self.bulk = self.noc.bulk_emission != "off"
+        # every wire message carries at least a request/ack header: promise
+        # that to the fabric so the ledger's transit lower bounds are tight
         self.fabric = Fabric(self.engine, default_policy=self.noc.arbitration,
                              mode=self.noc.fabric_mode,
-                             coalesce_window_ns=self.noc.coalesce_window_ns)
+                             coalesce_window_ns=self.noc.coalesce_window_ns,
+                             ledger=self.noc.fabric_ledger != "off",
+                             min_msg_bytes=cfg.header_bytes)
         # lookahead regions, one per GPU: every link is tagged with the
         # region whose events admit traffic onto it (on-chip links and the
         # GPU's outbound scale-up side), so a region's horizon provably
@@ -85,6 +94,16 @@ class Cluster:
             self.warm_routes()
         self._inflight = 0
         self.request_count = 0
+        # sealed: the owner promises that every kernel dispatch either
+        # already happened or is already scheduled as an engine event —
+        # no event callback will spring a new dispatch on an idle CU.
+        # The ledger can then treat idle CUs as quiet (see
+        # ComputeUnit.inj_ge); FineBackend seals after dispatching,
+        # chakra.TraceExecutor (on_done-chained dispatches) must not.
+        self.sealed = False
+
+    def seal(self) -> None:
+        self.sealed = True
 
     # ------------------------------------------------------------- topology
     def _build(self, num_gpus: int, topology: str) -> None:
@@ -191,6 +210,12 @@ class Cluster:
         Speed: a request's route and destination node are then a single
         list index by cache-line residue (``cu.reqtab`` / ``cu.resptab``)
         instead of hashing/multipath arithmetic per Wavefront Request.
+
+        The per-link reservation ledgers are wired here too, once the route
+        space is final: each CU becomes the injection source of its own
+        route heads and the delivery sink of its inbound links (its wake
+        heap), and each memory endpoint bounds its response injections by
+        its inbound channel clocks plus the access latency.
         """
         for src in self.gpus:
             for cu in src.cus:
@@ -217,6 +242,23 @@ class Cluster:
                             self._route(dst, hnode, src, cu.node, addr))
                     cu.reqtab[dst.gid] = (period, req_routes, nodes)
                     cu.resptab[dst.gid] = (period, resp_routes)
+        if self.fabric.ledger:
+            self._wire_ledger()
+
+    def _wire_ledger(self) -> None:
+        """Install injection sources and delivery sinks (see warm_routes)."""
+        fab = self.fabric
+        inbound = fab.inbound_map()
+        for gpu in self.gpus:
+            for cu in gpu.cus:
+                cu.in_links = inbound.get(cu.node, [])
+                for link in cu.in_links:
+                    link._sink = cu._wake_heap
+                fab.set_injection_source(cu.node, cu)
+            lat_ps = self._hbm_lat_ps
+            for node in gpu.hbm_nodes:
+                fab.set_injection_source(
+                    node, EndpointSource(inbound.get(node, []), lat_ps))
 
     # ------------------------------------------------------------ dispatch
     def dispatch(self, kernel: Kernel) -> None:
@@ -225,7 +267,24 @@ class Cluster:
                 "cluster routes not initialized: a topology='none' Cluster "
                 "must have its scale-up fabric wired by the caller and then "
                 "warm_routes() called before dispatching kernels")
+        if self.sealed and self.engine._running:
+            raise RuntimeError(
+                "mid-run dispatch on a sealed cluster: seal() promises the "
+                "ledger that no event callback dispatches new kernels "
+                "(use dispatch_at() before sealing, or leave the cluster "
+                "unsealed)")
         self.gpus[kernel.gpu].dispatch(kernel)
+
+    def dispatch_at(self, delay_ns: float, kernel: Kernel) -> None:
+        """Pre-schedule a dispatch (e.g. straggler launch skew).  Safe on a
+        sealed cluster: the dispatch rides an untagged engine event, which
+        every ledger injection bound already floors on."""
+        if self.gpus[kernel.gpu].cus[0].reqtab is None:
+            raise RuntimeError(
+                "cluster routes not initialized: a topology='none' Cluster "
+                "must have its scale-up fabric wired by the caller and then "
+                "warm_routes() called before dispatching kernels")
+        self.engine.schedule(delay_ns, self.gpus[kernel.gpu].dispatch, kernel)
 
     def run(self, until_ns: Optional[float] = None) -> float:
         return self.engine.run(until_ns)
@@ -263,7 +322,27 @@ class Cluster:
         req.on_arrive = self._arrive_at_memory
         if at_ps is None:
             at_ps = self.engine._now_ps
-        self.fabric.send_flight_at(req, at_ps)
+        if req.gpu != req.cu.gpu.gid and _fabric._BATCH:
+            # cross-GPU requests ride multipath via-routes, which can
+            # reconverge with this batch's later (differently-keyed)
+            # issues — the same-source FIFO argument behind mid-batch
+            # horizon proofs only holds for single-tree routes, so chain
+            # on ledger evidence alone
+            self._chain_ledger_only(self.fabric.send_flight_at, req, at_ps)
+        else:
+            self.fabric.send_flight_at(req, at_ps, chain=True)
+
+    @staticmethod
+    def _chain_ledger_only(send, *args) -> None:
+        """Run one chained injection with horizon proofs disabled (see
+        fabric._NO_HZ): used for every walk folded into a CU batch whose
+        traffic is not same-source-FIFO against the batch's later issues."""
+        prev = _fabric._NO_HZ
+        _fabric._NO_HZ = True
+        try:
+            send(*args, chain=True)
+        finally:
+            _fabric._NO_HZ = prev
 
     def send_request_bulk(self, cu, wf, n: int, t0_ps: int) -> None:
         """Emit ``n`` lines of ``wf``'s load/store streak in one batch.
@@ -284,7 +363,7 @@ class Cluster:
         cl = self._cl
         hdr = self._hdr
         reqtab = cu.reqtab
-        fab = self.fabric
+        gid = cu.gpu.gid
         arrive = self._arrive_at_memory
         group: List[WRequest] = []
         ats: List[int] = []
@@ -307,7 +386,7 @@ class Cluster:
             req.on_arrive = arrive
             if route is not group_route:
                 if group:
-                    fab.inject_train(group_route, group, ats)
+                    self._inject_group(gid, group_route, group, ats)
                 group = []
                 ats = []
                 group_route = route
@@ -315,7 +394,17 @@ class Cluster:
             ats.append(at)
             at += cyc
         if group:
-            fab.inject_train(group_route, group, ats)
+            self._inject_group(gid, group_route, group, ats)
+
+    def _inject_group(self, src_gid: int, route, group, ats) -> None:
+        """Inject one bulk request train, ledger-only when it is a
+        cross-GPU via-route chained from inside a batch (see
+        send_request)."""
+        if group[0].gpu != src_gid and _fabric._BATCH:
+            self._chain_ledger_only(self.fabric.inject_train, route, group,
+                                    ats)
+        else:
+            self.fabric.inject_train(route, group, ats, chain=True)
 
     def _arrive_at_memory(self, flight: Flight) -> None:
         """Request delivery at a memory endpoint.
@@ -337,10 +426,12 @@ class Cluster:
             if kind == SEM_RELEASE:
                 # the value lands at its home endpoint after the access
                 # latency; the state change needs its own correctly-timed
-                # event
-                self.engine.schedule_abs_ps(eta + self._hbm_lat_ps,
-                                            self.gpus[req.gpu].sem_bump,
-                                            req.addr,
+                # event.  Its tick also floors the home GPU's ledger (a
+                # bump can re-poll any subscribed CU at that tick).
+                home = self.gpus[req.gpu]
+                bump_ps = eta + self._hbm_lat_ps
+                _heappush(home._sem_floor, bump_ps)
+                self.engine.schedule_abs_ps(bump_ps, home.sem_bump, req.addr,
                                             region=self.regions[req.gpu])
             req.size = self._hdr       # STORE ack / SEM value response
             req.cls = CONTROL
@@ -356,4 +447,12 @@ class Cluster:
         req.hop = 0
         req.eager = False
         req.on_arrive = req.cu.complete
-        self.fabric.send_flight_at(req, eta + self._hbm_lat_ps)
+        if _fabric._BATCH:
+            # folded into an in-progress CU issue batch: the batch's own
+            # future issues are invisible to region horizons, so this
+            # response walk must chain on ledger evidence alone
+            self._chain_ledger_only(self.fabric.send_flight_at, req,
+                                    eta + self._hbm_lat_ps)
+        else:
+            self.fabric.send_flight_at(req, eta + self._hbm_lat_ps,
+                                       chain=True)

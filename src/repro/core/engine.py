@@ -116,6 +116,21 @@ class Engine:
         q = self._queue
         return q[0][0] if q else None
 
+    def untagged_floor_ps(self) -> int:
+        """Earliest pending *untagged* (region-0) tick, or a far sentinel.
+
+        The fabric's reservation ledger floors every injection bound on
+        this: untagged events are the escape hatch for activity the ledger
+        cannot otherwise see (pre-scheduled kernel dispatches, straggler
+        skew, generic user callbacks), so anything they might trigger stays
+        inside every proof.
+        """
+        if self._regioned:
+            g = self._rheaps[0]
+            return g[0] if g else (1 << 62)
+        q = self._queue
+        return q[0][0] if q else (1 << 62)
+
     def peek_region(self, region: int) -> Optional[int]:
         """Earliest pending tick that could affect region ``region``.
 
@@ -200,6 +215,9 @@ class Engine:
                         break
                     _, _, fn, args, _ = pop(q)
                     self._now_ps = at_ps
+                    # live per-event count: the fabric's channel-clock memo
+                    # uses it as its epoch (one memo generation per event)
+                    self.events_processed += 1
                     fn(*args)
                     n += 1
                     if max_events is not None and n >= max_events:
@@ -217,12 +235,12 @@ class Engine:
                     break
                 pop(rheaps[item[4]])
                 self._now_ps = at_ps
+                self.events_processed += 1
                 item[2](*item[3])
                 n += 1
         finally:
             if gc_was_enabled:
                 _gc.enable()
-        self.events_processed += n
         self._running = False
         if until_ps is not None and q and q[0][0] > until_ps:
             # stopped at the horizon with work pending: clock sits at the

@@ -25,16 +25,20 @@ homes) lives here too: endpoint handlers attached to fabric nodes.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from heapq import heappop as _heappop, heappush as _heappush
 from typing import Dict, List, Optional, Tuple
 
 from .engine import Engine
 from .instructions import (LOAD, REDUCE, SEM_ACQUIRE, SEM_RELEASE, STORE,
                            WAITCNT)
 from .operations import OpContext
-from .network.fabric import Fabric, Flight
+from .network import fabric as _fabric
+from .network.fabric import (Fabric, Flight, InjectionSource, LEDGER_DEPTH,
+                             _clock_ge)
 from .workload import Kernel, WavefrontState, Workgroup
 
 _SEM_SPACE = 1            # int mirror of Space.SEM
+_FAR = 1 << 62
 
 
 @dataclass
@@ -114,11 +118,12 @@ class _KernelExec:
         self.barrier_wgs: List[_WGExec] = []
 
 
-class ComputeUnit:
+class ComputeUnit(InjectionSource):
     __slots__ = ("gpu", "idx", "resident", "outstanding", "_rr",
                  "_scheduled", "_busy_until", "node", "_ticking",
                  "_wake_again", "_order", "_cyc_ps", "_bound",
-                 "reqtab", "resptab")
+                 "reqtab", "resptab", "_wake_heap", "_tick_at",
+                 "_ext_risk", "_remote_sem", "in_links")
 
     def __init__(self, gpu: "GpuModel", idx: int, node: int):
         self.gpu = gpu
@@ -139,6 +144,18 @@ class ComputeUnit:
         # resptab[gid] = (period, routes); indexed by cache-line residue
         self.reqtab: Optional[list] = None
         self.resptab: Optional[list] = None
+        # ---- reservation-ledger injection source -----------------------
+        # wake heap: every tick at which this CU could next act — its
+        # scheduled issue slot plus each response delivery the fabric has
+        # committed toward it (the fabric pushes those as the CU node's
+        # sink, see Cluster.warm_routes)
+        self._wake_heap: List[int] = []
+        self._tick_at = -1               # tick of the scheduled _tick event
+        self._ext_risk = False           # barrier-parked: siblings may wake
+        self._remote_sem = 0             # wavefronts waiting on a sem homed
+                                         # on another GPU (its bumps floor
+                                         # THAT GPU's ledger, not ours)
+        self.in_links: list = []         # links delivering at this CU node
 
     # ----------------------------------------------------------------- wake
     def wake(self) -> None:
@@ -149,15 +166,14 @@ class ComputeUnit:
             # inside it): tell it to rescan instead of recursing
             self._wake_again = True
             return
-        now = self.gpu.engine.now
-        delay = self._busy_until - now
+        eng = self.gpu.engine
+        delay = self._busy_until - eng.now
         if delay <= 0.0:
             # nothing to wait for: issue now, saving a zero-delay heap event
             # (this runs inside the waking event, e.g. a response delivery)
             self._tick()
             return
-        self._scheduled = True
-        self.gpu.engine.schedule(delay, self._tick, region=self.gpu.region)
+        self._schedule_tick(eng._now_ps + int(round(delay * 1000)))
 
     def wake_deferred(self) -> None:
         """Schedule a tick instead of issuing inline (used by kernel
@@ -169,9 +185,58 @@ class ComputeUnit:
         if self._ticking:
             self._wake_again = True
             return
+        eng = self.gpu.engine
+        delay = max(0.0, self._busy_until - eng.now)
+        self._schedule_tick(eng._now_ps + int(round(delay * 1000)))
+
+    def _schedule_tick(self, at_ps: int) -> None:
+        """Schedule ``_tick`` at an absolute tick, recording it in the wake
+        heap so the ledger's injection bound sees the upcoming issue slot."""
         self._scheduled = True
-        delay = max(0.0, self._busy_until - self.gpu.engine.now)
-        self.gpu.engine.schedule(delay, self._tick, region=self.gpu.region)
+        self._tick_at = at_ps
+        _heappush(self._wake_heap, at_ps)
+        self.gpu.engine.schedule_abs_ps(at_ps, self._tick,
+                                        region=self.gpu.region)
+
+    # ------------------------------------------------- ledger (fabric hook)
+    def inj_ge(self, need: int, depth: int) -> bool:
+        """No new message can leave this CU before ``need`` (see
+        :class:`repro.core.network.fabric.InjectionSource`).
+
+        The CU can only inject from an issue scan, and every way a scan can
+        start before ``need`` is visible here: its scheduled tick and the
+        response deliveries committed toward it are in the wake heap;
+        semaphore releases that could re-poll are in the GPU's sem floor;
+        dispatches ride untagged events (the engine's untagged floor);
+        responses not yet committed must still cross this CU's inbound
+        links (their channel clocks).  Barrier-parked CUs and CUs that
+        could receive fresh workgroups can be woken by arbitrary sibling
+        events, and a CU mid-scan is issuing right now — both refuse.
+        """
+        gpu = self.gpu
+        eng = gpu.engine
+        now = eng._now_ps
+        h = self._wake_heap
+        while h and h[0] < now:
+            _heappop(h)
+        if h and h[0] < need:
+            return False
+        if self._ticking or self._ext_risk or self._remote_sem:
+            return False
+        if len(self.resident) < gpu.config.max_wg_per_cu and \
+                (gpu._has_pending or not gpu.cluster.sealed):
+            return False
+        sf = gpu._sem_floor
+        while sf and sf[0] < now:
+            _heappop(sf)
+        if sf and sf[0] < need:
+            return False
+        if eng.untagged_floor_ps() < need:
+            return False
+        for l in self.in_links:
+            if not _clock_ge(l, need, depth - 1):
+                return False
+        return True
 
     # ----------------------------------------------------------------- tick
     def _tick(self) -> None:
@@ -193,8 +258,25 @@ class ComputeUnit:
         cause are request completions, which the ``completion_guard`` term
         already covers — so the pre-push horizon is sound, and the batch is
         not cut short by its own in-flight traffic.
+
+        With the reservation ledger enabled, a batch that runs out of
+        region horizon keeps going while it can *prove* no earlier wake:
+        nothing in the CU's wake heap, semaphore floor, untagged events, or
+        uncommitted inbound traffic (channel clocks of its inbound links)
+        lands before the next issue slot.  Sync-parked wavefronts and CUs
+        that could receive fresh workgroups disable the extension — those
+        are woken by sibling events only the horizon can see.
         """
         self._scheduled = False
+        ta = self._tick_at
+        if ta >= 0:
+            # retire this event's own entry from the wake heap
+            self._tick_at = -1
+            h = self._wake_heap
+            while h and h[0] < ta:
+                _heappop(h)
+            if h and h[0] == ta:
+                _heappop(h)
         if not self.resident:
             return
         gpu = self.gpu
@@ -203,10 +285,35 @@ class ComputeUnit:
         cyc_ps = self._cyc_ps
         now_ps = eng.now_ps
         t_ps = now_ps
+        cap = now_ps + gpu.completion_guard_ps
         self._bound = eng.horizon_ps(gpu.region, gpu.region_guard_ps,
-                                     cap_ps=now_ps + gpu.completion_guard_ps)
+                                     cap_ps=cap)
         bound = self._bound
+        extend = gpu.fabric.ledger and not self._ext_risk and not (
+            len(self.resident) < gpu.config.max_wg_per_cu
+            and (gpu._has_pending or not gpu.cluster.sealed))
+        if extend:
+            for wgx in self.resident:
+                for wf in wgx.wavefronts:
+                    if wf.waiting == "sync":
+                        extend = False      # sibling events may release it
+                        break
+                else:
+                    continue
+                break
         self._ticking = True
+        # the batch issues at future virtual ticks that no pending heap
+        # event reflects: response chains folded into this batch's request
+        # walks must rely on ledger evidence alone (fabric._BATCH).  A
+        # *nested* batch (a barrier release inline-waking a sibling CU from
+        # the arriving CU's scan) is a second concurrent issuer the horizon
+        # is equally blind to — its request chains drop horizon proofs too
+        # (the outer CU's injection source refuses via ``_ticking``).
+        batch_prev = _fabric._BATCH
+        nohz_prev = _fabric._NO_HZ
+        _fabric._BATCH = True
+        if batch_prev:
+            _fabric._NO_HZ = True
         try:
             while True:
                 self._wake_again = False
@@ -216,8 +323,7 @@ class ComputeUnit:
                         continue
                     return
                 if res < 0:                   # sync/retire needs real event
-                    self._scheduled = True
-                    eng.schedule_abs_ps(t_ps, self._tick, region=gpu.region)
+                    self._schedule_tick(t_ps)
                     return
                 # next issue slot, same arithmetic as the event cadence
                 if res == 1:
@@ -228,12 +334,46 @@ class ComputeUnit:
                 else:                         # bulk streak of ``res`` lines
                     nt = t_ps + res * cyc_ps
                 if nt >= bound:
-                    self._scheduled = True
-                    eng.schedule_abs_ps(nt, self._tick, region=gpu.region)
-                    return
+                    if extend and nt < cap and self._issue_floor_ge(nt + 1):
+                        bound = nt + 1        # proven: no wake before nt+1
+                        self._bound = bound
+                    else:
+                        self._schedule_tick(nt)
+                        return
                 t_ps = nt
         finally:
             self._ticking = False
+            _fabric._BATCH = batch_prev
+            _fabric._NO_HZ = nohz_prev
+
+    def _issue_floor_ge(self, need: int) -> bool:
+        """True iff provably nothing can change this CU's issue decisions
+        before tick ``need`` (the ledger extension of the batch bound)."""
+        if self._ext_risk or self._remote_sem:
+            # set mid-batch (e.g. a barrier arrival in a real-time scan
+            # while another resident workgroup keeps issuing): arbitrary
+            # sibling events — or a remote GPU's semaphore bump — may
+            # change the picture, and only the horizon sees those
+            return False
+        gpu = self.gpu
+        eng = gpu.engine
+        now = eng._now_ps
+        h = self._wake_heap
+        while h and h[0] < now:
+            _heappop(h)
+        if h and h[0] < need:
+            return False
+        sf = gpu._sem_floor
+        while sf and sf[0] < now:
+            _heappop(sf)
+        if sf and sf[0] < need:
+            return False
+        if eng.untagged_floor_ps() < need:
+            return False
+        for l in self.in_links:
+            if not _clock_ge(l, need, LEDGER_DEPTH):
+                return False
+        return True
 
     def _scan(self, t_ps: int) -> int:
         """One cadence step at (virtual) tick ``t_ps``.
@@ -352,6 +492,8 @@ class ComputeUnit:
             # poll: issue a control-class load of the semaphore line; the
             # wavefront blocks until the poll observes value >= expected.
             wf.waiting = "sem"
+            if e[1] != self.gpu.gid:
+                self._remote_sem += 1
             req = WRequest(kind, e[1], e[2], e[3], hdr, self, wf)
             req.value = e[5]             # expected count rides along
             self._inject(req, t_ps)
@@ -377,6 +519,8 @@ class ComputeUnit:
             expected = req.value if req.value else 1
             if sem_home.sem_value(req.addr) >= expected:
                 wf.waiting = None
+                if req.gpu != self.gpu.gid:
+                    self._remote_sem -= 1
                 self.wake()
             else:
                 # subscribe: when a release bumps this semaphore, re-poll.
@@ -413,10 +557,15 @@ class ComputeUnit:
             if all(w.waiting == "sync" or w.done for w in wgx.wavefronts) \
                     and not wgx.barrier_arrived:
                 wgx.barrier_arrived = True
+                # parked at a kernel barrier: an arbitrary sibling CU's
+                # event releases it, so the ledger must not prove this CU
+                # quiet beyond the region horizon
+                self._ext_risk = True
                 self.gpu.kernel_barrier_arrive(wgx)
 
     def barrier_release(self, wgx: _WGExec) -> None:
         wgx.barrier_arrived = False
+        self._ext_risk = any(w.barrier_arrived for w in self.resident)
         for w in wgx.wavefronts:
             if not w.done:
                 w.waiting = None
@@ -460,6 +609,11 @@ class GpuModel:
         self._sems: Dict[int, int] = {}
         self._sem_waiters: Dict[int, List[Tuple[ComputeUnit, WavefrontState, int]]] = {}
         self._wg_to_kernel: Dict[int, _KernelExec] = {}
+        # ledger floors: ticks of scheduled semaphore bumps on this GPU, and
+        # whether any kernel still has undispatched workgroups (a sibling
+        # retirement could then hand work to an idle CU at its own tick)
+        self._sem_floor: List[int] = []
+        self._has_pending = False
 
     # --------------------------------------------------------------- dispatch
     def dispatch(self, kernel: Kernel) -> None:
@@ -484,6 +638,7 @@ class GpuModel:
                 cu._order = None
                 cu.wake_deferred()
                 attempts = 0
+        self._has_pending = any(k.pending for k in self._kernels.values())
 
     def wg_retired(self, cu: ComputeUnit, wgx: _WGExec) -> None:
         kx = self._wg_to_kernel.pop(id(wgx))

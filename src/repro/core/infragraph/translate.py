@@ -207,7 +207,9 @@ def to_cluster(infra: Infrastructure, noc=None, gpu_config=None,
     for rank, lat in inbound_lat.items():
         fab.set_region_guard(cluster.regions[rank], lat)
         cluster.gpus[rank].region_guard_ps = int(round(lat * 1000))
-    # wiring is final: make the route/feeder census final too (the fast
-    # path's FIFO certificate depends on it — see Cluster.warm_routes)
+    # wiring is final: make the route/feeder census final too, and wire
+    # the per-link reservation ledgers (feeder lists, CU/endpoint injection
+    # sources, delivery sinks) over the graph-built scale-up topology — the
+    # fast path's FIFO certificate depends on both (see Cluster.warm_routes)
     cluster.warm_routes()
     return cluster

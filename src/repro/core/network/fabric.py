@@ -43,12 +43,46 @@ Scheduling modes (``Fabric(mode=...)``)
 ``fair``-policy links always use the classic machinery (their round-robin
 pick depends on queue contents at serialization-finish time, which cannot be
 precomputed at arrival).
+
+Per-link reservation ledgers (``Fabric(ledger=True)``, default on)
+------------------------------------------------------------------
+
+Region horizons alone cannot chain a flight through interior NoC hops: the
+next pending event of a busy region is always about a cycle away, so every
+hop of a multi-hop route costs one "park" event.  With the ledger enabled,
+every FIFO link additionally keeps a full Chandy-Misra *channel clock* — a
+sound lower bound on the earliest tick at which any *not-yet-committed*
+traffic could still arrive at its input queue — assembled per query from
+
+* its **reservation heap** ``_resv``: arrival ticks of trains already
+  scheduled (parked or injected) whose next service commit is this link;
+* its **feeder census** ``_feeders``: every upstream link that any
+  registered route enters it from.  Traffic still upstream must clear the
+  feeder's server first, so it arrives no earlier than
+  ``max(chan_clock(feeder), feeder._free_ps) + min_serialization + latency``
+  (the recursion is depth-limited and memoized per event);
+* its **injection sources**: links that head a registered route take the
+  earliest tick their attached injector can act — a compute unit's wake
+  floor (scheduled issue slot, pending response deliveries, semaphore
+  releases), or a memory endpoint's inbound clock plus its access latency
+  (``Fabric.set_injection_source``); untagged/global events floor every
+  source;
+* the **region horizon** (``Engine.horizon_ps``) as the conservative base:
+  the ledger clock is never below it, so ledger chaining strictly
+  generalizes region-horizon chaining.
+
+``_propel``/``_propel_multi`` then commit a hop ahead of real time whenever
+the arrival tick beats the link's channel clock — chaining a flight through
+every interior hop (and across region boundaries) in one heap event, roughly
+one event per flight leg instead of one per hop.  The per-link FIFO monitor
+(``order_violations``) still certifies every run: zero violations means the
+schedule is bit-identical to the classic arrival order.
 """
 
 from __future__ import annotations
 
 from collections import deque
-from heapq import heappush as _heappush
+from heapq import heappop as _heappop, heappush as _heappush
 from typing import Callable, Dict, List, Optional, Tuple
 
 from ..engine import Engine
@@ -62,6 +96,76 @@ MODE_COALESCE = "coalesce"
 
 _PS_PER_NS = 1000
 _NS_PER_PS = 0.001
+
+_FAR = 1 << 62                  # "no bound" sentinel tick
+
+#: channel-clock recursion depth: how many feeder levels upstream the clock
+#: query walks before falling back to the region horizon.  Each level adds
+#: at least one link latency of lookahead; routes are short, so a small
+#: depth captures nearly all of the win at bounded query cost.
+LEDGER_DEPTH = 4
+
+
+#: _BATCH is True while a CU issue batch is on the stack (set by
+#: ComputeUnit._tick).  A batch issues at *future virtual* ticks that leave
+#: no pending heap event, so region-horizon proofs are blind to the batch's
+#: own upcoming traffic.  The batch's future *requests* stay safe anyway —
+#: same-source flights ride one BFS tree and are FIFO-behind on every
+#: shared link — but its future *responses* turn at independent memory
+#: endpoints and can reconverge: a later-issued request to a nearer
+#: endpoint produces an earlier arrival than a response already committed
+#: ahead under the horizon.  Response chains spawned mid-batch therefore
+#: run with _NO_HZ set: every ahead-of-time commit must be justified by
+#: ledger evidence alone (reservations, feeder ``_free_ps`` floors, and
+#: injection sources, which refuse for the mid-batch CU via ``_ticking``).
+_BATCH = False
+_NO_HZ = False
+
+#: region-horizon memo for _clock_ge: (region, guard) -> horizon tick,
+#: valid for one (engine, event, push-count) snapshot — any scheduled event
+#: can lower a horizon, so the tag includes the engine's sequence counter
+_HZ: Dict[Tuple[int, int], int] = {}
+_HZ_TAG = (0, 0, 0)
+
+
+class InjectionSource:
+    """Interface for a route-head link's injection-bound provider.
+
+    ``inj_ge(need, depth)`` answers "is it provable that this injector puts
+    no *new* (not yet committed) message onto the link before tick
+    ``need``?".  ``depth`` is the remaining channel-clock recursion budget
+    for providers that consult upstream links.  Must be conservative:
+    ``False`` when unsure.
+    """
+
+    __slots__ = ()
+
+    def inj_ge(self, need: int, depth: int) -> bool:  # pragma: no cover
+        raise NotImplementedError
+
+
+class EndpointSource(InjectionSource):
+    """Injection bound for a memory-endpoint node (request/response turn).
+
+    Every injection by the endpoint is the fixed-latency consequence of a
+    request *delivered* to it, and deliveries commit eagerly — so any
+    injection not yet committed corresponds to a request not yet committed
+    on one of the node's inbound links, bounded by those links' channel
+    clocks plus the endpoint's access latency.
+    """
+
+    __slots__ = ("in_links", "lat_ps")
+
+    def __init__(self, in_links: List["Link"], lat_ps: int):
+        self.in_links = in_links
+        self.lat_ps = lat_ps
+
+    def inj_ge(self, need: int, depth: int) -> bool:
+        t = need - self.lat_ps
+        for l in self.in_links:
+            if not _clock_ge(l, t, depth - 1):
+                return False
+        return True
 
 
 class Flight:
@@ -117,12 +221,16 @@ class Link:
                  "_rr", "bytes_moved", "_busy_ps", "min_ser_ns",
                  "fast", "coalesce", "_free_ps", "_lat_ps", "_ser_ps_cache",
                  "_tails", "_win_ps", "_last_arr_ps", "order_violations",
-                 "region", "_rguard_ps", "_sole_feed")
+                 "region", "_rguard_ps", "_sole_feed",
+                 "led", "_feeders", "_inj_fed", "_inj_src", "_sink",
+                 "_resv", "_xfer_lb", "_ge_e", "_ge_v", "_geL_e", "_geL_v",
+                 "_lt_e", "_lt_v", "_busy_e")
 
     def __init__(self, engine: Engine, name: str, bandwidth_GBps: float,
                  latency_ns: float, policy: str = "fifo",
                  min_ser_ns: float = 0.0, mode: str = MODE_COALESCE,
-                 coalesce_window_ns: float = 0.0, region: int = 0):
+                 coalesce_window_ns: float = 0.0, region: int = 0,
+                 ledger: bool = True, min_msg_bytes: int = 0):
         self.name = name
         self.bw = bandwidth_GBps  # GB/s == bytes/ns
         self.lat_ns = latency_ns
@@ -155,6 +263,26 @@ class Link:
         # injection-fed).  FIFO order is then inherited from the feeder, so
         # admissions can chain through unconditionally.
         self._sole_feed = None
+        # ---- reservation ledger (channel clock) -----------------------
+        self.led = ledger and self.fast
+        self._feeders: List["Link"] = []  # distinct upstream feeder links
+        self._inj_fed = False             # heads a publicly-routed path
+        self._inj_src: Optional[InjectionSource] = None
+        self._sink = None                 # endpoint wake heap (list) or None
+        self._resv: List[int] = []        # scheduled future arrivals here
+        # minimum transit through this link's server for a future message:
+        # smallest possible serialization plus propagation
+        self._xfer_lb = self._ser_ps(min_msg_bytes) + self._lat_ps
+        # channel-clock memo, two-sided, valid for one event epoch:
+        # clock >= _ge_v proven (horizon-assisted grade), clock >= _geL_v
+        # proven (ledger-only grade), clock < refuted for need >= _lt_v
+        self._ge_e = -1
+        self._ge_v = 0
+        self._geL_e = -1
+        self._geL_v = 0
+        self._lt_e = -1
+        self._lt_v = 0
+        self._busy_e = -1                 # cycle guard for the recursion
 
     @property
     def busy_ns(self) -> float:
@@ -219,6 +347,9 @@ class Link:
                     # cannot commit past an interleaved flight): ride along
                     tail.lines.append(flight)
                     tail.at_ps.append(next_at)
+                    if len(flight.route) == 1 and not flight.eager \
+                            and self._sink is not None:
+                        _heappush(self._sink, next_at)
                     return
                 train = _Train(flight.route, flight.hop)
                 train.lines.append(flight)
@@ -230,10 +361,17 @@ class Link:
                 train.at_ps.append(next_at)
             route = flight.route
             nxt = flight.hop + 1
-            self.engine.schedule_abs_ps(
-                next_at, _propel, train,
-                region=route[nxt].region if nxt < len(route)
-                else route[-1].region)
+            if nxt < len(route):
+                nlink = route[nxt]
+                if nlink.led:
+                    _heappush(nlink._resv, next_at)
+                reg1 = nlink.region
+            else:
+                last = route[-1]
+                if last._sink is not None and not flight.eager:
+                    _heappush(last._sink, next_at)
+                reg1 = last.region
+            self.engine.schedule_abs_ps(next_at, _propel, train, region=reg1)
             return
         if self.policy == "fair":
             self._q[flight.cls].append(flight)
@@ -270,6 +408,131 @@ class Link:
         # propagates for lat_ns then arrives at the next node.
         self._start_next()
         self.engine.schedule(self.lat_ns, _advance, flight)
+
+
+def _clock_ge(link: "Link", need: int, depth: int) -> bool:
+    """Channel-clock threshold query: True iff no not-yet-committed traffic
+    can arrive at ``link``'s input queue before tick ``need`` (module
+    docstring, "reservation ledgers").
+
+    Evaluated as a proof search rather than a value so that the common
+    cases stay cheap: a busy feeder whose ``_free_ps`` already clears the
+    threshold never recurses, the first refuting candidate exits the whole
+    query, and both outcomes memoize for the duration of the current
+    engine event (``_free_ps`` and the engine clock only advance, so an
+    earlier proof in the same event stays sound and an earlier refutation
+    stays conservative).  Two proof grades share the memo: ledger-only
+    proofs (``_geL``) are true statements about the deterministic future
+    schedule and any query may trust them; horizon-assisted proofs
+    (``_ge``) made inside a CU batch are commit justifications contingent
+    on same-source FIFO, so ledger-only (``_NO_HZ``) queries ignore them
+    (outside a batch the two grades coincide).  Cycles in the feeder
+    census refute conservatively via the ``_busy_e`` guard.
+    """
+    eng = link.engine
+    ep = eng.events_processed
+    if link._geL_e == ep and need <= link._geL_v:
+        return True
+    if not _NO_HZ and link._ge_e == ep and need <= link._ge_v:
+        return True
+    if link._lt_e == ep and need >= link._lt_v:
+        return False
+    if link._busy_e == ep:
+        return False                # feeder cycle: refuse, do not memoize
+    if need <= eng._now_ps:
+        # any future arrival happens at the tick of some event >= now
+        link._geL_e = ep
+        link._geL_v = need
+        return True
+    ok = False
+    if not _NO_HZ:
+        # region horizon: sound without looking at any neighbor (but blind
+        # to an in-progress CU batch's own future issues — see _NO_HZ)
+        global _HZ_TAG
+        tag = (id(eng), ep, eng._seq)
+        if _HZ_TAG != tag:
+            _HZ.clear()
+            _HZ_TAG = tag
+        key = (link.region, link._rguard_ps)
+        b = _HZ.get(key, 0)
+        if b == 0:
+            b = eng.horizon_ps(link.region, link._rguard_ps)
+            _HZ[key] = b if b is not None else _FAR
+        if b is None or need <= b:
+            ok = True
+    if not ok and depth > 0:
+        link._busy_e = ep
+        ok = _clock_ge_ledger(link, need, depth)
+        link._busy_e = -1
+        if ok and _NO_HZ:
+            if link._geL_e == ep:
+                if need > link._geL_v:
+                    link._geL_v = need
+            else:
+                link._geL_e = ep
+                link._geL_v = need
+            return True
+    if ok:
+        if link._ge_e == ep:
+            if need > link._ge_v:
+                link._ge_v = need
+        else:
+            link._ge_e = ep
+            link._ge_v = need
+    else:
+        if link._lt_e == ep:
+            if need < link._lt_v:
+                link._lt_v = need
+        else:
+            link._lt_e = ep
+            link._lt_v = need
+    return ok
+
+
+def _clock_ge_ledger(link: "Link", need: int, depth: int) -> bool:
+    """The ledger proof obligations for :func:`_clock_ge` (split out so the
+    memo fast path above inlines well).  Refuting feeders move to the front
+    of nothing — search order is outcome-affecting only through the
+    conservative cycle guard, so the census order stays fixed for
+    determinism."""
+    # known future arrivals: trains scheduled to commit here next
+    rh = link._resv
+    now = link.engine._now_ps
+    while rh and rh[0] < now:       # strictly past entries have fired
+        _heappop(rh)
+    if rh and rh[0] < need:
+        return False
+    # fresh injections at this route head (no source installed: only the
+    # region horizon — already refuted above — could have proven it)
+    if link._inj_fed:
+        src = link._inj_src
+        if src is None or not src.inj_ge(need, depth):
+            return False
+    # traffic still upstream must clear a feeder's server first: it cannot
+    # arrive here sooner than the feeder frees (or its own clock) plus the
+    # feeder's minimum transit.  The recursive call's memo fast path is
+    # hoisted inline — most probes resolve right here.
+    ep = link.engine.events_processed
+    no_hz = _NO_HZ
+    for f in link._feeders:
+        if f.fast:
+            t = need - f._xfer_lb
+            if f._free_ps >= t or t <= now:
+                continue
+            if f._geL_e == ep and t <= f._geL_v:
+                continue
+            if not no_hz and f._ge_e == ep and t <= f._ge_v:
+                continue
+            if (f._lt_e == ep and t >= f._lt_v) or f._busy_e == ep \
+                    or not _clock_ge(f, t, depth - 1):
+                return False
+        else:
+            # classic/fair feeder: its queued messages advance on events
+            # whose ticks the ledger cannot see; any pending event bounds
+            q = link.engine._queue
+            if q and q[0][0] < need:
+                return False
+    return True
 
 
 def _advance(flight: Flight) -> None:
@@ -327,7 +590,10 @@ def _propel(train: _Train) -> None:
                 # endpoint callback directly (no _deliver trampoline)
                 train.at_ps[0] = at
                 f.eta_ps = at
-                dreg = route[-1].region
+                last = route[-1]
+                dreg = last.region
+                if last._sink is not None:
+                    _heappush(last._sink, at)
                 _heappush(queue, (at, eng._seq, f.on_arrive, (f,), dreg))
                 eng._seq += 1
                 if rheaps is not None:
@@ -336,21 +602,29 @@ def _propel(train: _Train) -> None:
         link = route[hop]
         if at > now and link._sole_feed is not prev:
             if link.region != reg:
-                # region boundary: park so the target region's horizon can
-                # see this traffic coming.  (No tail registration: single
-                # lines are only joinable at injection, hop 0 — a parked
-                # 1-line train mid-route can never be merged into.)
-                train.hop = hop - 1
-                train.at_ps[0] = at
-                lreg = link.region
-                _heappush(queue, (at, eng._seq, _propel, (train,), lreg))
-                eng._seq += 1
-                if rheaps is not None:
-                    _heappush(rheaps[lreg], at)
-                return
+                if not link.led:
+                    # region boundary: park so the target region's horizon
+                    # can see this traffic coming.  (No tail registration:
+                    # single lines are only joinable at injection, hop 0 —
+                    # a parked 1-line train mid-route can never be merged
+                    # into.)
+                    train.hop = hop - 1
+                    train.at_ps[0] = at
+                    lreg = link.region
+                    _heappush(queue, (at, eng._seq, _propel, (train,), lreg))
+                    eng._seq += 1
+                    if rheaps is not None:
+                        _heappush(rheaps[lreg], at)
+                    return
+                # ledger: chain across the boundary when the channel clock
+                # allows; refresh the horizon for the new region
+                reg = link.region
+                bound = -1
             if bound < 0:
+                if _NO_HZ:
+                    bound = now      # mid-batch: horizon proofs are blind
                 # inline region horizon (Engine.horizon_ps)
-                if reg and rheaps is not None:
+                elif reg and rheaps is not None:
                     r = rheaps[reg]
                     g = rheaps[0]
                     b = r[0] if r else None
@@ -360,16 +634,25 @@ def _propel(train: _Train) -> None:
                         cap = queue[0][0] + link._rguard_ps
                         if b is None or cap < b:
                             b = cap
+                    bound = b if b is not None else _FAR
                 else:
-                    b = queue[0][0] if queue else None
-                bound = b if b is not None else (1 << 62)
-            if at >= bound and at - now > link._win_ps:
+                    bound = queue[0][0] if queue else _FAR
+            if at >= bound and at - now > link._win_ps and \
+                    (not link.led or not _clock_ge(link, at + 1,
+                                                   LEDGER_DEPTH)):
                 train.hop = hop - 1
                 train.at_ps[0] = at
-                _heappush(queue, (at, eng._seq, _propel, (train,), reg))
+                if hop == 1 and prev.coalesce:
+                    # parked right at injection: later same-route flights
+                    # may still ride along (the hop-0 join contract)
+                    prev._tails[id(route)] = train
+                lreg = link.region
+                if link.led:
+                    _heappush(link._resv, at)
+                _heappush(queue, (at, eng._seq, _propel, (train,), lreg))
                 eng._seq += 1
                 if rheaps is not None:
-                    _heappush(rheaps[reg], at)
+                    _heappush(rheaps[lreg], at)
                 return
         if not link.fast:
             train.hop = nroute
@@ -453,7 +736,9 @@ def _propel_multi(train: _Train) -> None:
             train.hop = nroute
             n = len(lines)
             inline0 = first <= now
-            dreg = route[-1].region     # deliveries affect the destination
+            last = route[-1]
+            sink = last._sink
+            dreg = last.region          # deliveries affect the destination
             for i in range(n):          # region's state, whatever region
                 g = lines[i]            # the chain started in
                 g.hop = hop
@@ -464,6 +749,8 @@ def _propel_multi(train: _Train) -> None:
                     g.eta_ps = now
                     g.on_arrive(g)
                 else:
+                    if sink is not None:
+                        _heappush(sink, at_ps[i])
                     sched(at_ps[i], _deliver, g, region=dreg)
             return
         link = route[hop]
@@ -471,23 +758,35 @@ def _propel_multi(train: _Train) -> None:
             # ahead of real time on a link with other (or unknown) feeders:
             # the usual lookahead rules apply
             if link.region != reg:
-                # region boundary: park so the target region's horizon can
-                # see this traffic coming (its tag makes it visible)
-                train.hop = hop - 1
-                if link.coalesce:
-                    route[hop - 1]._tails[id(route)] = train
-                sched(first, _propel, train, region=link.region)
-                return
+                if not link.led:
+                    # region boundary: park so the target region's horizon
+                    # can see this traffic coming (its tag makes it visible)
+                    train.hop = hop - 1
+                    if link.coalesce:
+                        route[hop - 1]._tails[id(route)] = train
+                    sched(first, _propel, train, region=link.region)
+                    return
+                # ledger: chain across the boundary when the channel clock
+                # allows; refresh the horizon for the new region
+                reg = link.region
+                bound = -1
             if bound < 0:
-                b = eng.horizon_ps(reg, link._rguard_ps)
-                bound = b if b is not None else (1 << 62)
-            if first >= bound and first - now > link._win_ps:
-                # neither provably safe (region horizon) nor within the
-                # optimistic window: park until arrival
+                if _NO_HZ:
+                    bound = now      # mid-batch: horizon proofs are blind
+                else:
+                    b = eng.horizon_ps(reg, link._rguard_ps)
+                    bound = b if b is not None else _FAR
+            if first >= bound and first - now > link._win_ps and \
+                    (not link.led or not _clock_ge(link, first + 1,
+                                                   LEDGER_DEPTH)):
+                # neither provably safe (region horizon / channel clock)
+                # nor within the optimistic window: park until arrival
                 train.hop = hop - 1
                 if link.coalesce:
                     route[hop - 1]._tails[id(route)] = train
-                sched(first, _propel, train, region=reg)
+                if link.led:
+                    _heappush(link._resv, first)
+                sched(first, _propel, train, region=link.region)
                 return
         if not link.fast:
             # classic/fair link: per-line arrivals (its round-robin pick
@@ -538,25 +837,32 @@ def _propel_multi(train: _Train) -> None:
         sole = link._sole_feed is route[hop - 1]
         if not sole:
             if bound < 0:
-                b = eng.horizon_ps(reg, link._rguard_ps)
-                bound = b if b is not None else (1 << 62)
+                if _NO_HZ:
+                    bound = now      # mid-batch: horizon proofs are blind
+                else:
+                    b = eng.horizon_ps(reg, link._rguard_ps)
+                    bound = b if b is not None else _FAR
             stop = n
             lim = now + link._win_ps
             if bound > lim:
                 lim = bound
             # the horizon alone is not enough for a multi-line train: its
             # OWN first delivery may wake a CU whose reinjected traffic
-            # arrives before the later lines' committed ticks (the horizon
-            # cannot see events this walk is about to schedule).  Cap the
-            # commit window at the first line's earliest possible delivery
-            # — no consequence of it can reach any link sooner.
+            # arrives before the later lines' committed ticks (neither the
+            # horizon nor the channel clock can see events this walk is
+            # about to schedule).  Cap the commit window at the first
+            # line's earliest possible delivery — no consequence of it can
+            # reach any link sooner.
             own = at_ps[0]
+            sz0 = lines[0].size
             for l in route[hop:]:
-                own += l._lat_ps
-            if lim > own:
-                lim = own
+                own += l._ser_ps(sz0) + l._lat_ps
+            led = link.led
             for i in range(1, n):
-                if at_ps[i] >= lim:
+                a = at_ps[i]
+                if a >= own or (a >= lim and not
+                                (led and _clock_ge(link, a + 1,
+                                                   LEDGER_DEPTH))):
                     stop = i
                     break
             if stop < n:
@@ -567,6 +873,8 @@ def _propel_multi(train: _Train) -> None:
                 del at_ps[stop:]
                 if link.coalesce:
                     route[hop - 1]._tails[id(route)] = rest
+                if link.led:
+                    _heappush(link._resv, rest.at_ps[0])
                 sched(rest.at_ps[0], _propel, rest, region=reg)
                 n = stop
         if link.coalesce:
@@ -589,14 +897,20 @@ def _propel_multi(train: _Train) -> None:
             at_ps[i] = link._service(lines[i].size, at_ps[i])
         train.hop = hop
         nxt = hop + 1
-        if n > 1 and nxt < nroute and route[nxt]._sole_feed is not link:
+        if n > 1 and nxt < nroute and route[nxt]._sole_feed is not link \
+                and not route[nxt].led:
             # multi-line trains advance one hop per event on contended
             # links: a later line's committed arrival may exceed the first
             # line's delivery time, and that delivery's callback may inject
             # competing traffic.  Sole-fed links inherit FIFO order from
             # this link, so the train may chain straight through them.
+            # (With the ledger, the next iteration's commit window — which
+            # is capped by the train's own first delivery — makes the same
+            # call per line instead of parking wholesale.)
             if link.coalesce:
                 link._tails[id(route)] = train
+            if route[nxt].led:
+                _heappush(route[nxt]._resv, at_ps[0])
             sched(at_ps[0], _propel, train, region=route[nxt].region)
             return
         hop += 1
@@ -617,10 +931,15 @@ class Fabric:
 
     def __init__(self, engine: Engine, default_policy: str = "fifo",
                  mode: str = MODE_COALESCE,
-                 coalesce_window_ns: Optional[float] = None):
+                 coalesce_window_ns: Optional[float] = None,
+                 ledger: bool = True, min_msg_bytes: int = 0):
         self.engine = engine
         self.default_policy = default_policy
         self.mode = mode
+        self.ledger = ledger and mode != MODE_CLASSIC
+        # smallest wire message the workload can put on any link (0 = no
+        # promise): tightens the ledger's per-feeder transit lower bound
+        self.min_msg_bytes = min_msg_bytes
         self.coalesce_window_ns = (self.DEFAULT_WINDOW_NS
                                    if coalesce_window_ns is None
                                    else coalesce_window_ns)
@@ -628,6 +947,7 @@ class Fabric:
         self.node_ids: Dict[str, int] = {}
         # adjacency: node id -> list of (neighbor id, Link)
         self.adj: List[List[Tuple[int, Link]]] = []
+        self._census_dirty = False      # any feeder/head census recorded?
         self._route_cache: Dict[Tuple[int, int], List[Link]] = {}
         self._via_cache: Dict[Tuple[int, ...], List[Link]] = {}
         self._bfs_trees: Dict[int, list] = {}
@@ -653,13 +973,35 @@ class Fabric:
                     name or f"{self.node_names[u]}->{self.node_names[v]}",
                     bandwidth_GBps, latency_ns,
                     policy or self.default_policy, mode=self.mode,
-                    coalesce_window_ns=self.coalesce_window_ns, region=region)
+                    coalesce_window_ns=self.coalesce_window_ns, region=region,
+                    ledger=self.ledger, min_msg_bytes=self.min_msg_bytes)
         self.adj[u].append((v, link))
         self.links.append(link)
         self._route_cache.clear()
         self._via_cache.clear()
         self._bfs_trees.clear()
+        # the feeder/injection census was drawn from routes that no longer
+        # exist: a link added after routes were registered must not keep
+        # sole-feeder or ledger conclusions from the dropped route space.
+        # (Pristine builds — to_cluster wiring hundreds of links before any
+        # route is asked for — skip the sweep.)
+        if self._census_dirty:
+            self.reset_census()
         return link
+
+    def reset_census(self) -> None:
+        """Forget every feeder/injection conclusion drawn from registered
+        routes (they re-form as routes are re-registered).  Called on
+        topology mutation; injection sources and endpoint sinks are wiring
+        metadata installed by the owner (e.g. ``Cluster.warm_routes``) and
+        must be re-installed by it after re-warming."""
+        self._census_dirty = False
+        for l in self.links:
+            l._sole_feed = None
+            l._feeders = []
+            l._inj_fed = False
+            l._inj_src = None
+            l._sink = None
 
     def add_bidi(self, u: int, v: int, bandwidth_GBps: float, latency_ns: float,
                  policy: Optional[str] = None,
@@ -671,6 +1013,21 @@ class Fabric:
 
     # -------------------------------------------------------------- routing
     def route(self, src: int, dst: int) -> List[Link]:
+        path = self._route_seg(src, dst)
+        if path:
+            self._mark_head(path[0])
+        return path
+
+    def _route_seg(self, src: int, dst: int) -> List[Link]:
+        """Shortest path *without* marking the first link injection-fed.
+
+        ``route_via`` stitches these segments together: a segment's first
+        link is an interior hop of the concatenated route, fed by the
+        previous segment's last link — marking it injection-fed there used
+        to break the sole-feeder corridor at every waypoint (e.g. the
+        ``io -> switch`` hop of every cross-GPU route), parking chains that
+        are provably FIFO-safe.  Only the *public* entry points mark heads.
+        """
         key = (src, dst)
         hit = self._route_cache.get(key)
         if hit is not None:
@@ -694,30 +1051,43 @@ class Fabric:
         out: List[Link] = []
         for a, b in zip(waypoints, waypoints[1:]):
             if a != b:
-                out.extend(self.route(a, b))
+                out.extend(self._route_seg(a, b))
         self._via_cache[key] = out
         self._register_feeders(out)
+        if out:
+            self._mark_head(out[0])
         return out
 
+    def _mark_head(self, link: Link) -> None:
+        """Mark a link as the head of a publicly-routed path: messages can
+        be injected onto it, so its feeder order is never sole."""
+        if link._sole_feed is not False:
+            link._sole_feed = False
+        link._inj_fed = True
+        self._census_dirty = True
+
     def _register_feeders(self, path: List[Link]) -> None:
-        """Record each link's upstream feeder along a (cached) route.
+        """Record each link's upstream feeders along a (cached) route.
 
         A link fed by exactly one predecessor across every registered route
         inherits that predecessor's FIFO order, letting the fast path chain
-        admissions through it without a lookahead check.  The first link of
-        a route is injection-fed, hence always ambiguous.
+        admissions through it without a lookahead check; the full feeder
+        list is the reservation ledger's census (channel clocks take the
+        min over every registered way traffic can reach a link).
         """
         if not path:
             return
-        if path[0]._sole_feed is not False:
-            path[0]._sole_feed = False
+        self._census_dirty = True
         prev = path[0]
         for link in path[1:]:
-            cur = link._sole_feed
-            if cur is None:
-                link._sole_feed = prev
-            elif cur is not prev:
-                link._sole_feed = False
+            feeders = link._feeders
+            if prev not in feeders:
+                feeders.append(prev)
+                cur = link._sole_feed
+                if cur is None and not link._inj_fed:
+                    link._sole_feed = prev
+                elif cur is not prev:
+                    link._sole_feed = False
             prev = link
         return
 
@@ -763,12 +1133,17 @@ class Fabric:
              eager: bool = False) -> None:
         """Inject a message onto a precomputed route."""
         if not route:
-            # src == dst: deliver immediately (still via the event queue so
-            # causality is preserved)
+            # src == dst: deliver at *now*.  Eager (time-stamp-driven)
+            # callbacks run inline — they read ``eta_ps`` and only schedule
+            # absolute-time effects; stateful ones still get an event so
+            # causality is preserved.
             f = Flight(size, cls, route, on_arrive, payload, eager)
             f.hop = 0
             f.eta_ps = self.engine._now_ps
-            self.engine.schedule(0.0, on_arrive, f)
+            if eager:
+                on_arrive(f)
+            else:
+                self.engine.schedule(0.0, on_arrive, f)
             return
         flight = Flight(size, cls, route, on_arrive, payload, eager)
         route[0].enqueue(flight)
@@ -791,21 +1166,34 @@ class Fabric:
         if not route:
             f = Flight(size, cls, route, on_arrive, payload, eager)
             f.hop = 0
+            # the arrival tick is final either way: stamp it here — the
+            # scheduled path used to leave ``eta_ps`` at -1 (the ``_deliver``
+            # trampoline only stamps non-empty routes)
+            f.eta_ps = at_ps
             if eager:
-                f.eta_ps = at_ps
                 on_arrive(f)
             else:
-                self.engine.schedule_abs_ps(at_ps, _deliver, f)
+                self.engine.schedule_abs_ps(at_ps, on_arrive, f)
             return
         flight = Flight(size, cls, route, on_arrive, payload, eager)
         self.send_flight_at(flight, at_ps)
 
-    def send_flight_at(self, flight: Flight, at_ps: int) -> None:
+    def send_flight_at(self, flight: Flight, at_ps: int,
+                       chain: bool = False) -> None:
         """``send_at`` for a caller-prepared flight (zero allocation).
 
         The flight's ``route`` (non-empty), ``size``, ``cls``, ``eager``,
         ``on_arrive`` and ``hop == 0`` must be set; the cluster's request
         path re-arms one object per round trip through here.
+
+        ``chain=True`` walks the route inline (inside the calling event)
+        instead of scheduling the first hop event, letting the reservation
+        ledger carry the flight as far as its channel clocks allow — zero
+        heap events for a fully-chained leg.  Only valid under the ledger
+        discipline: successive injections per first link are monotone in
+        ``at_ps`` and share the injector's route tree (so later same-source
+        traffic stays FIFO-behind on every shared link), and every other
+        injector is fenced by an installed :class:`InjectionSource`.
         """
         eng = self.engine
         now = eng._now_ps
@@ -849,23 +1237,43 @@ class Fabric:
                 # foreign flight serviced in between.  Ride along.
                 tail.lines.append(flight)
                 tail.at_ps.append(next_at)
+                if len(route) == 1 and not flight.eager \
+                        and first._sink is not None:
+                    _heappush(first._sink, next_at)
                 return
             train = _Train(route, 0)
             train.lines.append(flight)
             train.at_ps.append(next_at)
+            if chain and first.led:
+                # walk inline: the ledger decides how far; parks register
+                # their own tails/reservations, deliveries their own sinks
+                _propel(train)
+                return
             first._tails[key] = train
         else:
             train = _Train(route, 0)
             train.lines.append(flight)
             train.at_ps.append(next_at)
-        reg1 = route[1].region if len(route) > 1 else route[-1].region
+            if chain and first.led:
+                _propel(train)
+                return
+        if len(route) > 1:
+            nlink = route[1]
+            if nlink.led:
+                _heappush(nlink._resv, next_at)
+            reg1 = nlink.region
+        else:
+            last = route[-1]
+            if last._sink is not None and not flight.eager:
+                _heappush(last._sink, next_at)
+            reg1 = last.region
         _heappush(eng._queue, (next_at, eng._seq, _propel, (train,), reg1))
         eng._seq += 1
         if eng._regioned:
             _heappush(eng._rheaps[reg1], next_at)
 
     def inject_train(self, route: List[Link], flights: List[Flight],
-                     ats: List[int]) -> None:
+                     ats: List[int], chain: bool = False) -> None:
         """Inject a pre-batched request train (bulk wavefront emission).
 
         ``flights`` are caller-prepared (route/size/cls/eager/on_arrive
@@ -911,11 +1319,25 @@ class Fabric:
             lines.append(f)
             ticks.append(service(f.size, ats[i]))
         if new:
+            if chain and first.led:
+                # walk the whole batch inline (see send_flight_at)
+                _propel(train)
+                return
             if first.coalesce:
                 first._tails[id(route)] = train
-            eng.schedule_abs_ps(
-                ticks[0], _propel, train,
-                region=route[1].region if len(route) > 1 else route[-1].region)
+            if len(route) > 1:
+                nlink = route[1]
+                if nlink.led:
+                    _heappush(nlink._resv, ticks[0])
+                reg1 = nlink.region
+            else:
+                last = route[-1]
+                if last._sink is not None:
+                    for i in range(len(flights)):
+                        if not flights[i].eager:
+                            _heappush(last._sink, ticks[i])
+                reg1 = last.region
+            eng.schedule_abs_ps(ticks[0], _propel, train, region=reg1)
 
     # ------------------------------------------------------------------ stats
     @property
@@ -926,6 +1348,28 @@ class Fabric:
         the un-coalesced (``MODE_EXACT``) schedule.
         """
         return sum(l.order_violations for l in self.links)
+
+    def set_injection_source(self, node: int, src: InjectionSource) -> None:
+        """Attach an injection-bound provider to every registered route head
+        leaving ``node`` (see :class:`InjectionSource`).  Heads without a
+        source fall back to the region horizon — sound for any injector that
+        only acts from engine events."""
+        for _, link in self.adj[node]:
+            link._inj_src = src
+
+    def inbound_map(self) -> Dict[int, List[Link]]:
+        """node id -> inbound links, in one adjacency pass."""
+        out: Dict[int, List[Link]] = {}
+        for nbrs in self.adj:
+            for v, link in nbrs:
+                out.setdefault(v, []).append(link)
+        return out
+
+    def clock_ge_ps(self, link: Link, need_ps: int,
+                    depth: int = LEDGER_DEPTH) -> bool:
+        """Channel-clock threshold query (tests/tools): True iff no
+        not-yet-committed traffic can reach ``link`` before ``need_ps``."""
+        return _clock_ge(link, need_ps, depth)
 
     def set_region_guard(self, region: int, guard_ns: float) -> None:
         """Set a region's entry transit: a lower bound on the time any

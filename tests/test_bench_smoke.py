@@ -47,3 +47,30 @@ def test_tracked_benchmark_matches_committed_baseline():
     assert cluster.fabric.order_violations == 0
     assert r.events <= ref["events"] * 1.02, \
         f"event count regressed: {r.events} vs baseline {ref['events']}"
+
+
+@pytest.mark.slow
+def test_tracked_benchmark_ledger_off_row():
+    """The ledger-off path stays gated too: same simulated time, and the
+    ledger must keep strictly beating it on heap events."""
+    if not os.path.exists(BASELINE):
+        pytest.skip("no committed BENCH_engine.json baseline")
+    with open(BASELINE) as f:
+        base = json.load(f)
+    ref = base["modes"].get("coalesce_ledger_off")
+    if ref is None:
+        pytest.skip("baseline predates the ledger rows")
+    wl = base["workload"]
+
+    cluster = Cluster(wl["nranks"], noc=NocConfig(fabric_ledger="off"))
+    r = simulate_collective(
+        C.ring_all_reduce(wl["nranks"], wl["size_bytes"],
+                          wl["nworkgroups"], wl["protocol"]),
+        cluster=cluster)
+
+    assert r.time_ns == ref["time_ns"], \
+        "ledger off/on must simulate the identical schedule"
+    assert cluster.fabric.order_violations == 0
+    assert r.events <= ref["events"] * 1.02
+    assert base["modes"]["coalesce"]["events"] < ref["events"], \
+        "committed baseline must show the ledger reducing events"

@@ -81,6 +81,60 @@ def test_hd_all_reduce_always_correct(n, size, seed):
     check_program(C.halving_doubling_all_reduce(n, size, 2), seed=seed)
 
 
+# ------------------------------------------------------- reservation ledger
+@FAST
+@given(st.integers(2, 5), st.lists(st.tuples(st.integers(0, 4000),
+                                             st.integers(32, 512)),
+                                   min_size=1, max_size=24),
+       st.booleans())
+def test_ledger_clock_monotone_and_timing_neutral(nhops, sends, star):
+    """Channel clocks on random line/star fabrics: the threshold query is
+    monotone in ``need``, chaining never reorders FIFO service
+    (``order_violations == 0``), and delivery times are bit-identical with
+    the ledger on or off."""
+    from repro.core.network.fabric import DATA, Fabric
+
+    def run(ledger):
+        e = Engine()
+        fab = Fabric(e, ledger=ledger, min_msg_bytes=32)
+        if star:
+            hub = fab.add_node("hub")
+            srcs = [fab.add_node(f"s{i}") for i in range(nhops)]
+            dst = fab.add_node("d")
+            for sn in srcs:
+                fab.add_link(sn, hub, 2.0, 30.0)
+            fab.add_link(hub, dst, 2.0, 30.0)
+            routes = [fab.route(sn, dst) for sn in srcs]
+        else:
+            nodes = [fab.add_node(f"n{i}") for i in range(nhops + 1)]
+            for u, v in zip(nodes, nodes[1:]):
+                fab.add_link(u, v, 2.0, 30.0)
+            routes = [fab.route(nodes[0], nodes[-1])]
+        got = []
+        # per-head non-decreasing injection ticks (the send_at contract)
+        t_by_head = {}
+        for i, (dt, size) in enumerate(sends):
+            ri = i % len(routes)
+            route = routes[ri]
+            head = id(route[0])
+            at = max(t_by_head.get(head, 0), dt * 1000)
+            t_by_head[head] = at
+            fab.send_at(route, size, DATA,
+                        lambda f, ri=ri: got.append((f.eta_ps, ri)),
+                        at_ps=at)
+            if ledger and route[0].led:
+                # monotone threshold: a proof at a larger need implies
+                # every smaller one
+                probe = e.now_ps + 50_000
+                if fab.clock_ge_ps(route[-1], probe):
+                    assert fab.clock_ge_ps(route[-1], probe // 2 + 1)
+        e.run()
+        assert fab.order_violations == 0
+        return got
+
+    assert run(True) == run(False)
+
+
 # -------------------------------------------------------------- protocols
 @FAST
 @given(st.floats(10, 10_000), st.floats(1, 2000))
