@@ -5,7 +5,7 @@ same collective.
 Run:  PYTHONPATH=src python examples/infrastructure_explorer.py
 """
 
-from repro.core.backends import simulate
+from repro.core.backends import FineConfig, simulate
 from repro.core.cluster import NocConfig
 from repro.core.collectives import ring_all_reduce
 from repro.core.infragraph import (clos_fat_tree_fabric, single_tier_fabric,
@@ -38,7 +38,8 @@ small = NocConfig(mesh_x=2, mesh_y=2, cus_per_router=2, mem_channels=4,
 small_prog = lambda: ring_all_reduce(4, 64 << 10, 1, "put")
 for name, infra in [("single-tier", single_tier_fabric(4)),
                     ("ring", ring_fabric(4))]:
-    r = simulate(small_prog(), infra, fidelity="fine", noc=small)
+    r = simulate(small_prog(), infra, fidelity="fine",
+                 config=FineConfig(noc=small))
     print(f"  {name:12s}: {r.time_ns/1e3:9.1f} us  {r.events} events")
 
 # JSON round trip = the community-exchange story

@@ -1,7 +1,9 @@
 """Quickstart: the two halves of the repo in one script.
 
-1. Simulate a custom collective algorithm at Load-Store granularity
-   (the ASTRA-sim 3.0 reproduction).
+1. Simulate a custom collective algorithm AND a whole training-step
+   execution trace at every fidelity tier (the ASTRA-sim 3.0
+   reproduction): one workload-native entry point,
+   ``simulate(workload, infra, fidelity=..., config=...)``.
 2. Train a reduced LM for a few steps with the JAX framework and predict
    its production step time through the simulator's roofline lens.
 
@@ -13,8 +15,10 @@ import jax.numpy as jnp
 
 # --- 1. the simulator ------------------------------------------------------
 # one entry point, three fidelity tiers, one InfraGraph infrastructure:
-#   simulate(program, infra, fidelity="fine" | "coarse" | "analytic")
-from repro.core.backends import simulate
+#   simulate(workload, infra, fidelity="fine" | "coarse" | "analytic")
+# where the workload is an MSCCL++ Program or a Chakra-style ExecutionTrace
+from repro.core.backends import FineConfig, simulate
+from repro.core.chakra import ExecutionTrace
 from repro.core.collectives import direct_reduce_scatter
 from repro.core.infragraph import single_tier_fabric
 from repro.core.verify import check_program
@@ -28,6 +32,22 @@ for fidelity in ("analytic", "coarse", "fine"):
     print(f"[sim:{fidelity:8s}] get-based RS on 4 GPUs: "
           f"{res.time_ns/1e3:9.1f} us, bus bw {res.bus_GBps:6.2f} GB/s, "
           f"{res.events} events")
+
+# a multi-collective workload: one training step as a per-rank DAG of
+# compute and communication kernels (paper §2.1/§4.3 Chakra flow) —
+# the same trace runs at every tier; tier knobs ride a typed config
+trace = ExecutionTrace(num_ranks=4)
+fwd = {r: trace.comp(r, f"fwd.r{r}", flops=2e8, bytes_moved=1 << 20)
+       for r in range(4)}
+grads = trace.coll(0, "all_reduce", 1 << 18, "ring",
+                   deps_by_rank={r: [fwd[r]] for r in range(4)})
+for r in range(4):
+    trace.comp(r, f"opt.r{r}", flops=5e7, deps=[grads[r]])
+for fidelity in ("analytic", "coarse", "fine"):
+    cfg = FineConfig(coll_workgroups=2) if fidelity == "fine" else None
+    res = simulate(trace, infra, fidelity=fidelity, config=cfg)
+    print(f"[trace:{fidelity:8s}] 1 training step on 4 GPUs: "
+          f"{res.time_ns/1e3:9.1f} us, {res.events} events")
 
 # --- 2. the framework -------------------------------------------------------
 from repro.configs import ShapeConfig, get, reduced

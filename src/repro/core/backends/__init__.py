@@ -1,33 +1,60 @@
-"""Pluggable simulation backends: one program, one infrastructure, three
-fidelity tiers (paper §4).
+"""Pluggable simulation backends: one *workload*, one infrastructure, three
+fidelity tiers (paper §2.1, §4).
 
-    from repro.core.backends import simulate
+A workload is either a single MSCCL++ :class:`~repro.core.mscclpp.Program`
+or a Chakra-style :class:`~repro.core.chakra.ExecutionTrace` (per-rank DAGs
+of compute and communication kernels — the unit real DSE studies sweep).
+Both run through one typed entry point, at any tier:
+
+    from repro.core.backends import simulate, FineConfig
+    from repro.core.chakra import ExecutionTrace
     from repro.core.infragraph import single_tier_fabric
-    from repro.core.collectives import ring_all_reduce
 
-    prog = ring_all_reduce(8, 1 << 20, 2, "put")
+    et = ExecutionTrace(num_ranks=8)
+    fwd = {r: et.comp(r, f"fwd.r{r}", flops=2e8) for r in range(8)}
+    et.coll(0, "all_reduce", 1 << 20, "ring",
+            deps_by_rank={r: [fwd[r]] for r in range(8)})
+
     infra = single_tier_fabric(8)
-    fine = simulate(prog, infra, fidelity="fine")       # Load-Store Cluster
-    coarse = simulate(prog, infra, fidelity="coarse")   # chunk alpha-beta
-    quick = simulate(prog, infra, fidelity="analytic")  # closed form
+    fine = simulate(et, infra, fidelity="fine")       # Load-Store Cluster
+    coarse = simulate(et, infra, fidelity="coarse")   # chunk alpha-beta
+    quick = simulate(et, infra, fidelity="analytic")  # contention-free
 
-The same MSCCL++ program and the same InfraGraph description drive every
-tier; results come back as a uniform :class:`CollectiveResult`, so studies
-can trade fidelity for speed without touching experiment code.  The
-program-interpretation semantics live in exactly one place
-(:mod:`.interpreter`), shared by the coarse and analytic tiers.
+Results derive from one :class:`SimResult` base (``time_ns``, ``events``,
+``wallclock_s``, ``fidelity``, ``per_rank_done_ns``): programs return
+:class:`CollectiveResult`, traces return
+:class:`~repro.core.chakra.TraceResult` — sweep scripts handle both
+uniformly.  Program-interpretation semantics live in exactly one place
+(:mod:`.interpreter`), shared by the coarse and analytic tiers; trace
+dependency scheduling lives in exactly one place (:mod:`.workload`),
+shared by all three.
+
+Backend construction is configured with a typed per-tier dataclass
+(:class:`FineConfig` / :class:`CoarseConfig` / :class:`AnalyticConfig`)
+passed as ``config=``; per-run arguments (``until_ns``, ``rank_delay_ns``,
+``unroll``, ``cluster``) stay keywords.  Unknown keywords raise
+immediately with the valid-key list.
+
+Migration note (deprecated flat kwargs)
+---------------------------------------
+``simulate(prog, infra, noc=..., link_GBps=...)`` — backend-construction
+knobs as flat keywords — still works via a deprecation shim that splits
+them into the tier's config dataclass (and warns).  New code should write
+``simulate(prog, infra, config=FineConfig(noc=...))``.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Type
+from typing import Dict, Optional, Union
 
-from ..mscclpp import Program
 from .analytic import AnalyticBackend
-from .base import CollectiveResult, SimBackend, payload_bytes
+from .base import CollectiveResult, SimBackend, SimResult, payload_bytes
 from .coarse import CoarseBackend
+from .config import (CONFIGS, PROGRAM_RUN_KW, TRACE_RUN_KW, AnalyticConfig,
+                     CoarseConfig, FineConfig, SimConfig, split_legacy_kwargs)
 from .fine import FineBackend
 from .interpreter import AnalyticTransport, ProgramInterpreter
+from .workload import DagScheduler, is_trace, run_trace
 
 #: fidelity name -> backend class
 FIDELITIES: Dict[str, type] = {
@@ -36,44 +63,81 @@ FIDELITIES: Dict[str, type] = {
     "analytic": AnalyticBackend,
 }
 
-#: constructor keyword names accepted per backend (everything else is
-#: forwarded to ``backend.run``)
-_CTOR_KW = {
-    "fine": ("noc", "gpu_config", "topology"),
-    "coarse": ("topo", "link_GBps", "link_lat_ns", "local_GBps",
-               "reduce_GBps"),
-    "analytic": ("link_GBps", "link_lat_ns", "local_GBps", "reduce_GBps"),
-}
 
+def make_backend(fidelity: str = "fine", infra=None,
+                 config: Optional[SimConfig] = None, **kwargs) -> SimBackend:
+    """Construct a backend for a fidelity tier from an Infrastructure.
 
-def make_backend(fidelity: str = "fine", infra=None, **kwargs) -> SimBackend:
-    """Construct a backend for a fidelity tier from an Infrastructure."""
-    try:
-        cls = FIDELITIES[fidelity]
-    except KeyError:
-        raise ValueError(f"unknown fidelity {fidelity!r}; "
-                         f"choose from {sorted(FIDELITIES)}") from None
-    return cls(infra=infra, **kwargs)
-
-
-def simulate(program: Program, infra=None, fidelity: str = "fine",
-             **kwargs) -> CollectiveResult:
-    """Simulate ``program`` over ``infra`` at the chosen fidelity tier.
-
-    ``infra`` is an InfraGraph :class:`Infrastructure` (or None for a
-    default single-switch scale-up fabric sized to the program).  Keyword
-    arguments are split between backend construction (e.g. ``noc=`` for
-    fine, ``link_GBps=`` for coarse/analytic) and the run itself (e.g.
-    ``rank_delay_ns=``, ``until_ns=``, ``unroll=`` for fine).
+    ``config`` is a typed tier config; flat ``kwargs`` (legacy) are config
+    dataclass fields and raise on anything unknown.
     """
-    ctor_names = _CTOR_KW[fidelity] if fidelity in _CTOR_KW else ()
-    ctor = {k: kwargs.pop(k) for k in list(kwargs) if k in ctor_names}
-    backend = make_backend(fidelity, infra, **ctor)
-    return backend.run(program, **kwargs)
+    _check_fidelity(fidelity)
+    if config is None:
+        config, extra = split_legacy_kwargs(fidelity, kwargs, frozenset(),
+                                            entry="make_backend()")
+    elif kwargs:
+        raise TypeError(f"make_backend() got both config= and flat kwargs "
+                        f"{sorted(kwargs)}; pass one or the other")
+    return config.make_backend(infra)
+
+
+def _check_fidelity(fidelity: str) -> None:
+    if fidelity not in FIDELITIES:
+        raise ValueError(f"unknown fidelity {fidelity!r}; "
+                         f"choose from {sorted(FIDELITIES)}")
+
+
+def simulate(workload, infra=None, fidelity: Optional[str] = None,
+             config: Optional[SimConfig] = None, **kwargs) -> SimResult:
+    """Simulate ``workload`` over ``infra`` at the chosen fidelity tier.
+
+    ``workload`` is an MSCCL++ :class:`~repro.core.mscclpp.Program` (one
+    collective) or an :class:`~repro.core.chakra.ExecutionTrace` (a
+    multi-kernel DAG).  ``infra`` is an InfraGraph
+    :class:`~repro.core.infragraph.graph.Infrastructure`, or None for a
+    default single-switch scale-up fabric sized to the workload.
+
+    The tier comes from ``fidelity=`` ("fine" | "coarse" | "analytic"),
+    or from ``config``'s tier when only ``config=`` is given (default:
+    fine).  Remaining keywords are per-run arguments — ``until_ns``, plus
+    ``rank_delay_ns`` / ``unroll`` / ``cluster`` for programs; anything
+    else raises with the valid-key list (legacy backend-construction
+    keywords are split into the tier config by a deprecation shim).
+    """
+    if config is not None:
+        cfg_fid = getattr(config, "fidelity", None)
+        if fidelity is None:
+            fidelity = cfg_fid
+        elif cfg_fid is not None and cfg_fid != fidelity:
+            raise ValueError(
+                f"fidelity={fidelity!r} conflicts with "
+                f"config.fidelity={cfg_fid!r}")
+    if fidelity is None:
+        fidelity = "fine"
+    _check_fidelity(fidelity)
+    trace = is_trace(workload)
+    run_keys = TRACE_RUN_KW if trace else PROGRAM_RUN_KW[fidelity]
+    if config is None:
+        config, run_kw = split_legacy_kwargs(fidelity, kwargs, run_keys)
+    else:
+        unknown = set(kwargs) - run_keys
+        if unknown:
+            raise TypeError(
+                f"simulate() got unknown keyword(s) {sorted(unknown)} for "
+                f"a {'trace' if trace else 'program'} run at fidelity "
+                f"{fidelity!r}; valid run keys: {sorted(run_keys)}")
+        run_kw = kwargs
+    backend = config.make_backend(infra)
+    if trace:
+        workload.reset_runtime()
+        return run_trace(workload, backend, config, **run_kw)
+    return backend.run(workload, **run_kw)
 
 
 __all__ = [
-    "AnalyticBackend", "AnalyticTransport", "CoarseBackend",
-    "CollectiveResult", "FIDELITIES", "FineBackend", "ProgramInterpreter",
-    "SimBackend", "make_backend", "payload_bytes", "simulate",
+    "AnalyticBackend", "AnalyticConfig", "AnalyticTransport", "CoarseBackend",
+    "CoarseConfig", "CollectiveResult", "DagScheduler", "FIDELITIES",
+    "FineBackend", "FineConfig", "ProgramInterpreter", "SimBackend",
+    "SimConfig", "SimResult", "is_trace", "make_backend", "payload_bytes",
+    "run_trace", "simulate",
 ]

@@ -1,10 +1,12 @@
-"""Backend seam shared types (paper §4: one program, many fidelities).
+"""Backend seam shared types (paper §4: one workload, many fidelities).
 
-Every fidelity tier consumes the same MSCCL++ :class:`~repro.core.mscclpp.
-Program` and the same InfraGraph :class:`~repro.core.infragraph.graph.
-Infrastructure`, and produces the same :class:`CollectiveResult` — so
-studies can dial fidelity up and down without touching the experiment
-code.
+Every fidelity tier consumes the same workload — an MSCCL++
+:class:`~repro.core.mscclpp.Program` or a Chakra-style
+:class:`~repro.core.chakra.ExecutionTrace` — over the same InfraGraph
+:class:`~repro.core.infragraph.graph.Infrastructure`, and produces a
+result deriving from one :class:`SimResult` base, so studies can dial
+fidelity up and down (and swap single collectives for whole training
+steps) without touching the experiment code.
 """
 
 from __future__ import annotations
@@ -16,18 +18,28 @@ from ..mscclpp import Program
 
 
 @dataclass
-class CollectiveResult:
-    """Uniform result record across all fidelity tiers."""
-    program: str
-    collective: str
-    nranks: int
-    time_ns: float
-    moved_bytes: int               # payload bytes defined by the collective
-    events: int
-    wallclock_s: float
-    requests: int = 0
-    per_rank_done_ns: Optional[List[float]] = None
+class SimResult:
+    """Fields shared by every simulation result, at every tier.
+
+    Sweep scripts can treat :class:`CollectiveResult` (a single collective
+    program) and :class:`~repro.core.chakra.TraceResult` (a multi-kernel
+    execution trace) uniformly through this base.
+    """
+    time_ns: float = 0.0
+    events: int = 0
+    wallclock_s: float = 0.0
     fidelity: str = "fine"
+    per_rank_done_ns: Optional[List[float]] = None
+
+
+@dataclass
+class CollectiveResult(SimResult):
+    """Result of one collective Program (uniform across fidelity tiers)."""
+    program: str = ""
+    collective: str = ""
+    nranks: int = 0
+    moved_bytes: int = 0           # payload bytes defined by the collective
+    requests: int = 0
 
     @property
     def bus_GBps(self) -> float:
@@ -49,7 +61,8 @@ class SimBackend(Protocol):
     :class:`~repro.core.backends.coarse.CoarseBackend` (chunk granularity
     on the alpha-beta SimpleNetwork), and
     :class:`~repro.core.backends.analytic.AnalyticBackend` (closed-form
-    estimators, no event simulation).
+    estimators, no event simulation).  ExecutionTraces run over these same
+    backends through :mod:`repro.core.backends.workload`.
     """
 
     fidelity: str

@@ -1,0 +1,176 @@
+"""Typed per-tier experiment configs (the ``SimConfig`` seam).
+
+One dataclass per fidelity tier holds everything needed to *construct* that
+tier's backend — plus the trace-execution knobs the workload seam consumes
+(how collective nodes lower, how compute nodes cost).  ``simulate`` takes
+one of these via ``config=``:
+
+    simulate(workload, infra, config=FineConfig(noc=NocConfig(...)))
+    simulate(workload, infra, fidelity="coarse",
+             config=CoarseConfig(link_GBps=400.0))
+
+Unknown keys fail at construction time with Python's normal dataclass
+``TypeError`` — no more kwargs silently falling through to ``backend.run``
+and exploding there.  The legacy flat-kwargs spelling
+(``simulate(prog, infra, noc=...)``) still works through a deprecation
+shim: :func:`split_legacy_kwargs` partitions the flat keywords into config
+fields and per-run arguments and rejects anything else immediately, naming
+the valid keys.
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, fields
+from typing import Dict, FrozenSet, Optional, Protocol, runtime_checkable
+
+from ..cluster import NocConfig
+from ..gpu_model import GpuConfig
+from ..network.simple import SimpleTopology
+
+
+@runtime_checkable
+class SimConfig(Protocol):
+    """What ``simulate`` needs from a tier config: its fidelity name and a
+    backend factory.  The three dataclasses below implement it; studies can
+    supply their own (e.g. a frozen sweep-point config) as long as
+    ``make_backend`` returns an object satisfying
+    :class:`~repro.core.backends.base.SimBackend`."""
+
+    fidelity: str
+
+    def make_backend(self, infra=None):
+        ...
+
+
+@dataclass
+class FineConfig:
+    """Load-Store tier: detailed Cluster construction + trace lowering."""
+
+    # backend construction
+    noc: Optional[NocConfig] = None
+    gpu_config: Optional[GpuConfig] = None
+    topology: str = "switch"
+    bulk_emission: Optional[str] = None
+    # trace execution (how ExecutionTrace nodes lower onto the Cluster)
+    comp_workgroups: int = 8
+    coll_workgroups: int = 4
+    flops_per_cu_cycle: float = 2048.0
+    protocol: str = "put"
+
+    fidelity = "fine"
+
+    def make_backend(self, infra=None):
+        from .fine import FineBackend
+        return FineBackend(infra=infra, noc=self.noc,
+                           gpu_config=self.gpu_config, topology=self.topology,
+                           bulk_emission=self.bulk_emission)
+
+
+@dataclass
+class CoarseConfig:
+    """Chunk tier: alpha-beta SimpleNetwork + roofline compute nodes."""
+
+    # backend construction
+    topo: Optional[SimpleTopology] = None
+    link_GBps: float = 34.36 * 8
+    link_lat_ns: float = 1000.0
+    local_GBps: float = 1099.5
+    reduce_GBps: float = 4398.0
+    # trace execution
+    coll_workgroups: int = 4
+    protocol: str = "put"
+    #: roofline compute rate of one rank (flops per simulated ns); the
+    #: default matches the fine tier's defaults (8 comp workgroups x 2048
+    #: flops per CU-cycle at 1 GHz)
+    flops_per_ns: float = 16384.0
+
+    fidelity = "coarse"
+
+    def make_backend(self, infra=None):
+        from .coarse import CoarseBackend
+        return CoarseBackend(infra=infra, topo=self.topo,
+                             link_GBps=self.link_GBps,
+                             link_lat_ns=self.link_lat_ns,
+                             local_GBps=self.local_GBps,
+                             reduce_GBps=self.reduce_GBps)
+
+
+@dataclass
+class AnalyticConfig:
+    """Closed-form tier: alpha-beta estimators, contention-free fallback."""
+
+    link_GBps: Optional[float] = None
+    link_lat_ns: Optional[float] = None
+    local_GBps: float = 1099.5
+    reduce_GBps: float = 4398.0
+    # trace execution
+    coll_workgroups: int = 4
+    protocol: str = "put"
+    flops_per_ns: float = 16384.0
+
+    fidelity = "analytic"
+
+    def make_backend(self, infra=None):
+        from .analytic import AnalyticBackend
+        return AnalyticBackend(infra=infra, link_GBps=self.link_GBps,
+                               link_lat_ns=self.link_lat_ns,
+                               local_GBps=self.local_GBps,
+                               reduce_GBps=self.reduce_GBps)
+
+
+#: fidelity name -> config dataclass
+CONFIGS: Dict[str, type] = {
+    "fine": FineConfig,
+    "coarse": CoarseConfig,
+    "analytic": AnalyticConfig,
+}
+
+#: per-run keyword arguments accepted by ``backend.run`` for a Program
+PROGRAM_RUN_KW: Dict[str, FrozenSet[str]] = {
+    "fine": frozenset({"cluster", "unroll", "rank_delay_ns", "until_ns"}),
+    "coarse": frozenset({"rank_delay_ns", "until_ns"}),
+    "analytic": frozenset({"rank_delay_ns", "until_ns"}),
+}
+
+#: per-run keyword arguments accepted by the trace path (any tier)
+TRACE_RUN_KW: FrozenSet[str] = frozenset({"until_ns"})
+
+
+def config_field_names(fidelity: str) -> FrozenSet[str]:
+    return frozenset(f.name for f in fields(CONFIGS[fidelity]))
+
+
+def split_legacy_kwargs(fidelity: str, kwargs: dict, run_keys: FrozenSet[str],
+                        entry: str = "simulate()") -> tuple:
+    """Partition legacy flat ``entry`` kwargs into (config, run kwargs).
+
+    Keys matching the tier's config dataclass build the config (with a
+    DeprecationWarning pointing at ``config=``); keys in ``run_keys`` pass
+    through to the run; anything else raises immediately with the full
+    valid-key list — instead of the old behavior of exploding as an
+    unexpected-keyword error deep inside ``backend.run``.
+    """
+    cls = CONFIGS[fidelity]
+    names = config_field_names(fidelity)
+    cfg_kw, run_kw, unknown = {}, {}, []
+    for k, v in kwargs.items():
+        if k in names:
+            cfg_kw[k] = v
+        elif k in run_keys:
+            run_kw[k] = v
+        else:
+            unknown.append(k)
+    if unknown:
+        valid = sorted(names | run_keys)
+        raise TypeError(
+            f"{entry} got unknown keyword(s) {sorted(unknown)} for "
+            f"fidelity {fidelity!r}; valid keys: {valid} "
+            f"(or pass config={cls.__name__}(...))")
+    if cfg_kw:
+        warnings.warn(
+            f"passing backend-construction kwargs {sorted(cfg_kw)} to "
+            f"{entry} is deprecated; use config="
+            f"{cls.__name__}({', '.join(k + '=...' for k in sorted(cfg_kw))})",
+            DeprecationWarning, stacklevel=3)
+    return cls(**cfg_kw), run_kw

@@ -66,12 +66,20 @@ class ProgramInterpreter:
 
     def __init__(self, program: Program, net: Transport,
                  local_GBps: float, reduce_GBps: float,
-                 rank_delay_ns: Optional[List[float]] = None):
+                 rank_delay_ns: Optional[List[float]] = None,
+                 deferred: bool = False,
+                 on_rank_done: Optional[Callable[[int, float], None]] = None):
+        """``deferred=True`` holds every rank's cursors until the owner calls
+        :meth:`start_rank` — the workload seam's hook for dispatching one
+        collective's per-rank halves as their trace dependencies resolve.
+        ``on_rank_done(rank, t_ns)`` fires once per rank on completion.
+        """
         self.p = program
         self.net = net
         self.e = net.engine
         self.local_GBps = local_GBps
         self.reduce_GBps = reduce_GBps
+        self.on_rank_done = on_rank_done
         self.sems: Dict[Tuple[int, int], int] = {}
         self.pcs: Dict[Tuple[int, int], int] = {}
         self.blocked: Dict[Tuple[int, int], bool] = {}
@@ -82,8 +90,21 @@ class ProgramInterpreter:
                 self.pcs[(r, w)] = 0
                 self.blocked[(r, w)] = False
                 self.live += 1
-                delay = rank_delay_ns[r] if rank_delay_ns else 0.0
-                self.e.schedule(delay, self._advance, r, w)
+                if not deferred:
+                    delay = rank_delay_ns[r] if rank_delay_ns else 0.0
+                    self.e.schedule(delay, self._advance, r, w)
+
+    def start_rank(self, r: int) -> None:
+        """Release rank ``r``'s workgroup cursors at the current time
+        (deferred-start mode; see ``__init__``)."""
+        wgs = self.p.gpus[r]
+        if not wgs:
+            # a rank with no program: complete immediately (still via an
+            # event so completion observes a consistent `now`)
+            self.e.schedule(0, self._rank_done, r)
+            return
+        for w in range(len(wgs)):
+            self.e.schedule(0, self._advance, r, w)
 
     # each (rank, wg) cursor advances op by op; ops take simulated time
     def _advance(self, r: int, w: int) -> None:
@@ -170,4 +191,10 @@ class ProgramInterpreter:
         self.live -= 1
         if all(self.pcs[(r, w2)] >= len(self.p.gpus[r][w2])
                for w2 in range(len(self.p.gpus[r]))):
-            self.done_at.setdefault(r, self.e.now)
+            self._rank_done(r)
+
+    def _rank_done(self, r: int) -> None:
+        if r not in self.done_at:
+            self.done_at[r] = self.e.now
+            if self.on_rank_done is not None:
+                self.on_rank_done(r, self.e.now)

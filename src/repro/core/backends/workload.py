@@ -1,0 +1,209 @@
+"""The Workload seam: traces AND programs through one ``simulate()``.
+
+The paper's headline flow (§2.1, §4.3) starts from a Chakra execution
+trace, not a single collective: per-rank DAGs of compute and communication
+kernels.  This module makes that workload first-class at *every* fidelity
+tier:
+
+* :class:`DagScheduler` — the tier-agnostic dependency tracker.  One
+  implementation dispatches per-rank kernels as their dependencies
+  resolve, shared by the fine tier's semaphore-accurate
+  :class:`~repro.core.chakra.TraceExecutor` and the cheap tiers below.
+* :func:`run_trace` — runs an :class:`~repro.core.chakra.ExecutionTrace`
+  on a constructed backend.  The fine tier keeps today's path bit-exactly:
+  an *unsealed* detailed Cluster (trace dispatches chain off ``on_done``
+  callbacks mid-run, which ``Cluster.seal()`` would forbid) driven by
+  ``TraceExecutor``.  Coarse and analytic execute each collective node
+  through the shared :class:`~repro.core.backends.interpreter.
+  ProgramInterpreter` (deferred per-rank start) over their usual
+  transports, and cost compute nodes with a roofline model on per-rank
+  timelines — opening multi-collective workloads (training steps, decode
+  loops, overlap studies) to the cheap tiers.
+
+Nothing here imports :mod:`repro.core.chakra` at module load — the trace
+types are resolved lazily so ``chakra`` itself can build on this module's
+scheduler without an import cycle.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from .interpreter import AnalyticTransport, ProgramInterpreter
+
+
+def is_trace(workload) -> bool:
+    """True iff ``workload`` is an ExecutionTrace (vs an MSCCL++ Program)."""
+    from ..chakra import ExecutionTrace
+    return isinstance(workload, ExecutionTrace)
+
+
+class DagScheduler:
+    """Dependency bookkeeping for one ExecutionTrace, tier-agnostic.
+
+    Owns nothing about *how* a node executes — callers launch the nodes
+    this scheduler hands them (``roots`` first, then whatever each
+    ``complete`` call unblocks) and stamp start/end times on the nodes.
+    Iteration order is the trace's node order, so two executors sharing a
+    trace launch ready nodes in the same deterministic sequence.
+    """
+
+    def __init__(self, trace):
+        trace.validate()
+        self.trace = trace
+        self.by_id = {n.nid: n for n in trace.nodes}
+        self.pending_deps = {n.nid: len(n.deps) for n in trace.nodes}
+        self.dependents: Dict[int, List[int]] = {}
+        for n in trace.nodes:
+            for d in n.deps:
+                self.dependents.setdefault(d, []).append(n.nid)
+        self.unfinished = len(trace.nodes)
+
+    def roots(self) -> list:
+        """Nodes with no outstanding dependencies, in trace order."""
+        return [n for n in self.trace.nodes if self.pending_deps[n.nid] == 0]
+
+    def complete(self, nid: int, t: float) -> list:
+        """Mark ``nid`` finished at ``t``; return newly-ready nodes."""
+        self.by_id[nid].end_ns = t
+        self.unfinished -= 1
+        ready = []
+        for dep_id in self.dependents.get(nid, []):
+            self.pending_deps[dep_id] -= 1
+            if self.pending_deps[dep_id] == 0:
+                ready.append(self.by_id[dep_id])
+        return ready
+
+    def incomplete_ids(self, limit: int = 10) -> list:
+        return [n.nid for n in self.trace.nodes if n.end_ns < 0][:limit]
+
+    def result(self, engine, fidelity: str):
+        """Assemble the TraceResult after the engine drained (shared by the
+        fine TraceExecutor and the cheap-tier executor); raises if any node
+        never completed."""
+        if self.unfinished:
+            raise RuntimeError(
+                f"trace incomplete at {fidelity} tier, nodes left: "
+                f"{self.incomplete_ids()}")
+        from ..chakra import TraceResult
+        per_rank = [0.0] * self.trace.num_ranks
+        for n in self.trace.nodes:
+            per_rank[n.rank] = max(per_rank[n.rank], n.end_ns)
+        return TraceResult(
+            time_ns=max(per_rank), events=engine.events_processed,
+            wallclock_s=engine.wallclock_seconds(), fidelity=fidelity,
+            per_rank_done_ns=per_rank,
+            node_times={n.nid: (n.start_ns, n.end_ns)
+                        for n in self.trace.nodes})
+
+
+class _TierTraceExecutor:
+    """ExecutionTrace at chunk/analytic granularity.
+
+    Collective nodes run through one deferred-start
+    :class:`ProgramInterpreter` per ``coll_id`` — each rank's half released
+    when *that rank's* trace dependencies resolve, so launch skew
+    propagates through the interpreter's semaphores just like the fine
+    tier.  All interpreters share one engine and one transport, so
+    overlapping collectives contend for the same links (coarse) or overlap
+    freely (analytic).  Compute nodes cost ``max(flops/rate, bytes/bw)``
+    (roofline) on a serialized per-rank compute timeline, overlapping
+    network activity — the cheap-tier analogue of comp and coll kernels
+    sharing CUs.
+    """
+
+    def __init__(self, trace, backend, config):
+        self.trace = trace
+        self.cfg = config
+        self.fidelity = backend.fidelity
+        n = trace.num_ranks
+        if backend.fidelity == "coarse":
+            from ..network.simple import SimpleNetwork
+            topo = backend.make_topology(n)
+            if topo.num_gpus < n:
+                raise ValueError(
+                    f"topology has {topo.num_gpus} endpoints but the trace "
+                    f"needs {n} ranks")
+            self.net = SimpleNetwork(topo)
+        else:                          # analytic: contention-free alpha-beta
+            bw, lat = backend.link_params()
+            self.net = AnalyticTransport(alpha_ns=lat, beta_GBps=bw)
+        self.local_GBps = backend.local_GBps
+        self.reduce_GBps = backend.reduce_GBps
+        self.engine = self.net.engine
+        self.dag = DagScheduler(trace)
+        self.comp_free_ps = [0] * n   # per-rank compute timeline (integer ps)
+        self._interps: Dict[int, ProgramInterpreter] = {}
+        self._coll_nid: Dict[Tuple[int, int], int] = {}
+
+    # ---------------------------------------------------------------- running
+    def run(self, until_ns: float = 1e12):
+        for node in self.dag.roots():
+            self._launch(node)
+        self.engine.run(until_ns)
+        return self.dag.result(self.engine, self.fidelity)
+
+    def _launch(self, node) -> None:
+        node.start_ns = self.engine.now
+        if node.kind == "comp":
+            self._launch_comp(node)
+        else:
+            self._launch_coll(node)
+
+    def _complete(self, nid: int) -> None:
+        for nxt in self.dag.complete(nid, self.engine.now):
+            self._launch(nxt)
+
+    # ---------------------------------------------------------------- compute
+    def _launch_comp(self, node) -> None:
+        # integer-ps timeline so stamped starts line up exactly with the
+        # engine ticks completion events fire on
+        r = node.rank
+        start_ps = max(self.engine.now_ps, self.comp_free_ps[r])
+        node.start_ns = start_ps / 1000.0  # actual roofline start, not launch
+        end_ps = start_ps + int(round(self._roofline_ns(node) * 1000))
+        self.comp_free_ps[r] = end_ps
+        self.engine.schedule_abs_ps(end_ps, self._complete, node.nid)
+
+    def _roofline_ns(self, node) -> float:
+        cfg = self.cfg
+        t_flop = node.flops / cfg.flops_per_ns if cfg.flops_per_ns > 0 else 0.0
+        t_mem = (node.bytes_moved / self.local_GBps
+                 if self.local_GBps > 0 else 0.0)
+        return max(t_flop, t_mem, 1.0)         # >= one CU cycle, like fine
+
+    # ------------------------------------------------------------ collectives
+    def _launch_coll(self, node) -> None:
+        cid = node.coll_id
+        interp = self._interps.get(cid)
+        if interp is None:
+            from ..chakra import collective_program
+            prog = collective_program(node, self.trace.num_ranks,
+                                      self.cfg.coll_workgroups,
+                                      self.cfg.protocol)
+            interp = ProgramInterpreter(
+                prog, self.net, self.local_GBps, self.reduce_GBps,
+                deferred=True,
+                on_rank_done=lambda r, t, cid=cid: self._coll_done(cid, r))
+            self._interps[cid] = interp
+        self._coll_nid[(cid, node.rank)] = node.nid
+        interp.start_rank(node.rank)
+
+    def _coll_done(self, cid: int, rank: int) -> None:
+        self._complete(self._coll_nid[(cid, rank)])
+
+
+def run_trace(trace, backend, config, until_ns: float = 1e12):
+    """Run an ExecutionTrace on a constructed backend (any tier)."""
+    if backend.fidelity == "fine":
+        from ..chakra import TraceExecutor
+        cluster = backend.make_cluster(trace.num_ranks)
+        # NOTE: the cluster stays *unsealed* — trace dispatches chain off
+        # kernel on_done callbacks mid-run (see Cluster.seal()).
+        ex = TraceExecutor(trace, cluster,
+                           comp_workgroups=config.comp_workgroups,
+                           coll_workgroups=config.coll_workgroups,
+                           flops_per_cu_cycle=config.flops_per_cu_cycle,
+                           protocol=config.protocol)
+        return ex.run(until_ns)
+    return _TierTraceExecutor(trace, backend, config).run(until_ns)

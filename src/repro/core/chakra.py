@@ -7,24 +7,37 @@ into the common fine-grained representation, so compute and communication
 kernels contend for the same CUs with no artificial one-kernel-at-a-time
 restriction (paper §4.3).
 
-The executor below implements that flow on the detailed Cluster.  Collective
-nodes sharing a ``coll_id`` across ranks are lowered from one MSCCL++
-program; each rank's kernel is dispatched when *that rank's* dependencies
-are met, so launch skew and stragglers propagate through the semaphores
-exactly as on real hardware.
+Traces are a first-class workload: hand one to
+``repro.core.backends.simulate(trace, infra, fidelity=...)`` and it runs at
+any fidelity tier.  The fine tier uses :class:`TraceExecutor` below — each
+rank's kernel dispatched onto the detailed Cluster when *that rank's*
+dependencies are met, so launch skew and stragglers propagate through the
+semaphores exactly as on real hardware.  The dependency bookkeeping itself
+lives in the tier-agnostic
+:class:`~repro.core.backends.workload.DagScheduler`, shared with the
+coarse/analytic trace executors.
+
+``ExecutionTrace.to_json`` / ``from_json`` round-trip the structure
+(runtime timestamps stripped), so external Chakra-style JSON traces can be
+imported, validated, and fed straight to ``simulate``.
 """
 
 from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
+from .backends.base import SimResult
+from .backends.workload import DagScheduler
 from .cluster import Cluster
 from .collectives import ALGORITHMS
 from .mscclpp import Program, lower_program
 from .operations import ReduceOp
 from .workload import Kernel, Workgroup
+
+#: per-node runtime state, never serialized
+_RUNTIME_FIELDS = ("start_ns", "end_ns")
 
 
 @dataclass
@@ -79,23 +92,140 @@ class ExecutionTrace:
             out.append(n)
         return out
 
+    # ------------------------------------------------------------- JSON I/O
     def to_json(self) -> str:
-        return json.dumps([n.__dict__ for n in self.nodes], indent=1)
+        """Serialize the trace *structure*: runtime start/end timestamps are
+        stripped, so a dump taken after a run round-trips to a clean trace."""
+        nodes = [{k: v for k, v in n.__dict__.items()
+                  if k not in _RUNTIME_FIELDS} for n in self.nodes]
+        return json.dumps({"num_ranks": self.num_ranks, "nodes": nodes},
+                          indent=1)
+
+    @staticmethod
+    def from_json(text: str) -> "ExecutionTrace":
+        """Parse, validate, and import a Chakra-style JSON trace.
+
+        Accepts the :meth:`to_json` format (``{"num_ranks": N, "nodes":
+        [...]}``) and, for older dumps, a bare node list (``num_ranks``
+        then inferred from the highest rank).  Unknown node keys, bad
+        kinds, malformed collectives and dangling dependencies all raise
+        ``ValueError`` with the offending node named; stray runtime fields
+        (``start_ns``/``end_ns``) in old dumps are ignored.
+        """
+        d = json.loads(text)
+        if isinstance(d, list):                      # legacy bare node list
+            raw_nodes, num_ranks = d, None
+        elif isinstance(d, dict):
+            raw_nodes = d.get("nodes")
+            num_ranks = d.get("num_ranks")
+            if not isinstance(raw_nodes, list):
+                raise ValueError("trace JSON must carry a 'nodes' list")
+        else:
+            raise ValueError(f"trace JSON must be an object or list, "
+                             f"got {type(d).__name__}")
+        known = {f for f in ETNode.__dataclass_fields__}
+        nodes: List[ETNode] = []
+        for i, nd in enumerate(raw_nodes):
+            if not isinstance(nd, dict):
+                raise ValueError(f"node #{i}: expected an object")
+            unknown = set(nd) - known
+            if unknown:
+                raise ValueError(f"node #{i}: unknown field(s) "
+                                 f"{sorted(unknown)}; valid: {sorted(known)}")
+            for req in ("nid", "rank", "kind"):
+                if req not in nd:
+                    raise ValueError(f"node #{i}: missing required "
+                                     f"field {req!r}")
+            clean = {k: v for k, v in nd.items() if k not in _RUNTIME_FIELDS}
+            clean.setdefault("name", f"{clean['kind']}#{clean['nid']}")
+            nodes.append(ETNode(**clean))
+        if num_ranks is None:
+            num_ranks = max((n.rank for n in nodes), default=-1) + 1
+        et = ExecutionTrace(num_ranks=num_ranks, nodes=nodes,
+                            _next=max((n.nid for n in nodes), default=-1) + 1)
+        et.validate()
+        return et
+
+    def reset_runtime(self) -> None:
+        """Clear per-node runtime timestamps (before a fresh run)."""
+        for n in self.nodes:
+            n.start_ns = -1.0
+            n.end_ns = -1.0
 
     def validate(self) -> None:
+        if self.num_ranks < 1:
+            raise ValueError(f"trace needs num_ranks >= 1, "
+                             f"got {self.num_ranks}")
         ids = {n.nid for n in self.nodes}
+        if len(ids) != len(self.nodes):
+            raise ValueError("duplicate node ids in trace")
+        colls: Dict[int, Dict[int, ETNode]] = {}
         for n in self.nodes:
+            if n.kind not in ("comp", "coll"):
+                raise ValueError(f"node {n.nid}: bad kind {n.kind!r}")
+            if not (0 <= n.rank < self.num_ranks):
+                raise ValueError(f"node {n.nid}: rank {n.rank} outside "
+                                 f"0..{self.num_ranks - 1}")
+            if n.kind == "coll":
+                if n.coll_id < 0 or not n.coll_kind:
+                    raise ValueError(f"node {n.nid}: collective node needs "
+                                     f"coll_id >= 0 and a coll_kind")
+                if (n.coll_kind, n.algorithm) not in ALGORITHMS:
+                    raise ValueError(
+                        f"node {n.nid}: no algorithm "
+                        f"{(n.coll_kind, n.algorithm)!r}; known: "
+                        f"{sorted(ALGORITHMS)}")
+                group = colls.setdefault(n.coll_id, {})
+                prev = group.get(n.rank)
+                if prev is not None:
+                    raise ValueError(
+                        f"node {n.nid}: rank {n.rank} appears twice in "
+                        f"collective {n.coll_id} (node {prev.nid}) — each "
+                        f"collective instance needs a fresh coll_id")
+                group[n.rank] = n
             for d in n.deps:
                 if d not in ids:
                     raise ValueError(f"node {n.nid}: missing dep {d}")
+        # each collective is lowered once, from any member: the group must
+        # cover every rank exactly once and agree on its parameters, or the
+        # executors would deadlock (missing rank) or silently diverge
+        for cid, group in colls.items():
+            if len(group) != self.num_ranks:
+                missing = sorted(set(range(self.num_ranks)) - set(group))
+                raise ValueError(f"collective {cid}: missing rank halves "
+                                 f"for ranks {missing}")
+            sig = {(n.coll_kind, n.coll_bytes, n.algorithm)
+                   for n in group.values()}
+            if len(sig) != 1:
+                raise ValueError(f"collective {cid}: inconsistent "
+                                 f"kind/bytes/algorithm across ranks: "
+                                 f"{sorted(sig)}")
 
 
 @dataclass
-class TraceResult:
-    time_ns: float
-    events: int
-    node_times: Dict[int, Tuple[float, float]]
-    per_rank_end_ns: List[float]
+class TraceResult(SimResult):
+    """Result of an ExecutionTrace run (any fidelity tier).
+
+    Shares :class:`~repro.core.backends.base.SimResult` with
+    ``CollectiveResult`` so sweep scripts handle programs and traces
+    uniformly; adds the per-node interval map.
+    """
+    node_times: Dict[int, Tuple[float, float]] = field(default_factory=dict)
+
+    @property
+    def per_rank_end_ns(self) -> List[float]:
+        """Back-compat alias of ``per_rank_done_ns``."""
+        return self.per_rank_done_ns
+
+
+def collective_program(node: ETNode, num_ranks: int, workgroups: int,
+                       protocol: str = "put") -> Program:
+    """Generate the MSCCL++ program for one trace collective node."""
+    gen = ALGORITHMS[(node.coll_kind, node.algorithm)]
+    try:
+        return gen(num_ranks, node.coll_bytes, workgroups, protocol=protocol)
+    except TypeError:
+        return gen(num_ranks, node.coll_bytes, workgroups)
 
 
 class TraceExecutor:
@@ -105,40 +235,22 @@ class TraceExecutor:
                  comp_workgroups: int = 8, coll_workgroups: int = 4,
                  flops_per_cu_cycle: float = 2048.0,
                  protocol: str = "put"):
-        trace.validate()
         self.trace = trace
+        self.dag = DagScheduler(trace)         # validates the trace
         self.cluster = cluster
         self.comp_wgs = comp_workgroups
         self.coll_wgs = coll_workgroups
         self.flops_per_cu_cycle = flops_per_cu_cycle
         self.protocol = protocol
-        self.by_id = {n.nid: n for n in trace.nodes}
-        self.pending_deps = {n.nid: len(n.deps) for n in trace.nodes}
-        self.dependents: Dict[int, List[int]] = {}
-        for n in trace.nodes:
-            for d in n.deps:
-                self.dependents.setdefault(d, []).append(n.nid)
-        self.unfinished = len(trace.nodes)
         # cache one lowered program per coll_id; kernels dispatched per rank
         self._coll_kernels: Dict[int, Dict[int, Kernel]] = {}
 
     # ---------------------------------------------------------------- running
     def run(self, until_ns: float = 1e12) -> TraceResult:
-        for n in self.trace.nodes:
-            if self.pending_deps[n.nid] == 0:
-                self._launch(n)
+        for n in self.dag.roots():
+            self._launch(n)
         self.cluster.run(until_ns)
-        if self.unfinished:
-            left = [n.nid for n in self.trace.nodes if n.end_ns < 0]
-            raise RuntimeError(f"trace incomplete, nodes left: {left[:10]}")
-        per_rank = [0.0] * self.trace.num_ranks
-        for n in self.trace.nodes:
-            per_rank[n.rank] = max(per_rank[n.rank], n.end_ns)
-        return TraceResult(
-            time_ns=max(per_rank), events=self.cluster.engine.events_processed,
-            node_times={n.nid: (n.start_ns, n.end_ns)
-                        for n in self.trace.nodes},
-            per_rank_end_ns=per_rank)
+        return self.dag.result(self.cluster.engine, "fine")
 
     def _launch(self, node: ETNode) -> None:
         node.start_ns = self.cluster.engine.now
@@ -164,13 +276,8 @@ class TraceExecutor:
 
     def _coll_kernel(self, node: ETNode) -> Kernel:
         if node.coll_id not in self._coll_kernels:
-            gen = ALGORITHMS[(node.coll_kind, node.algorithm)]
-            try:
-                prog = gen(self.trace.num_ranks, node.coll_bytes,
-                           self.coll_wgs, protocol=self.protocol)
-            except TypeError:
-                prog = gen(self.trace.num_ranks, node.coll_bytes,
-                           self.coll_wgs)
+            prog = collective_program(node, self.trace.num_ranks,
+                                      self.coll_wgs, self.protocol)
             # namespace semaphores per collective instance: monotonic
             # counters must not collide across collectives on one cluster
             kernels = lower_program(prog, sem_base=node.coll_id * 100_000)
@@ -178,10 +285,5 @@ class TraceExecutor:
         return self._coll_kernels[node.coll_id][node.rank]
 
     def _complete(self, nid: int, t: float) -> None:
-        node = self.by_id[nid]
-        node.end_ns = t
-        self.unfinished -= 1
-        for dep_id in self.dependents.get(nid, []):
-            self.pending_deps[dep_id] -= 1
-            if self.pending_deps[dep_id] == 0:
-                self._launch(self.by_id[dep_id])
+        for node in self.dag.complete(nid, t):
+            self._launch(node)

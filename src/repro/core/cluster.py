@@ -103,6 +103,13 @@ class Cluster:
         self.sealed = False
 
     def seal(self) -> None:
+        """Promise the ledger that no event callback dispatches new kernels.
+
+        Single-program runs (FineBackend) seal right after dispatching;
+        trace runs must NOT — the workload seam (`backends/workload.py`)
+        launches each trace node from its dependencies' `on_done`
+        callbacks, which is exactly the mid-run dispatch `seal()` forbids.
+        """
         self.sealed = True
 
     # ------------------------------------------------------------- topology

@@ -30,16 +30,21 @@ _PS_PER_NS = 1000
 class Engine:
     """Deterministic discrete-event engine.
 
-    Events with equal timestamps fire in scheduling order (FIFO), which keeps
-    simulations reproducible run-to-run regardless of hash seeds.
+    Events with equal timestamps fire in *tie-key* order, then scheduling
+    order (FIFO), which keeps simulations reproducible run-to-run regardless
+    of hash seeds.  The key (default 0) exists for the fabric: link-service
+    events carry their route's registration-order key, so same-tick service
+    ties resolve identically in every scheduling mode (classic/exact/
+    coalesce × ledger) instead of by each mode's incidental insertion order.
     """
 
     __slots__ = ("_queue", "_now_ps", "_seq", "events_processed", "_running",
                  "_wall_start", "_rheaps", "_regioned")
 
     def __init__(self) -> None:
-        # (tick, seq, fn, args, region)
-        self._queue: List[Tuple[int, int, Callable[..., None], tuple, int]] = []
+        # (tick, key, seq, fn, args, region)
+        self._queue: List[Tuple[int, int, int, Callable[..., None], tuple,
+                                int]] = []
         self._now_ps: int = 0
         self._seq: int = 0
         self.events_processed: int = 0
@@ -73,26 +78,26 @@ class Engine:
         return len(self._rheaps) - 1
 
     def _push(self, at_ps: int, fn: Callable[..., None], args: tuple,
-              region: int) -> None:
-        heapq.heappush(self._queue, (at_ps, self._seq, fn, args, region))
+              region: int, key: int = 0) -> None:
+        heapq.heappush(self._queue, (at_ps, key, self._seq, fn, args, region))
         self._seq += 1
         if self._regioned:
             heapq.heappush(self._rheaps[region], at_ps)
 
     def schedule(self, delay_ns: float, fn: Callable[..., None], *args: Any,
-                 region: int = 0) -> None:
+                 region: int = 0, key: int = 0) -> None:
         """Schedule ``fn(*args)`` ``delay_ns`` nanoseconds from now."""
         if delay_ns < 0:
             raise ValueError(f"negative delay: {delay_ns}")
         self._push(self._now_ps + int(round(delay_ns * _PS_PER_NS)), fn, args,
-                   region)
+                   region, key)
 
     def schedule_ps(self, delay_ps: int, fn: Callable[..., None], *args: Any,
-                    region: int = 0) -> None:
-        self._push(self._now_ps + delay_ps, fn, args, region)
+                    region: int = 0, key: int = 0) -> None:
+        self._push(self._now_ps + delay_ps, fn, args, region, key)
 
     def schedule_abs_ps(self, at_ps: int, fn: Callable[..., None], *args: Any,
-                        region: int = 0) -> None:
+                        region: int = 0, key: int = 0) -> None:
         """Schedule at an absolute tick (used by the fabric fast path, which
         precomputes service completion times in integer picoseconds).
 
@@ -101,7 +106,7 @@ class Engine:
         """
         if at_ps < self._now_ps:
             raise ValueError(f"cannot schedule in the past: {at_ps} < {self._now_ps}")
-        heapq.heappush(self._queue, (at_ps, self._seq, fn, args, region))
+        heapq.heappush(self._queue, (at_ps, key, self._seq, fn, args, region))
         self._seq += 1
         if self._regioned:
             heapq.heappush(self._rheaps[region], at_ps)
@@ -213,7 +218,7 @@ class Engine:
                     at_ps = q[0][0]
                     if until_ps is not None and at_ps > until_ps:
                         break
-                    _, _, fn, args, _ = pop(q)
+                    _, _, _, fn, args, _ = pop(q)
                     self._now_ps = at_ps
                     # live per-event count: the fabric's channel-clock memo
                     # uses it as its epoch (one memo generation per event)
@@ -233,10 +238,10 @@ class Engine:
                 if until_ps is not None and at_ps > until_ps:
                     push(q, item)       # past the horizon: put it back
                     break
-                pop(rheaps[item[4]])
+                pop(rheaps[item[5]])
                 self._now_ps = at_ps
                 self.events_processed += 1
-                item[2](*item[3])
+                item[3](*item[4])
                 n += 1
         finally:
             if gc_was_enabled:

@@ -19,10 +19,10 @@ Scheduling modes (``Fabric(mode=...)``)
 ``MODE_CLASSIC``
     The reference implementation: every link hop costs two heap events (one
     when serialization finishes, one when the message arrives at the next
-    node after propagation).  Same-tick ties resolve by the insertion order
-    of those intermediate events, which in rare configurations differs from
-    the fast paths' tie order by sub-nanosecond noise; the hard bit-exact
-    guarantee is between ``MODE_EXACT`` and ``MODE_COALESCE``.
+    node after propagation).  Same-tick link-service ties resolve by the
+    deterministic route tie-break key (:class:`Route`) in every mode, so
+    classic, exact and coalesce produce bit-identical schedules — even on
+    symmetric workloads whose flights collide at equal ticks.
 
 ``MODE_EXACT``
     FIFO links keep an absolute ``free_at`` clock in integer picoseconds.
@@ -166,6 +166,27 @@ class EndpointSource(InjectionSource):
             if not _clock_ge(l, t, depth - 1):
                 return False
         return True
+
+
+class Route(list):
+    """A route (list of links) with a deterministic tie-break identity.
+
+    ``key`` is assigned in route *registration* order — ``Fabric`` hands the
+    keys out as routes enter its caches, and registration order is fixed by
+    the model builder (``Cluster.warm_routes`` pre-registers the whole route
+    space), not by the scheduling mode.  Every link-service heap event
+    (classic per-hop arrivals, fast-path parks, deliveries) carries its
+    route's key, so same-tick service ties resolve identically across
+    classic/exact/coalesce × ledger on/off instead of by each mode's
+    incidental event insertion order (the one schedule-noise class the FIFO
+    monitor cannot see).
+    """
+    __slots__ = ("key",)
+
+
+def _rkey(route) -> int:
+    """Tie-break key of a route (0 for ad-hoc plain-list routes)."""
+    return route.key if type(route) is Route else 0
 
 
 class Flight:
@@ -371,7 +392,8 @@ class Link:
                 if last._sink is not None and not flight.eager:
                     _heappush(last._sink, next_at)
                 reg1 = last.region
-            self.engine.schedule_abs_ps(next_at, _propel, train, region=reg1)
+            self.engine.schedule_abs_ps(next_at, _propel, train, region=reg1,
+                                        key=_rkey(route))
             return
         if self.policy == "fair":
             self._q[flight.cls].append(flight)
@@ -405,9 +427,12 @@ class Link:
 
     def _finish(self, flight: Flight) -> None:
         # serialization done: link free for the next message; this message
-        # propagates for lat_ns then arrives at the next node.
+        # propagates for lat_ns then arrives at the next node.  The arrival
+        # event carries the route's tie-break key so same-tick arrivals at
+        # the next link are serviced in the same order as the fast paths.
         self._start_next()
-        self.engine.schedule(self.lat_ns, _advance, flight)
+        self.engine.schedule(self.lat_ns, _advance, flight,
+                             key=_rkey(flight.route))
 
 
 def _clock_ge(link: "Link", need: int, depth: int) -> bool:
@@ -563,6 +588,7 @@ def _propel(train: _Train) -> None:
         _propel_multi(train)
         return
     route = train.route
+    rkey = route.key if type(route) is Route else 0
     nroute = len(route)
     hop = train.hop + 1
     f = lines[0]
@@ -594,7 +620,7 @@ def _propel(train: _Train) -> None:
                 dreg = last.region
                 if last._sink is not None:
                     _heappush(last._sink, at)
-                _heappush(queue, (at, eng._seq, f.on_arrive, (f,), dreg))
+                _heappush(queue, (at, rkey, eng._seq, f.on_arrive, (f,), dreg))
                 eng._seq += 1
                 if rheaps is not None:
                     _heappush(rheaps[dreg], at)
@@ -611,7 +637,8 @@ def _propel(train: _Train) -> None:
                     train.hop = hop - 1
                     train.at_ps[0] = at
                     lreg = link.region
-                    _heappush(queue, (at, eng._seq, _propel, (train,), lreg))
+                    _heappush(queue, (at, rkey, eng._seq, _propel, (train,),
+                                      lreg))
                     eng._seq += 1
                     if rheaps is not None:
                         _heappush(rheaps[lreg], at)
@@ -649,7 +676,7 @@ def _propel(train: _Train) -> None:
                 lreg = link.region
                 if link.led:
                     _heappush(link._resv, at)
-                _heappush(queue, (at, eng._seq, _propel, (train,), lreg))
+                _heappush(queue, (at, rkey, eng._seq, _propel, (train,), lreg))
                 eng._seq += 1
                 if rheaps is not None:
                     _heappush(rheaps[lreg], at)
@@ -660,7 +687,8 @@ def _propel(train: _Train) -> None:
             if at <= now:
                 link.enqueue(f)
             else:
-                eng.schedule_abs_ps(at, _enqueue_line, link, f, region=0)
+                eng.schedule_abs_ps(at, _enqueue_line, link, f, region=0,
+                                    key=rkey)
             return
         # FIFO service commit, inlined
         size = f.size
@@ -712,6 +740,7 @@ def _propel_multi(train: _Train) -> None:
     inline.
     """
     route = train.route
+    rkey = route.key if type(route) is Route else 0
     lines, at_ps = train.lines, train.at_ps
     nroute = len(route)
     hop = train.hop + 1
@@ -751,7 +780,7 @@ def _propel_multi(train: _Train) -> None:
                 else:
                     if sink is not None:
                         _heappush(sink, at_ps[i])
-                    sched(at_ps[i], _deliver, g, region=dreg)
+                    sched(at_ps[i], _deliver, g, region=dreg, key=rkey)
             return
         link = route[hop]
         if first > now and link._sole_feed is not route[hop - 1]:
@@ -764,7 +793,8 @@ def _propel_multi(train: _Train) -> None:
                     train.hop = hop - 1
                     if link.coalesce:
                         route[hop - 1]._tails[id(route)] = train
-                    sched(first, _propel, train, region=link.region)
+                    sched(first, _propel, train, region=link.region,
+                          key=rkey)
                     return
                 # ledger: chain across the boundary when the channel clock
                 # allows; refresh the horizon for the new region
@@ -786,7 +816,7 @@ def _propel_multi(train: _Train) -> None:
                     route[hop - 1]._tails[id(route)] = train
                 if link.led:
                     _heappush(link._resv, first)
-                sched(first, _propel, train, region=link.region)
+                sched(first, _propel, train, region=link.region, key=rkey)
                 return
         if not link.fast:
             # classic/fair link: per-line arrivals (its round-robin pick
@@ -800,7 +830,7 @@ def _propel_multi(train: _Train) -> None:
                     link.enqueue(g)
                 else:
                     sched(max(at_ps[i], now), _enqueue_line, link, g,
-                          region=0)
+                          region=0, key=rkey)
             return
         if link.region != reg:
             # entering this link's region — through a sole-fed crossing or
@@ -875,7 +905,7 @@ def _propel_multi(train: _Train) -> None:
                     route[hop - 1]._tails[id(route)] = rest
                 if link.led:
                     _heappush(link._resv, rest.at_ps[0])
-                sched(rest.at_ps[0], _propel, rest, region=reg)
+                sched(rest.at_ps[0], _propel, rest, region=reg, key=rkey)
                 n = stop
         if link.coalesce:
             key = id(route)
@@ -911,7 +941,8 @@ def _propel_multi(train: _Train) -> None:
                 link._tails[id(route)] = train
             if route[nxt].led:
                 _heappush(route[nxt]._resv, at_ps[0])
-            sched(at_ps[0], _propel, train, region=route[nxt].region)
+            sched(at_ps[0], _propel, train, region=route[nxt].region,
+                  key=rkey)
             return
         hop += 1
 
@@ -952,6 +983,7 @@ class Fabric:
         self._via_cache: Dict[Tuple[int, ...], List[Link]] = {}
         self._bfs_trees: Dict[int, list] = {}
         self.links: List[Link] = []
+        self._next_rkey = 1             # route tie-break keys (see Route)
 
     # ------------------------------------------------------------- building
     def add_node(self, name: str) -> int:
@@ -1032,7 +1064,9 @@ class Fabric:
         hit = self._route_cache.get(key)
         if hit is not None:
             return hit
-        path = self._bfs(src, dst)
+        path = Route(self._bfs(src, dst))
+        path.key = self._next_rkey
+        self._next_rkey += 1
         self._route_cache[key] = path
         self._register_feeders(path)
         return path
@@ -1048,7 +1082,9 @@ class Fabric:
         hit = self._via_cache.get(key)
         if hit is not None:
             return hit
-        out: List[Link] = []
+        out: Route = Route()
+        out.key = self._next_rkey
+        self._next_rkey += 1
         for a, b in zip(waypoints, waypoints[1:]):
             if a != b:
                 out.extend(self._route_seg(a, b))
@@ -1205,7 +1241,8 @@ class Fabric:
             if at_ps <= now:
                 first.enqueue(flight)
             else:
-                eng.schedule_abs_ps(at_ps, _enqueue_line, first, flight)
+                eng.schedule_abs_ps(at_ps, _enqueue_line, first, flight,
+                                    key=_rkey(route))
             return
         # inline FIFO service commit on the first link
         size = flight.size
@@ -1267,7 +1304,8 @@ class Fabric:
             if last._sink is not None and not flight.eager:
                 _heappush(last._sink, next_at)
             reg1 = last.region
-        _heappush(eng._queue, (next_at, eng._seq, _propel, (train,), reg1))
+        _heappush(eng._queue, (next_at, _rkey(route), eng._seq, _propel,
+                               (train,), reg1))
         eng._seq += 1
         if eng._regioned:
             _heappush(eng._rheaps[reg1], next_at)
@@ -1298,7 +1336,8 @@ class Fabric:
                 if at_ps <= now:
                     first.enqueue(f)
                 else:
-                    eng.schedule_abs_ps(at_ps, _enqueue_line, first, f)
+                    eng.schedule_abs_ps(at_ps, _enqueue_line, first, f,
+                                        key=_rkey(route))
             return
         train = None
         if first.coalesce:
@@ -1337,7 +1376,8 @@ class Fabric:
                         if not flights[i].eager:
                             _heappush(last._sink, ticks[i])
                 reg1 = last.region
-            eng.schedule_abs_ps(ticks[0], _propel, train, region=reg1)
+            eng.schedule_abs_ps(ticks[0], _propel, train, region=reg1,
+                                key=_rkey(route))
 
     # ------------------------------------------------------------------ stats
     @property

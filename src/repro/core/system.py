@@ -1,20 +1,22 @@
 """System layer: execute collective programs / workloads on a backend.
 
 Three fidelity tiers, selected by ``fidelity=`` on the single
-:func:`repro.core.backends.simulate` entry point (re-exported here):
+:func:`repro.core.backends.simulate` entry point (re-exported here), which
+accepts an MSCCL++ ``Program`` *or* a Chakra-style ``ExecutionTrace``:
 
-* ``"fine"``     — lower the MSCCL++ program to Load-Store kernels and run
-  them on the detailed Cluster (NoC-level network, CU contention,
-  cache-line Wavefront Requests).  Paper §4.2-§4.4.
-* ``"coarse"``   — ASTRA-sim 2.0 style: interpret the same program at
+* ``"fine"``     — lower the workload to Load-Store kernels and run them
+  on the detailed Cluster (NoC-level network, CU contention, cache-line
+  Wavefront Requests).  Paper §4.2-§4.4.
+* ``"coarse"``   — ASTRA-sim 2.0 style: interpret the same workload at
   chunk granularity over the alpha-beta SimpleNetwork (one message per
-  put/get, zero-cost local ops).
-* ``"analytic"`` — closed-form collective estimators (no event
-  simulation), for pod-scale sweeps.
+  put/get, zero-cost local ops; trace compute nodes costed roofline).
+* ``"analytic"`` — closed-form collective estimators / contention-free
+  alpha-beta interpretation (near event-free), for pod-scale sweeps.
 
 The historical helpers :func:`simulate_collective` (fine) and
 :func:`simulate_collective_coarse` are thin wrappers kept for callers and
-notebooks; new code should use ``simulate(program, infra, fidelity=...)``.
+notebooks; new code should use ``simulate(workload, infra, fidelity=...,
+config=...)`` with a typed per-tier config.
 """
 
 from __future__ import annotations
@@ -22,14 +24,14 @@ from __future__ import annotations
 from typing import List, Optional
 
 from .backends import (CollectiveResult, CoarseBackend, FineBackend,
-                       payload_bytes, simulate)
+                       SimResult, payload_bytes, simulate)
 from .cluster import Cluster, NocConfig
 from .gpu_model import GpuConfig
 from .mscclpp import Program
 from .network.simple import SimpleTopology
 
 __all__ = [
-    "CollectiveResult", "payload_bytes", "simulate",
+    "CollectiveResult", "SimResult", "payload_bytes", "simulate",
     "simulate_collective", "simulate_collective_coarse",
 ]
 

@@ -1,13 +1,16 @@
-"""Bench smoke check (ISSUE 2 satellite): the tracked benchmark must not
-regress against the committed ``results/BENCH_engine.json`` baseline.
+"""Bench smoke check (ISSUE 2 satellite; trace + quick gates, ISSUE 5):
+the tracked benchmarks must not regress against the committed baselines —
+``results/BENCH_engine.json`` (8-rank 1 MiB ring all-reduce),
+``results/BENCH_engine_quick.json`` (the --quick 128 KiB variant) and
+``results/BENCH_trace.json`` (the 2-step training-loop trace at every
+fidelity tier).
 
-Runs the tracked workload (8-rank 1 MiB ring all-reduce, default NoC,
-coalesce + bulk emission) once and asserts, against the committed baseline:
+Each gate reruns its workload once and asserts, against the committed row:
 
 * ``time_ns`` is bit-identical (the simulation result is deterministic —
   any drift means the schedule changed);
 * the heap-event count did not regress (> 2% more events fails);
-* the run stays FIFO-certified (``order_violations == 0``).
+* fine-tier runs stay FIFO-certified (``order_violations == 0``).
 
 Wall clock is intentionally NOT asserted — CI boxes are shared-CPU and a
 single sample swings by 30%; events/time are the stable proxies.
@@ -15,15 +18,19 @@ single sample swings by 30%; events/time are the stable proxies.
 
 import json
 import os
+import sys
 
 import pytest
 
 from repro.core import collectives as C
+from repro.core.backends import FineConfig, simulate
 from repro.core.cluster import Cluster, NocConfig
 from repro.core.system import simulate_collective
 
-BASELINE = os.path.join(os.path.dirname(__file__), "..", "results",
-                        "BENCH_engine.json")
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+BASELINE = os.path.join(RESULTS, "BENCH_engine.json")
+QUICK_BASELINE = os.path.join(RESULTS, "BENCH_engine_quick.json")
+TRACE_BASELINE = os.path.join(RESULTS, "BENCH_trace.json")
 
 
 @pytest.mark.slow
@@ -74,3 +81,58 @@ def test_tracked_benchmark_ledger_off_row():
     assert r.events <= ref["events"] * 1.02
     assert base["modes"]["coalesce"]["events"] < ref["events"], \
         "committed baseline must show the ledger reducing events"
+
+
+@pytest.mark.slow
+def test_quick_benchmark_matches_committed_baseline():
+    """The --quick engine row is gated too (same workload at 1/8 size) —
+    cheap enough to catch schedule drift without the full-size run."""
+    if not os.path.exists(QUICK_BASELINE):
+        pytest.skip("no committed BENCH_engine_quick.json baseline")
+    with open(QUICK_BASELINE) as f:
+        base = json.load(f)
+    wl = base["workload"]
+    ref = base["modes"]["coalesce"]
+
+    cluster = Cluster(wl["nranks"], noc=NocConfig())
+    r = simulate_collective(
+        C.ring_all_reduce(wl["nranks"], wl["size_bytes"],
+                          wl["nworkgroups"], wl["protocol"]),
+        cluster=cluster)
+
+    assert r.time_ns == ref["time_ns"], \
+        f"simulated time drifted: {r.time_ns} != baseline {ref['time_ns']}"
+    assert cluster.fabric.order_violations == 0
+    assert r.events <= ref["events"] * 1.02, \
+        f"event count regressed: {r.events} vs baseline {ref['events']}"
+
+
+@pytest.mark.slow
+def test_trace_benchmark_matches_committed_baseline():
+    """The tracked trace workload (ISSUE 5): every fidelity tier's
+    ``time_ns`` must stay bit-identical to the committed BENCH_trace.json
+    and its event count must not regress."""
+    if not os.path.exists(TRACE_BASELINE):
+        pytest.skip("no committed BENCH_trace.json baseline")
+    with open(TRACE_BASELINE) as f:
+        base = json.load(f)
+    wl = base["workload"]
+    assert wl["kind"] == "training_loop_trace"
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    try:
+        from trace_throughput import training_loop_trace
+    finally:
+        sys.path.pop(0)
+
+    for fid, ref in base["tiers"].items():
+        trace = training_loop_trace(wl["nranks"], wl["steps"],
+                                    wl["grad_bytes"], wl["fwd_flops"],
+                                    wl["opt_flops"])
+        cfg = FineConfig(coll_workgroups=wl["coll_workgroups"]) \
+            if fid == "fine" else None
+        r = simulate(trace, fidelity=fid, config=cfg)
+        assert r.time_ns == ref["time_ns"], \
+            f"{fid} trace time drifted: {r.time_ns} != {ref['time_ns']}"
+        assert r.events <= ref["events"] * 1.02, \
+            f"{fid} trace events regressed: {r.events} vs {ref['events']}"

@@ -67,20 +67,24 @@ def test_ledger_parity_all_to_all_switch():
     assert res["on"][1].fabric.order_violations == 0
 
 
-def test_ledger_tie_noise_stays_certified():
+def test_ledger_tie_break_bit_exact_all_to_all_ring():
     """all_to_all over the ring wiring lands symmetric flights on shared
     transit links at the *same integer-picosecond tick*.  Same-tick service
-    order is heap insertion order, which no fast path preserves (classic
-    already differs from exact here, pre-ledger) — so the ledger only
-    promises a *legal* schedule within tie-resolution noise, certified by
-    the monitor."""
-    res = run_ledger_pair(lambda: C.direct_all_to_all(4, 8192, 2, "put"), 4,
-                          topology="ring", unroll=8)
-    r_on, c_on = res["on"]
-    r_off, c_off = res["off"]
-    assert c_on.fabric.order_violations == 0
-    assert c_off.fabric.order_violations == 0
-    assert r_on.time_ns == pytest.approx(r_off.time_ns, rel=1e-3)
+    order used to be heap insertion order — tie-resolution noise no fast
+    path preserved.  With the deterministic route tie-break key
+    (``fabric.Route``), every mode resolves ties identically: this is now a
+    hard bit-exact guarantee across classic/exact/coalesce × ledger."""
+    vals = set()
+    for mode in ("classic", "exact", "coalesce"):
+        for led in ("on", "off"):
+            cluster = Cluster(4, noc=NocConfig(fabric_mode=mode,
+                                               fabric_ledger=led, **SMALL),
+                              topology="ring")
+            r = simulate_collective(C.direct_all_to_all(4, 8192, 2, "put"),
+                                    cluster=cluster, unroll=8)
+            assert cluster.fabric.order_violations == 0
+            vals.add((r.time_ns, tuple(r.per_rank_done_ns)))
+    assert len(vals) == 1, f"tie-break must make all modes agree: {vals}"
 
 
 @pytest.mark.parametrize("gen,args", [
