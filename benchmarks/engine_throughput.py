@@ -13,12 +13,14 @@ BENCH_engine.json`` with events, wall time, events/s and simulated-ns per
 wall-second so the perf trajectory is visible across PRs.
 
 Run:  PYTHONPATH=src python benchmarks/engine_throughput.py [--quick]
+      [--profile]   (cProfile the default-mode run, print top 25 by cumtime)
 """
 
 from __future__ import annotations
 
 import json
 import os
+import statistics
 import sys
 import time
 
@@ -45,14 +47,15 @@ PROTOCOL = "put"
 SEED_BASELINE = {"events": 9_864_416, "wall_s": 23.32}
 
 
-#: wall-clock trials per mode; the minimum is reported (the CI boxes run
-#: shared-CPU, so single samples swing by 30%; sim results are identical
-#: across trials and asserted so)
-WALL_TRIALS = 2
+#: wall-clock trials per mode; min and median are both reported (the CI
+#: boxes run shared-CPU, so single samples swing by 30% — the median is
+#: what the smoke test gates on; sim results are identical across trials
+#: and asserted so)
+WALL_TRIALS = 3
 
 
 def run_mode(mode: str, size: int, bulk: str = "on", ledger: str = "on"):
-    wall = None
+    walls = []
     sims = set()
     for _ in range(WALL_TRIALS):
         cluster = Cluster(NRANKS, noc=NocConfig(fabric_mode=mode,
@@ -61,10 +64,11 @@ def run_mode(mode: str, size: int, bulk: str = "on", ledger: str = "on"):
         t0 = time.perf_counter()
         r = simulate_collective(C.ring_all_reduce(NRANKS, size, NWG,
                                                   PROTOCOL), cluster=cluster)
-        trial = time.perf_counter() - t0
-        wall = trial if wall is None else min(wall, trial)
+        walls.append(time.perf_counter() - t0)
         sims.add((r.time_ns, r.events, cluster.fabric.order_violations))
     assert len(sims) == 1, f"trials disagree on sim results: {sims}"
+    wall = min(walls)
+    med = statistics.median(walls)
     return {
         "mode": mode,
         "bulk_emission": bulk,
@@ -73,18 +77,41 @@ def run_mode(mode: str, size: int, bulk: str = "on", ledger: str = "on"):
         "per_rank_done_ns": r.per_rank_done_ns,
         "events": r.events,
         "wall_s": round(wall, 3),
+        "wall_median_s": round(med, 3),
+        "wall_stddev_s": round(statistics.stdev(walls), 3)
+        if len(walls) > 1 else 0.0,
         "wall_trials": WALL_TRIALS,
         "events_per_s": round(r.events / wall) if wall > 0 else None,
         "sim_ns_per_wall_s": round(r.time_ns / wall) if wall > 0 else None,
         "order_violations": cluster.fabric.order_violations,
+        "ledger": cluster.fabric.ledger_counters(),
     }
+
+
+def profile_run(size: int) -> None:
+    """cProfile one default-mode simulation; print the top 25 by cumtime."""
+    import cProfile
+    import pstats
+
+    cluster = Cluster(NRANKS, noc=NocConfig())
+    wl = C.ring_all_reduce(NRANKS, size, NWG, PROTOCOL)
+    prof = cProfile.Profile()
+    prof.enable()
+    simulate_collective(wl, cluster=cluster)
+    prof.disable()
+    pstats.Stats(prof).sort_stats("cumulative").print_stats(25)
+    print(json.dumps(cluster.fabric.ledger_counters(), indent=1))
 
 
 def main() -> None:
     size = SIZE if "--quick" not in sys.argv else SIZE // 8
+    if "--profile" in sys.argv:
+        profile_run(size)
+        return
     rows = {m: run_mode(m, size) for m in ("classic", "exact", "coalesce")}
     rows["coalesce_bulk_off"] = run_mode("coalesce", size, bulk="off")
     rows["coalesce_ledger_off"] = run_mode("coalesce", size, ledger="off")
+    rows["coalesce_ledger_auto"] = run_mode("coalesce", size, ledger="auto")
     rows["exact_ledger_off"] = run_mode("exact", size, ledger="off")
 
     # ---- correctness gates ------------------------------------------------
@@ -107,6 +134,11 @@ def main() -> None:
         "reservation ledgers must be timing-neutral"
     assert noled["per_rank_done_ns"] == coal["per_rank_done_ns"]
     assert noled["order_violations"] == 0 and noled_ex["order_violations"] == 0
+    auto = rows["coalesce_ledger_auto"]
+    assert auto["time_ns"] == coal["time_ns"], \
+        "the adaptive per-link probe policy must be timing-neutral"
+    assert auto["per_rank_done_ns"] == coal["per_rank_done_ns"]
+    assert auto["order_violations"] == 0
     assert coal["events"] < noled["events"], \
         "ledger chaining must strictly reduce heap events"
 

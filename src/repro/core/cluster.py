@@ -21,7 +21,6 @@ from heapq import heappush as _heappush
 from .engine import Engine
 from .gpu_model import GpuConfig, GpuModel, WRequest
 from .instructions import LOAD, SEM_RELEASE, STORE
-from .network import fabric as _fabric
 from .network.fabric import CONTROL, DATA, EndpointSource, Fabric, Flight
 from .workload import Kernel
 
@@ -44,8 +43,11 @@ class NocConfig:
     fabric_mode: str = "coalesce"         # "coalesce" | "exact" | "classic"
     coalesce_window_ns: Optional[float] = None   # None -> fabric default
     bulk_emission: str = "on"             # "on" | "off" (batched CU streaks)
-    fabric_ledger: str = "on"             # "on" | "off" (per-link reservation
-                                          # ledgers / channel clocks)
+    fabric_ledger: str = "on"             # "on" | "off" | "auto" (per-link
+                                          # reservation ledgers / channel
+                                          # clocks; auto = on, with per-link
+                                          # probe kill switches)
+    ledger_depth: int = 4                 # channel-clock recursion budget
 
     @property
     def num_cus(self) -> int:
@@ -71,8 +73,9 @@ class Cluster:
         self.fabric = Fabric(self.engine, default_policy=self.noc.arbitration,
                              mode=self.noc.fabric_mode,
                              coalesce_window_ns=self.noc.coalesce_window_ns,
-                             ledger=self.noc.fabric_ledger != "off",
-                             min_msg_bytes=cfg.header_bytes)
+                             ledger=self.noc.fabric_ledger,
+                             min_msg_bytes=cfg.header_bytes,
+                             ledger_depth=self.noc.ledger_depth)
         # lookahead regions, one per GPU: every link is tagged with the
         # region whose events admit traffic onto it (on-chip links and the
         # GPU's outbound scale-up side), so a region's horizon provably
@@ -251,6 +254,9 @@ class Cluster:
                     cu.resptab[dst.gid] = (period, resp_routes)
         if self.fabric.ledger:
             self._wire_ledger()
+            # census final: compile the static feeder-cone transit floors
+            # the clock kernel short-circuits on (fabric.ledger_tables)
+            self.fabric.build_transit_tables()
 
     def _wire_ledger(self) -> None:
         """Install injection sources and delivery sinks (see warm_routes)."""
@@ -329,7 +335,7 @@ class Cluster:
         req.on_arrive = self._arrive_at_memory
         if at_ps is None:
             at_ps = self.engine._now_ps
-        if req.gpu != req.cu.gpu.gid and _fabric._BATCH:
+        if req.gpu != req.cu.gpu.gid and self.engine._batch:
             # cross-GPU requests ride multipath via-routes, which can
             # reconverge with this batch's later (differently-keyed)
             # issues — the same-source FIFO argument behind mid-batch
@@ -339,17 +345,17 @@ class Cluster:
         else:
             self.fabric.send_flight_at(req, at_ps, chain=True)
 
-    @staticmethod
-    def _chain_ledger_only(send, *args) -> None:
+    def _chain_ledger_only(self, send, *args) -> None:
         """Run one chained injection with horizon proofs disabled (see
-        fabric._NO_HZ): used for every walk folded into a CU batch whose
+        Engine._no_hz): used for every walk folded into a CU batch whose
         traffic is not same-source-FIFO against the batch's later issues."""
-        prev = _fabric._NO_HZ
-        _fabric._NO_HZ = True
+        eng = self.engine
+        prev = eng._no_hz
+        eng._no_hz = True
         try:
             send(*args, chain=True)
         finally:
-            _fabric._NO_HZ = prev
+            eng._no_hz = prev
 
     def send_request_bulk(self, cu, wf, n: int, t0_ps: int) -> None:
         """Emit ``n`` lines of ``wf``'s load/store streak in one batch.
@@ -407,7 +413,7 @@ class Cluster:
         """Inject one bulk request train, ledger-only when it is a
         cross-GPU via-route chained from inside a batch (see
         send_request)."""
-        if group[0].gpu != src_gid and _fabric._BATCH:
+        if group[0].gpu != src_gid and self.engine._batch:
             self._chain_ledger_only(self.fabric.inject_train, route, group,
                                     ats)
         else:
@@ -438,6 +444,9 @@ class Cluster:
                 home = self.gpus[req.gpu]
                 bump_ps = eta + self._hbm_lat_ps
                 _heappush(home._sem_floor, bump_ps)
+                # a new sem-floor entry can undercut a cached ledger bound
+                # proven before this release was visible
+                self.engine._led_gen += 1
                 self.engine.schedule_abs_ps(bump_ps, home.sem_bump, req.addr,
                                             region=self.regions[req.gpu])
             req.size = self._hdr       # STORE ack / SEM value response
@@ -454,7 +463,7 @@ class Cluster:
         req.hop = 0
         req.eager = False
         req.on_arrive = req.cu.complete
-        if _fabric._BATCH:
+        if self.engine._batch:
             # folded into an in-progress CU issue batch: the batch's own
             # future issues are invisible to region horizons, so this
             # response walk must chain on ledger evidence alone

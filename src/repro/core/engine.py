@@ -39,7 +39,9 @@ class Engine:
     """
 
     __slots__ = ("_queue", "_now_ps", "_seq", "events_processed", "_running",
-                 "_wall_start", "_rheaps", "_regioned")
+                 "_wall_start", "_rheaps", "_regioned",
+                 "_batch", "_no_hz", "_led_gen",
+                 "led_depth", "led_hits", "led_hist")
 
     def __init__(self) -> None:
         # (tick, key, seq, fn, args, region)
@@ -55,6 +57,26 @@ class Engine:
         # new_region() (coarse/analytic tiers) skip the mirror bookkeeping.
         self._rheaps: List[List[int]] = [[]]
         self._regioned = False
+        # ---- reservation-ledger state (owned per engine so two clusters
+        # simulated in one process can never cross-pollute memos) ----------
+        # _batch: a CU issue batch is on the stack (ComputeUnit._tick); its
+        # future virtual issues leave no pending heap event, so region-
+        # horizon proofs are blind to them.  _no_hz: every ahead-of-time
+        # commit must be justified by ledger evidence alone (response
+        # chains folded into a batch; see fabric module docstring).
+        self._batch = False
+        self._no_hz = False
+        # ledger cache generation: cross-event channel-clock values are
+        # valid while this stays unchanged.  Bumped by the rare actions
+        # that can lower an already-proven ledger bound from outside the
+        # monitored channels: untagged (region-0) event pushes, semaphore-
+        # floor pushes, kernel dispatches, and census/wiring changes.
+        self._led_gen = 0
+        # channel-clock recursion depth budget (Fabric overrides from
+        # NocConfig.ledger_depth) and probe observability counters
+        self.led_depth = 4
+        self.led_hits = 0               # cross-event validity-window hits
+        self.led_hist = [0] * 17        # ledger evaluations by depth
 
     # ------------------------------------------------------------------ time
     @property
@@ -69,6 +91,7 @@ class Engine:
     # ------------------------------------------------------------- scheduling
     def new_region(self) -> int:
         """Allocate a lookahead region id (see module docstring)."""
+        self._led_gen += 1
         if not self._regioned:
             self._regioned = True
             # backfill the untagged mirror with already-pending events
@@ -81,8 +104,15 @@ class Engine:
               region: int, key: int = 0) -> None:
         heapq.heappush(self._queue, (at_ps, key, self._seq, fn, args, region))
         self._seq += 1
-        if self._regioned:
-            heapq.heappush(self._rheaps[region], at_ps)
+        if region:
+            if self._regioned:
+                heapq.heappush(self._rheaps[region], at_ps)
+        else:
+            # untagged events are the ledger's escape hatch (see
+            # untagged_floor_ps): a new one may undercut any proven bound
+            self._led_gen += 1
+            if self._regioned:
+                heapq.heappush(self._rheaps[0], at_ps)
 
     def schedule(self, delay_ns: float, fn: Callable[..., None], *args: Any,
                  region: int = 0, key: int = 0) -> None:
@@ -108,8 +138,13 @@ class Engine:
             raise ValueError(f"cannot schedule in the past: {at_ps} < {self._now_ps}")
         heapq.heappush(self._queue, (at_ps, key, self._seq, fn, args, region))
         self._seq += 1
-        if self._regioned:
-            heapq.heappush(self._rheaps[region], at_ps)
+        if region:
+            if self._regioned:
+                heapq.heappush(self._rheaps[region], at_ps)
+        else:
+            self._led_gen += 1
+            if self._regioned:
+                heapq.heappush(self._rheaps[0], at_ps)
 
     def peek_ps(self) -> Optional[int]:
         """Timestamp of the earliest pending event, or None if idle.

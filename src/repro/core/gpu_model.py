@@ -33,7 +33,7 @@ from .instructions import (LOAD, REDUCE, SEM_ACQUIRE, SEM_RELEASE, STORE,
                            WAITCNT)
 from .operations import OpContext
 from .network import fabric as _fabric
-from .network.fabric import (Fabric, Flight, InjectionSource, LEDGER_DEPTH,
+from .network.fabric import (Fabric, Flight, InjectionSource, _clock_eval,
                              _clock_ge)
 from .workload import Kernel, WavefrontState, Workgroup
 
@@ -199,9 +199,10 @@ class ComputeUnit(InjectionSource):
                                         region=self.gpu.region)
 
     # ------------------------------------------------- ledger (fabric hook)
-    def inj_ge(self, need: int, depth: int) -> bool:
-        """No new message can leave this CU before ``need`` (see
-        :class:`repro.core.network.fabric.InjectionSource`).
+    def inj_pair(self, need: int, depth: int) -> Tuple[int, int]:
+        """Earliest tick a *new* message can leave this CU, in both clock
+        grades (see :class:`repro.core.network.fabric.InjectionSource`);
+        ``(-1, -1)`` when ``need`` cannot be proven.
 
         The CU can only inject from an issue scan, and every way a scan can
         start before ``need`` is visible here: its scheduled tick and the
@@ -211,32 +212,58 @@ class ComputeUnit(InjectionSource):
         responses not yet committed must still cross this CU's inbound
         links (their channel clocks).  Barrier-parked CUs and CUs that
         could receive fresh workgroups can be woken by arbitrary sibling
-        events, and a CU mid-scan is issuing right now — both refuse.
+        events, and a CU mid-scan is issuing right now — those answer
+        ``now`` (refuted for any future ``need``, and never worth caching).
+        Cross-event soundness of the heap/floor terms rides the engine's
+        ledger generation: semaphore-floor pushes, kernel dispatches and
+        untagged events all bump it, and sink pushes are committed
+        deliveries the inbound-link clocks already bounded.
         """
         gpu = self.gpu
         eng = gpu.engine
         now = eng._now_ps
+        if self._ticking or self._ext_risk or self._remote_sem:
+            return now, now
+        if len(self.resident) < gpu.config.max_wg_per_cu and \
+                (gpu._has_pending or not gpu.cluster.sealed):
+            return now, now
+        v = _FAR
         h = self._wake_heap
         while h and h[0] < now:
             _heappop(h)
-        if h and h[0] < need:
-            return False
-        if self._ticking or self._ext_risk or self._remote_sem:
-            return False
-        if len(self.resident) < gpu.config.max_wg_per_cu and \
-                (gpu._has_pending or not gpu.cluster.sealed):
-            return False
+        if h and h[0] < v:
+            v = h[0]
         sf = gpu._sem_floor
         while sf and sf[0] < now:
             _heappop(sf)
-        if sf and sf[0] < need:
-            return False
-        if eng.untagged_floor_ps() < need:
-            return False
+        if sf and sf[0] < v:
+            v = sf[0]
+        u = eng.untagged_floor_ps()
+        if u < v:
+            v = u
+        if v < need:
+            return -1, -1
+        vl = va = v
+        gen = eng._led_gen
+        ep = eng.events_processed
+        no_hz = eng._no_hz
+        d1 = depth - 1
         for l in self.in_links:
-            if not _clock_ge(l, need, depth - 1):
-                return False
-        return True
+            if l._geL_g == gen and need <= l._geL_v:
+                eng.led_hits += 1
+                fl = fa = l._geL_v
+            else:
+                fl, fa = _clock_eval(l, need, d1, eng, ep, now, no_hz, gen)
+                if fa < need:
+                    return -1, -1
+            if fl < vl:
+                vl = fl
+            if fa < va:
+                va = fa
+        return vl, va
+
+    def inj_ge(self, need: int, depth: int) -> bool:
+        return self.inj_pair(need, depth)[1] >= need
 
     # ----------------------------------------------------------------- tick
     def _tick(self) -> None:
@@ -304,16 +331,16 @@ class ComputeUnit(InjectionSource):
         self._ticking = True
         # the batch issues at future virtual ticks that no pending heap
         # event reflects: response chains folded into this batch's request
-        # walks must rely on ledger evidence alone (fabric._BATCH).  A
+        # walks must rely on ledger evidence alone (Engine._batch).  A
         # *nested* batch (a barrier release inline-waking a sibling CU from
         # the arriving CU's scan) is a second concurrent issuer the horizon
         # is equally blind to — its request chains drop horizon proofs too
         # (the outer CU's injection source refuses via ``_ticking``).
-        batch_prev = _fabric._BATCH
-        nohz_prev = _fabric._NO_HZ
-        _fabric._BATCH = True
+        batch_prev = eng._batch
+        nohz_prev = eng._no_hz
+        eng._batch = True
         if batch_prev:
-            _fabric._NO_HZ = True
+            eng._no_hz = True
         try:
             while True:
                 self._wake_again = False
@@ -343,8 +370,8 @@ class ComputeUnit(InjectionSource):
                 t_ps = nt
         finally:
             self._ticking = False
-            _fabric._BATCH = batch_prev
-            _fabric._NO_HZ = nohz_prev
+            eng._batch = batch_prev
+            eng._no_hz = nohz_prev
 
     def _issue_floor_ge(self, need: int) -> bool:
         """True iff provably nothing can change this CU's issue decisions
@@ -370,8 +397,9 @@ class ComputeUnit(InjectionSource):
             return False
         if eng.untagged_floor_ps() < need:
             return False
+        depth = eng.led_depth
         for l in self.in_links:
-            if not _clock_ge(l, need, LEDGER_DEPTH):
+            if not _clock_ge(l, need, depth):
                 return False
         return True
 
@@ -617,6 +645,9 @@ class GpuModel:
 
     # --------------------------------------------------------------- dispatch
     def dispatch(self, kernel: Kernel) -> None:
+        # direct dispatch between runs schedules tagged tick events no
+        # cached cross-event clock value could have seen: new generation
+        self.engine._led_gen += 1
         kx = _KernelExec(kernel)
         kernel.start_ns = self.engine.now
         self._kernels[kernel.kid] = kx

@@ -77,6 +77,37 @@ every interior hop (and across region boundaries) in one heap event, roughly
 one event per flight leg instead of one per hop.  The per-link FIFO monitor
 (``order_violations``) still certifies every run: zero violations means the
 schedule is bit-identical to the classic arrival order.
+
+The compiled clock kernel (ISSUE 6)
+-----------------------------------
+
+The clock query is *value-returning* (:func:`_clock_eval`): instead of a
+boolean proof it computes the clock bound itself, in two grades —
+``v_ledger``, assembled purely from the deterministic future schedule and
+therefore valid *across* events while ``Engine._led_gen`` stands still
+(cached per link in ``_geL_g``/``_geL_v``), and ``v_assisted``, which
+additionally rides the per-event region horizon (memoized per event in
+``_ge_e``/``_ge_v``).  Callers pre-check the generation cache and thread
+the engine context (epoch, now, mid-batch flag, generation) through the
+recursion, and the region horizon is recomputed inline from two heap
+peeks rather than memoized.
+
+:mod:`.ledger_tables` builds **static transit tables** at route-warming
+time: a vectorized (numpy, optionally jitted JAX) Bellman-Ford over the
+feeder census yields each link's minimum cone transit, letting small-
+margin queries accept with one integer compare instead of a cone walk.
+
+Everything above is bit-exact by construction.  The remaining cost knob
+is *which probes to attempt*, and refusing a probe is always sound (the
+train just parks), which legitimizes two heuristics: exponential
+**failure backoff** per link (a refuted full evaluation suppresses the
+next ``_bko`` probes, any success resets it), and the
+``fabric_ledger="auto"`` policy, which disables proof search entirely on
+links whose measured success rate cannot pay for the walks
+(:func:`_probe`).  On saturated workloads (the tracked ring all-reduce)
+the proof search still costs more CPython time than the parks it saves —
+``results/BENCH_engine.json`` tracks probes, chained legs, cache hit
+rates and the depth histogram per mode so the trade stays visible.
 """
 
 from __future__ import annotations
@@ -99,46 +130,60 @@ _NS_PER_PS = 0.001
 
 _FAR = 1 << 62                  # "no bound" sentinel tick
 
-#: channel-clock recursion depth: how many feeder levels upstream the clock
-#: query walks before falling back to the region horizon.  Each level adds
-#: at least one link latency of lookahead; routes are short, so a small
-#: depth captures nearly all of the win at bounded query cost.
+#: default channel-clock recursion depth (``NocConfig.ledger_depth`` /
+#: ``Fabric(ledger_depth=...)`` override it per engine): how many feeder
+#: levels upstream the clock query walks before falling back to the region
+#: horizon.  Each level adds at least one link latency of lookahead; routes
+#: are short, so a small depth captures nearly all of the win at bounded
+#: query cost.
 LEDGER_DEPTH = 4
 
+#: auto-policy hysteresis: a link's proof search is disabled once it has
+#: failed this many top-level probes with fewer than a third of them
+#: succeeding (``fabric_ledger="auto"``; parks still record reservations,
+#: so other links' clocks stay sound).  The threshold is a measured
+#: break-even: in CPython a park costs ~2 heap ops while a refuted proof
+#: walk costs several times that, so links that mostly refuse are a net
+#: loss even with failure backoff
+_AUTO_MIN_FAILS = 128
 
-#: _BATCH is True while a CU issue batch is on the stack (set by
-#: ComputeUnit._tick).  A batch issues at *future virtual* ticks that leave
-#: no pending heap event, so region-horizon proofs are blind to the batch's
-#: own upcoming traffic.  The batch's future *requests* stay safe anyway —
-#: same-source flights ride one BFS tree and are FIFO-behind on every
-#: shared link — but its future *responses* turn at independent memory
-#: endpoints and can reconverge: a later-issued request to a nearer
-#: endpoint produces an earlier arrival than a response already committed
-#: ahead under the horizon.  Response chains spawned mid-batch therefore
-#: run with _NO_HZ set: every ahead-of-time commit must be justified by
-#: ledger evidence alone (reservations, feeder ``_free_ps`` floors, and
-#: injection sources, which refuse for the mid-batch CU via ``_ticking``).
-_BATCH = False
-_NO_HZ = False
+#: failure-backoff ceiling: at most this many consecutive probes are
+#: skipped on a link after refuted evaluations (see _probe)
+_BKO_CAP = 32
 
-#: region-horizon memo for _clock_ge: (region, guard) -> horizon tick,
-#: valid for one (engine, event, push-count) snapshot — any scheduled event
-#: can lower a horizon, so the tag includes the engine's sequence counter
-_HZ: Dict[Tuple[int, int], int] = {}
-_HZ_TAG = (0, 0, 0)
+# The batch flags (a CU issue batch on the stack blinds region-horizon
+# proofs to the batch's own upcoming traffic; see Engine) live on the
+# Engine instance (``_batch``/``_no_hz``), so two clusters simulated in
+# one process can never cross-pollute state or inherit a stale mid-batch
+# flag.  Clock queries recompute the region horizon inline from the heap
+# tops (two peeks) rather than memoizing it — the memo dict cost more
+# than the peeks.
 
 
 class InjectionSource:
     """Interface for a route-head link's injection-bound provider.
 
-    ``inj_ge(need, depth)`` answers "is it provable that this injector puts
-    no *new* (not yet committed) message onto the link before tick
-    ``need``?".  ``depth`` is the remaining channel-clock recursion budget
-    for providers that consult upstream links.  Must be conservative:
-    ``False`` when unsure.
+    ``inj_pair(need, depth)`` returns ``(v_ledger, v_assisted)`` lower
+    bounds on the earliest tick this injector can put a *new* (not yet
+    committed) message onto the link — the two proof grades of
+    :func:`_clock_eval` — or ``(-1, -1)`` when it cannot prove ``need``
+    (``v_assisted >= need`` is the success criterion; partial values of a
+    refuted query must not be used).  ``depth`` is the remaining
+    channel-clock recursion budget for providers that consult upstream
+    links.  Must be conservative.
+
+    Sources that can only answer the historical threshold query may
+    implement ``inj_ge(need, depth) -> bool`` instead and inherit the
+    adapter below: a ``True`` is treated as per-event (assisted-grade)
+    evidence and never cached across events.
     """
 
     __slots__ = ()
+
+    def inj_pair(self, need: int, depth: int) -> Tuple[int, int]:
+        if self.inj_ge(need, depth):
+            return 0, need
+        return -1, -1
 
     def inj_ge(self, need: int, depth: int) -> bool:  # pragma: no cover
         raise NotImplementedError
@@ -160,12 +205,38 @@ class EndpointSource(InjectionSource):
         self.in_links = in_links
         self.lat_ps = lat_ps
 
+    def inj_pair(self, need: int, depth: int) -> Tuple[int, int]:
+        lat = self.lat_ps
+        t = need - lat
+        vl = va = _FAR
+        links = self.in_links
+        if links:
+            eng = links[0].engine
+            gen = eng._led_gen
+            ep = eng.events_processed
+            now = eng._now_ps
+            no_hz = eng._no_hz
+            d1 = depth - 1
+            for l in links:
+                if l._geL_g == gen and t <= l._geL_v:
+                    eng.led_hits += 1
+                    fl = fa = l._geL_v
+                else:
+                    fl, fa = _clock_eval(l, t, d1, eng, ep, now, no_hz, gen)
+                    if fa < t:
+                        return -1, -1
+                if fl < vl:
+                    vl = fl
+                if fa < va:
+                    va = fa
+        if vl < _FAR:
+            vl += lat
+        if va < _FAR:
+            va += lat
+        return vl, va
+
     def inj_ge(self, need: int, depth: int) -> bool:
-        t = need - self.lat_ps
-        for l in self.in_links:
-            if not _clock_ge(l, t, depth - 1):
-                return False
-        return True
+        return self.inj_pair(need, depth)[1] >= need
 
 
 class Route(list):
@@ -244,14 +315,17 @@ class Link:
                  "_tails", "_win_ps", "_last_arr_ps", "order_violations",
                  "region", "_rguard_ps", "_sole_feed",
                  "led", "_feeders", "_inj_fed", "_inj_src", "_sink",
-                 "_resv", "_xfer_lb", "_ge_e", "_ge_v", "_geL_e", "_geL_v",
-                 "_lt_e", "_lt_v", "_busy_e")
+                 "_resv", "_xfer_lb", "_ge_e", "_ge_v", "_geL_g", "_geL_v",
+                 "_lt_e", "_lt_v", "_ltr_v", "_ltr_u", "_busy_e",
+                 "_static_lb", "_auto", "_probe_on", "_probe_ok",
+                 "_probe_fail", "_bko", "_skip")
 
     def __init__(self, engine: Engine, name: str, bandwidth_GBps: float,
                  latency_ns: float, policy: str = "fifo",
                  min_ser_ns: float = 0.0, mode: str = MODE_COALESCE,
                  coalesce_window_ns: float = 0.0, region: int = 0,
-                 ledger: bool = True, min_msg_bytes: int = 0):
+                 ledger: bool = True, min_msg_bytes: int = 0,
+                 auto: bool = False):
         self.name = name
         self.bw = bandwidth_GBps  # GB/s == bytes/ns
         self.lat_ns = latency_ns
@@ -294,16 +368,36 @@ class Link:
         # minimum transit through this link's server for a future message:
         # smallest possible serialization plus propagation
         self._xfer_lb = self._ser_ps(min_msg_bytes) + self._lat_ps
-        # channel-clock memo, two-sided, valid for one event epoch:
-        # clock >= _ge_v proven (horizon-assisted grade), clock >= _geL_v
-        # proven (ledger-only grade), clock < refuted for need >= _lt_v
+        # channel-clock caches, two-sided (see _clock_pair): clock >= _ge_v
+        # proven for the current event (horizon-assisted grade, tagged by
+        # event epoch _ge_e); clock >= _geL_v proven eternally (ledger-only
+        # grade, tagged by ledger generation _geL_g — valid across events
+        # until the generation bumps); clock < refuted for need >= _lt_v
+        # this event, and for need >= _ltr_v while now <= _ltr_u (a parked
+        # reservation witnessed at tick _ltr_u cannot fire earlier)
         self._ge_e = -1
         self._ge_v = 0
-        self._geL_e = -1
+        self._geL_g = -1
         self._geL_v = 0
         self._lt_e = -1
         self._lt_v = 0
+        self._ltr_v = 0
+        self._ltr_u = -1
         self._busy_e = -1                 # cycle guard for the recursion
+        # static feeder-cone transit floor (Fabric.build_transit_tables);
+        # 0 = not built / no static guarantee
+        self._static_lb = 0
+        # fabric_ledger="auto" policy: top-level probe outcome counters,
+        # and the per-link kill switch they drive (see _probe)
+        self._auto = auto
+        self._probe_on = True
+        self._probe_ok = 0
+        self._probe_fail = 0
+        # failure backoff: after a full-evaluation refusal, skip the next
+        # ``_bko`` probes outright (a skipped probe just parks — always
+        # timing-sound) so a hot cone is not re-walked on every train
+        self._bko = 0
+        self._skip = 0
 
     @property
     def busy_ns(self) -> float:
@@ -386,6 +480,8 @@ class Link:
                 nlink = route[nxt]
                 if nlink.led:
                     _heappush(nlink._resv, next_at)
+                    if next_at < nlink._geL_v:
+                        nlink._geL_v = next_at
                 reg1 = nlink.region
             else:
                 last = route[-1]
@@ -437,127 +533,272 @@ class Link:
 
 def _clock_ge(link: "Link", need: int, depth: int) -> bool:
     """Channel-clock threshold query: True iff no not-yet-committed traffic
-    can arrive at ``link``'s input queue before tick ``need`` (module
-    docstring, "reservation ledgers").
-
-    Evaluated as a proof search rather than a value so that the common
-    cases stay cheap: a busy feeder whose ``_free_ps`` already clears the
-    threshold never recurses, the first refuting candidate exits the whole
-    query, and both outcomes memoize for the duration of the current
-    engine event (``_free_ps`` and the engine clock only advance, so an
-    earlier proof in the same event stays sound and an earlier refutation
-    stays conservative).  Two proof grades share the memo: ledger-only
-    proofs (``_geL``) are true statements about the deterministic future
-    schedule and any query may trust them; horizon-assisted proofs
-    (``_ge``) made inside a CU batch are commit justifications contingent
-    on same-source FIFO, so ledger-only (``_NO_HZ``) queries ignore them
-    (outside a batch the two grades coincide).  Cycles in the feeder
-    census refute conservatively via the ``_busy_e`` guard.
-    """
+    can arrive at ``link``'s input queue before tick ``need``.  Thin
+    boolean wrapper over :func:`_clock_pair`, the value-returning kernel."""
     eng = link.engine
-    ep = eng.events_processed
-    if link._geL_e == ep and need <= link._geL_v:
+    if link._geL_g == eng._led_gen and need <= link._geL_v:
+        eng.led_hits += 1
         return True
-    if not _NO_HZ and link._ge_e == ep and need <= link._ge_v:
+    return _clock_pair(link, need, depth)[1] >= need
+
+
+def _clock_pair(link: "Link", need: int, depth: int) -> Tuple[int, int]:
+    """Value-returning channel-clock query (gen-cache fast path plus one
+    context load, then :func:`_clock_eval`)."""
+    eng = link.engine
+    gen = eng._led_gen
+    if link._geL_g == gen and need <= link._geL_v:
+        eng.led_hits += 1
+        v = link._geL_v
+        return v, v
+    return _clock_eval(link, need, depth, eng, eng.events_processed,
+                       eng._now_ps, eng._no_hz, gen)
+
+
+def _probe(link: "Link", need: int, eng: Engine) -> bool:
+    """Top-level commit-check probe: the boolean clock query plus the
+    failure backoff and the per-link hit/miss counters that feed
+    :meth:`Fabric.ledger_counters` and the ``fabric_ledger="auto"``
+    policy (``Link._probe_on``).
+
+    Refusing without evaluating is always timing-sound — the caller just
+    parks — so after a refuted full evaluation the link skips the next
+    ``_bko`` probes (exponential, capped): a saturated cone refutes every
+    train passing through, and walking it each time is the single largest
+    proof cost.  A cached eternal value still answers instantly, and any
+    successful evaluation resets the backoff."""
+    if link._geL_g == eng._led_gen and need <= link._geL_v:
+        eng.led_hits += 1
+        link._probe_ok += 1
         return True
-    if link._lt_e == ep and need >= link._lt_v:
+    s = link._skip
+    if s:
+        link._skip = s - 1
+        link._probe_fail += 1
         return False
-    if link._busy_e == ep:
-        return False                # feeder cycle: refuse, do not memoize
-    if need <= eng._now_ps:
-        # any future arrival happens at the tick of some event >= now
-        link._geL_e = ep
-        link._geL_v = need
+    if _clock_eval(link, need, eng.led_depth, eng, eng.events_processed,
+                   eng._now_ps, eng._no_hz, eng._led_gen)[1] >= need:
+        link._probe_ok += 1
+        link._bko = 0
         return True
-    ok = False
-    if not _NO_HZ:
-        # region horizon: sound without looking at any neighbor (but blind
-        # to an in-progress CU batch's own future issues — see _NO_HZ)
-        global _HZ_TAG
-        tag = (id(eng), ep, eng._seq)
-        if _HZ_TAG != tag:
-            _HZ.clear()
-            _HZ_TAG = tag
-        key = (link.region, link._rguard_ps)
-        b = _HZ.get(key, 0)
-        if b == 0:
-            b = eng.horizon_ps(link.region, link._rguard_ps)
-            _HZ[key] = b if b is not None else _FAR
-        if b is None or need <= b:
-            ok = True
-    if not ok and depth > 0:
-        link._busy_e = ep
-        ok = _clock_ge_ledger(link, need, depth)
-        link._busy_e = -1
-        if ok and _NO_HZ:
-            if link._geL_e == ep:
-                if need > link._geL_v:
-                    link._geL_v = need
-            else:
-                link._geL_e = ep
-                link._geL_v = need
-            return True
-    if ok:
-        if link._ge_e == ep:
-            if need > link._ge_v:
-                link._ge_v = need
+    b = link._bko
+    link._skip = link._bko = (b + b) if 0 < b < _BKO_CAP else (b or 1)
+    pf = link._probe_fail + 1
+    link._probe_fail = pf
+    if link._auto and pf >= _AUTO_MIN_FAILS and link._probe_ok << 1 < pf:
+        # proof search on this link almost never pays: stop probing (parks
+        # still record reservations, so other links' clocks stay sound)
+        link._probe_on = False
+    return False
+
+
+def _clock_eval(link: "Link", need: int, depth: int, eng: Engine, ep: int,
+                now: int, no_hz: bool, gen: int) -> Tuple[int, int]:
+    """Value-returning channel-clock query (module docstring, "reservation
+    ledgers"): lower bounds on the earliest tick at which not-yet-committed
+    traffic could arrive at ``link``'s input queue, as a pair
+    ``(v_ledger, v_assisted)``.
+
+    ``v_ledger`` is assembled purely from the deterministic future
+    schedule — reservations, feeder ``_free_ps`` floors, injection
+    sources, minimum transit — and is *eternal*: the monitored channels
+    only raise it (``_free_ps`` and the clock are monotone, reservations
+    are arrivals the bound already covers), and every unmonitored action
+    that could lower it bumps ``Engine._led_gen`` (untagged event pushes,
+    semaphore-floor pushes, kernel dispatches, census/wiring changes).
+    It is therefore cached on the link tagged with that generation
+    (``_geL_g``/``_geL_v``): a quiet link answers thousands of probes
+    across many events from one cached integer.
+
+    ``v_assisted`` additionally uses the region lookahead horizon, which
+    is contingent on the current event's pending queue: per-event
+    validity only (``_ge_e``/``_ge_v``).  Mid-batch (``Engine._no_hz``)
+    queries see no horizon contribution, so for them the two grades
+    coincide — except injection sources that can only answer per-event,
+    whose evidence deliberately stays out of the eternal grade.
+
+    A query *succeeds* iff ``v_assisted >= need``.  On failure the search
+    exits at the first refuting term and returns ``(-1, -1)`` — the
+    partial values are meaningless and are never cached.  Refutations
+    memoize per event (``_lt``); a refuting reservation additionally
+    memoizes *across* events until its tick has passed (``_ltr``: the
+    parked train it witnesses cannot fire earlier, and refuting more than
+    necessary only costs a park, never timing).  Cycles in the feeder
+    census refute conservatively via the ``_busy_e`` guard.
+
+    Callers pre-check the generation cache and pass the engine context
+    (event epoch, now, mid-batch flag, ledger generation) down the
+    recursion, so the hot kernel re-loads nothing.
+    """
+    if need <= now:
+        # any future arrival happens at the tick of some event >= now
+        return now, now
+    if not no_hz and link._ge_e == ep and need <= link._ge_v:
+        return now, link._ge_v
+    if link._lt_e == ep and need >= link._lt_v:
+        return -1, -1
+    if need >= link._ltr_v and now <= link._ltr_u:
+        return -1, -1               # cross-event reservation witness
+    if link._busy_e == ep:
+        return -1, -1               # feeder cycle: refuse, do not memoize
+    h = -1
+    if not no_hz:
+        # region horizon, inlined (Engine.horizon_ps): sound without
+        # looking at any neighbor (but blind to an in-progress CU batch's
+        # own future issues — see Engine)
+        q = eng._queue
+        reg = link.region
+        if reg and eng._regioned:
+            rheaps = eng._rheaps
+            r = rheaps[reg]
+            g = rheaps[0]
+            b = r[0] if r else None
+            if g and (b is None or g[0] < b):
+                b = g[0]
+            if q:
+                cap = q[0][0] + link._rguard_ps
+                if b is None or cap < b:
+                    b = cap
+            h = b if b is not None else _FAR
         else:
-            link._ge_e = ep
-            link._ge_v = need
-    else:
-        if link._lt_e == ep:
-            if need < link._lt_v:
-                link._lt_v = need
-        else:
+            h = q[0][0] if q else _FAR
+        if need <= h:
+            # early accept on the horizon alone: skip term evaluation,
+            # memoize the horizon value for this event
+            if link._ge_e != ep or h > link._ge_v:
+                link._ge_e = ep
+                link._ge_v = h
+            return now, h
+    if depth <= 0:
+        if link._lt_e != ep or need < link._lt_v:
             link._lt_e = ep
             link._lt_v = need
-    return ok
+        return -1, -1
+    eng.led_hist[depth if depth < 16 else 16] += 1
+    link._busy_e = ep
+    ml, ma = _clock_terms(link, need, depth, eng, ep, now, no_hz, gen)
+    link._busy_e = -1
+    if ml < 0:
+        if link._lt_e != ep or need < link._lt_v:
+            link._lt_e = ep
+            link._lt_v = need
+        return -1, -1
+    if h > ma:
+        ma = h
+    vl = now                        # "nothing uncommitted arrives before
+    if link._geL_g == gen and link._geL_v > now:
+        vl = link._geL_v            #  now" is itself an eternal statement
+    if ml > vl:
+        vl = ml
+    link._geL_g = gen
+    link._geL_v = vl
+    if vl > ma:
+        ma = vl
+    if link._ge_e != ep or ma > link._ge_v:
+        link._ge_e = ep
+        link._ge_v = ma
+    return vl, ma
 
 
-def _clock_ge_ledger(link: "Link", need: int, depth: int) -> bool:
-    """The ledger proof obligations for :func:`_clock_ge` (split out so the
-    memo fast path above inlines well).  Refuting feeders move to the front
-    of nothing — search order is outcome-affecting only through the
-    conservative cycle guard, so the census order stays fixed for
-    determinism."""
+def _clock_terms(link: "Link", need: int, depth: int, eng: Engine,
+                 ep: int, now: int, no_hz: bool, gen: int) -> Tuple[int, int]:
+    """Term evaluation for :func:`_clock_eval` (split out so the memo fast
+    path above inlines well): the min over every way not-yet-committed
+    traffic can reach the link, in both grades.  Returns ``(-1, -1)`` as
+    soon as any term refutes ``need``.  Search order is outcome-affecting
+    only through the conservative cycle guard, so the census order stays
+    fixed for determinism."""
+    ml = ma = _FAR
     # known future arrivals: trains scheduled to commit here next
     rh = link._resv
-    now = link.engine._now_ps
-    while rh and rh[0] < now:       # strictly past entries have fired
-        _heappop(rh)
-    if rh and rh[0] < need:
-        return False
+    if rh:
+        while rh and rh[0] < now:   # strictly past entries have fired
+            _heappop(rh)
+        if rh:
+            r0 = rh[0]
+            if r0 < need:
+                # the parked train arriving at r0 cannot fire earlier: it
+                # refutes every later need until its event has passed
+                link._ltr_v = r0 + 1
+                link._ltr_u = r0
+                return -1, -1
+            ml = ma = r0
     # fresh injections at this route head (no source installed: only the
-    # region horizon — already refuted above — could have proven it)
+    # region horizon — already consulted by the caller — can prove it)
     if link._inj_fed:
         src = link._inj_src
-        if src is None or not src.inj_ge(need, depth):
-            return False
+        if src is None:
+            return -1, -1
+        sl, sa = src.inj_pair(need, depth)
+        if sa < need:
+            return -1, -1
+        if sl < ml:
+            ml = sl
+        if sa < ma:
+            ma = sa
     # traffic still upstream must clear a feeder's server first: it cannot
     # arrive here sooner than the feeder frees (or its own clock) plus the
-    # feeder's minimum transit.  The recursive call's memo fast path is
-    # hoisted inline — most probes resolve right here.
-    ep = link.engine.events_processed
-    no_hz = _NO_HZ
+    # feeder's minimum transit.  The static transit table short-circuits
+    # the whole cone walk for small margins; otherwise the recursive
+    # call's memo fast path is hoisted inline.
+    slb = link._static_lb
+    if slb and need <= now + slb:
+        b = now + slb
+        if b > _FAR:
+            b = _FAR
+        if b < ml:
+            ml = b
+        if b < ma:
+            ma = b
+        return ml, ma
     for f in link._feeders:
         if f.fast:
-            t = need - f._xfer_lb
-            if f._free_ps >= t or t <= now:
+            x = f._xfer_lb
+            t = need - x
+            base = f._free_ps
+            if base < now:
+                base = now
+            if base >= t:
+                b = base + x
+                if b < ml:
+                    ml = b
+                if b < ma:
+                    ma = b
                 continue
-            if f._geL_e == ep and t <= f._geL_v:
-                continue
-            if not no_hz and f._ge_e == ep and t <= f._ge_v:
-                continue
-            if (f._lt_e == ep and t >= f._lt_v) or f._busy_e == ep \
-                    or not _clock_ge(f, t, depth - 1):
-                return False
+            if f._geL_g == gen and t <= f._geL_v:
+                eng.led_hits += 1
+                fl = fa = f._geL_v
+            elif not no_hz and f._ge_e == ep and t <= f._ge_v:
+                fl = now
+                fa = f._ge_v
+            elif (f._lt_e == ep and t >= f._lt_v) or f._busy_e == ep \
+                    or (t >= f._ltr_v and now <= f._ltr_u):
+                return -1, -1
+            else:
+                fl, fa = _clock_eval(f, t, depth - 1, eng, ep, now, no_hz,
+                                     gen)
+                if fa < t:
+                    return -1, -1
+            bl = (base if base > fl else fl) + x
+            ba = (base if base > fa else fa) + x
+            if bl < ml:
+                ml = bl
+            if ba < ma:
+                ma = ba
         else:
             # classic/fair feeder: its queued messages advance on events
             # whose ticks the ledger cannot see; any pending event bounds
-            q = link.engine._queue
-            if q and q[0][0] < need:
-                return False
-    return True
+            # this event's view, but nothing is eternal through it
+            q = eng._queue
+            if q:
+                q0 = q[0][0]
+                if q0 < need:
+                    return -1, -1
+                if q0 < ma:
+                    ma = q0
+            if now < ml:
+                ml = now
+    return ml, ma
 
 
 def _advance(flight: Flight) -> None:
@@ -622,8 +863,15 @@ def _propel(train: _Train) -> None:
                     _heappush(last._sink, at)
                 _heappush(queue, (at, rkey, eng._seq, f.on_arrive, (f,), dreg))
                 eng._seq += 1
-                if rheaps is not None:
-                    _heappush(rheaps[dreg], at)
+                if dreg:
+                    if rheaps is not None:
+                        _heappush(rheaps[dreg], at)
+                else:
+                    # untagged push: Engine._push's ledger-generation bump,
+                    # inlined (this site bypasses _push)
+                    eng._led_gen += 1
+                    if rheaps is not None:
+                        _heappush(rheaps[0], at)
             return
         link = route[hop]
         if at > now and link._sole_feed is not prev:
@@ -640,6 +888,8 @@ def _propel(train: _Train) -> None:
                     _heappush(queue, (at, rkey, eng._seq, _propel, (train,),
                                       lreg))
                     eng._seq += 1
+                    if not lreg:
+                        eng._led_gen += 1   # untagged push (see _push)
                     if rheaps is not None:
                         _heappush(rheaps[lreg], at)
                     return
@@ -648,7 +898,7 @@ def _propel(train: _Train) -> None:
                 reg = link.region
                 bound = -1
             if bound < 0:
-                if _NO_HZ:
+                if eng._no_hz:
                     bound = now      # mid-batch: horizon proofs are blind
                 # inline region horizon (Engine.horizon_ps)
                 elif reg and rheaps is not None:
@@ -665,8 +915,8 @@ def _propel(train: _Train) -> None:
                 else:
                     bound = queue[0][0] if queue else _FAR
             if at >= bound and at - now > link._win_ps and \
-                    (not link.led or not _clock_ge(link, at + 1,
-                                                   LEDGER_DEPTH)):
+                    not (link.led and link._probe_on
+                         and _probe(link, at + 1, eng)):
                 train.hop = hop - 1
                 train.at_ps[0] = at
                 if hop == 1 and prev.coalesce:
@@ -676,8 +926,12 @@ def _propel(train: _Train) -> None:
                 lreg = link.region
                 if link.led:
                     _heappush(link._resv, at)
+                    if at < link._geL_v:
+                        link._geL_v = at    # defensive eternal-cache clamp
                 _heappush(queue, (at, rkey, eng._seq, _propel, (train,), lreg))
                 eng._seq += 1
+                if not lreg:
+                    eng._led_gen += 1       # untagged push (see _push)
                 if rheaps is not None:
                     _heappush(rheaps[lreg], at)
                 return
@@ -801,14 +1055,14 @@ def _propel_multi(train: _Train) -> None:
                 reg = link.region
                 bound = -1
             if bound < 0:
-                if _NO_HZ:
+                if eng._no_hz:
                     bound = now      # mid-batch: horizon proofs are blind
                 else:
                     b = eng.horizon_ps(reg, link._rguard_ps)
                     bound = b if b is not None else _FAR
             if first >= bound and first - now > link._win_ps and \
-                    (not link.led or not _clock_ge(link, first + 1,
-                                                   LEDGER_DEPTH)):
+                    not (link.led and link._probe_on
+                         and _probe(link, first + 1, eng)):
                 # neither provably safe (region horizon / channel clock)
                 # nor within the optimistic window: park until arrival
                 train.hop = hop - 1
@@ -816,6 +1070,8 @@ def _propel_multi(train: _Train) -> None:
                     route[hop - 1]._tails[id(route)] = train
                 if link.led:
                     _heappush(link._resv, first)
+                    if first < link._geL_v:
+                        link._geL_v = first
                 sched(first, _propel, train, region=link.region, key=rkey)
                 return
         if not link.fast:
@@ -867,7 +1123,7 @@ def _propel_multi(train: _Train) -> None:
         sole = link._sole_feed is route[hop - 1]
         if not sole:
             if bound < 0:
-                if _NO_HZ:
+                if eng._no_hz:
                     bound = now      # mid-batch: horizon proofs are blind
                 else:
                     b = eng.horizon_ps(reg, link._rguard_ps)
@@ -887,12 +1143,11 @@ def _propel_multi(train: _Train) -> None:
             sz0 = lines[0].size
             for l in route[hop:]:
                 own += l._ser_ps(sz0) + l._lat_ps
-            led = link.led
+            led = link.led and link._probe_on
             for i in range(1, n):
                 a = at_ps[i]
                 if a >= own or (a >= lim and not
-                                (led and _clock_ge(link, a + 1,
-                                                   LEDGER_DEPTH))):
+                                (led and _probe(link, a + 1, eng))):
                     stop = i
                     break
             if stop < n:
@@ -905,6 +1160,8 @@ def _propel_multi(train: _Train) -> None:
                     route[hop - 1]._tails[id(route)] = rest
                 if link.led:
                     _heappush(link._resv, rest.at_ps[0])
+                    if rest.at_ps[0] < link._geL_v:
+                        link._geL_v = rest.at_ps[0]
                 sched(rest.at_ps[0], _propel, rest, region=reg, key=rkey)
                 n = stop
         if link.coalesce:
@@ -941,6 +1198,8 @@ def _propel_multi(train: _Train) -> None:
                 link._tails[id(route)] = train
             if route[nxt].led:
                 _heappush(route[nxt]._resv, at_ps[0])
+                if at_ps[0] < route[nxt]._geL_v:
+                    route[nxt]._geL_v = at_ps[0]
             sched(at_ps[0], _propel, train, region=route[nxt].region,
                   key=rkey)
             return
@@ -963,11 +1222,24 @@ class Fabric:
     def __init__(self, engine: Engine, default_policy: str = "fifo",
                  mode: str = MODE_COALESCE,
                  coalesce_window_ns: Optional[float] = None,
-                 ledger: bool = True, min_msg_bytes: int = 0):
+                 ledger=True, min_msg_bytes: int = 0,
+                 ledger_depth: Optional[int] = None):
         self.engine = engine
         self.default_policy = default_policy
         self.mode = mode
-        self.ledger = ledger and mode != MODE_CLASSIC
+        # ledger accepts the NocConfig.fabric_ledger strings ("on"/"off"/
+        # "auto") as well as plain bools; "auto" keeps the ledger sound
+        # everywhere but lets each link's probe-outcome counters disable
+        # proof search where it never pays (see _probe)
+        if isinstance(ledger, str):
+            self.ledger_auto = ledger == "auto"
+            ledger_on = ledger != "off"
+        else:
+            self.ledger_auto = False
+            ledger_on = bool(ledger)
+        self.ledger = ledger_on and mode != MODE_CLASSIC
+        engine.led_depth = LEDGER_DEPTH if ledger_depth is None \
+            else ledger_depth
         # smallest wire message the workload can put on any link (0 = no
         # promise): tightens the ledger's per-feeder transit lower bound
         self.min_msg_bytes = min_msg_bytes
@@ -1006,7 +1278,9 @@ class Fabric:
                     bandwidth_GBps, latency_ns,
                     policy or self.default_policy, mode=self.mode,
                     coalesce_window_ns=self.coalesce_window_ns, region=region,
-                    ledger=self.ledger, min_msg_bytes=self.min_msg_bytes)
+                    ledger=self.ledger, min_msg_bytes=self.min_msg_bytes,
+                    auto=self.ledger_auto)
+        self.engine._led_gen += 1       # wiring change: drop eternal caches
         self.adj[u].append((v, link))
         self.links.append(link)
         self._route_cache.clear()
@@ -1028,12 +1302,17 @@ class Fabric:
         metadata installed by the owner (e.g. ``Cluster.warm_routes``) and
         must be re-installed by it after re-warming."""
         self._census_dirty = False
+        self.engine._led_gen += 1       # census change: drop eternal caches
         for l in self.links:
             l._sole_feed = None
             l._feeders = []
             l._inj_fed = False
             l._inj_src = None
             l._sink = None
+            l._static_lb = 0            # table was built from the old census
+            l._probe_on = True
+            l._bko = 0
+            l._skip = 0
 
     def add_bidi(self, u: int, v: int, bandwidth_GBps: float, latency_ns: float,
                  policy: Optional[str] = None,
@@ -1101,6 +1380,7 @@ class Fabric:
             link._sole_feed = False
         link._inj_fed = True
         self._census_dirty = True
+        self.engine._led_gen += 1       # census change: drop eternal caches
 
     def _register_feeders(self, path: List[Link]) -> None:
         """Record each link's upstream feeders along a (cached) route.
@@ -1114,6 +1394,7 @@ class Fabric:
         if not path:
             return
         self._census_dirty = True
+        self.engine._led_gen += 1       # census change: drop eternal caches
         prev = path[0]
         for link in path[1:]:
             feeders = link._feeders
@@ -1298,6 +1579,8 @@ class Fabric:
             nlink = route[1]
             if nlink.led:
                 _heappush(nlink._resv, next_at)
+                if next_at < nlink._geL_v:
+                    nlink._geL_v = next_at
             reg1 = nlink.region
         else:
             last = route[-1]
@@ -1307,6 +1590,8 @@ class Fabric:
         _heappush(eng._queue, (next_at, _rkey(route), eng._seq, _propel,
                                (train,), reg1))
         eng._seq += 1
+        if not reg1:
+            eng._led_gen += 1               # untagged push (see _push)
         if eng._regioned:
             _heappush(eng._rheaps[reg1], next_at)
 
@@ -1368,6 +1653,8 @@ class Fabric:
                 nlink = route[1]
                 if nlink.led:
                     _heappush(nlink._resv, ticks[0])
+                    if ticks[0] < nlink._geL_v:
+                        nlink._geL_v = ticks[0]
                 reg1 = nlink.region
             else:
                 last = route[-1]
@@ -1394,6 +1681,7 @@ class Fabric:
         leaving ``node`` (see :class:`InjectionSource`).  Heads without a
         source fall back to the region horizon — sound for any injector that
         only acts from engine events."""
+        self.engine._led_gen += 1       # wiring change: drop eternal caches
         for _, link in self.adj[node]:
             link._inj_src = src
 
@@ -1406,10 +1694,61 @@ class Fabric:
         return out
 
     def clock_ge_ps(self, link: Link, need_ps: int,
-                    depth: int = LEDGER_DEPTH) -> bool:
+                    depth: Optional[int] = None) -> bool:
         """Channel-clock threshold query (tests/tools): True iff no
         not-yet-committed traffic can reach ``link`` before ``need_ps``."""
+        if depth is None:
+            depth = self.engine.led_depth
         return _clock_ge(link, need_ps, depth)
+
+    def build_transit_tables(self) -> None:
+        """Precompute each link's static feeder-cone transit floor.
+
+        For every link: a lower bound on the delay beyond *now* before any
+        not-yet-committed traffic can emerge from its feeder cone, valid at
+        every future query — the min over feeders of (feeder transit +
+        feeder floor), where a feeder's floor collapses to zero as soon as
+        traffic can *enter* at it at an arbitrary tick (injection-fed,
+        classic-fed, parkable, or a reservation-push target).  Computed by
+        vectorized relaxation over flat link-id-indexed int64 arrays
+        (:mod:`.ledger_tables`), sound for cyclic censuses (the relaxation
+        fixpoint).  The clock kernel uses it to accept small-margin probes
+        without walking the feeder DAG (see ``_clock_terms``); reservations
+        and injections at the link itself stay dynamic.  Call after the
+        route space is registered (``Cluster.warm_routes`` does).
+        """
+        from .ledger_tables import build_static_floors
+        floors = build_static_floors(self.links)
+        for i, l in enumerate(self.links):
+            l._static_lb = floors[i]
+        self.engine._led_gen += 1
+
+    def ledger_counters(self) -> Dict[str, object]:
+        """Ledger observability counters (exported into BENCH rows).
+
+        ``probes``/``chained_legs``: top-level commit checks issued and
+        proven (a proven probe is one park event saved).  ``validity_hits``:
+        queries answered by a cached cross-event clock value.
+        ``evaluations``/``depth_hist``: full term evaluations, by remaining
+        recursion depth.  ``probe_off_links``: links whose proof search the
+        auto policy disabled.
+        """
+        eng = self.engine
+        ok = sum(l._probe_ok for l in self.links)
+        fail = sum(l._probe_fail for l in self.links)
+        evals = sum(eng.led_hist)
+        hits = eng.led_hits
+        return {
+            "probes": ok + fail,
+            "chained_legs": ok,
+            "probe_hit_rate": ok / (ok + fail) if ok + fail else 0.0,
+            "validity_hits": hits,
+            "evaluations": evals,
+            "memo_hit_rate": hits / (hits + evals) if hits + evals else 0.0,
+            "depth_hist": [d for d in eng.led_hist],
+            "probe_off_links": sum(1 for l in self.links
+                                   if not l._probe_on),
+        }
 
     def set_region_guard(self, region: int, guard_ns: float) -> None:
         """Set a region's entry transit: a lower bound on the time any
@@ -1417,6 +1756,7 @@ class Fabric:
         entry links (e.g. the inbound scale-up hop).  Sound lookahead for
         the region extends to ``earliest pending event + guard``."""
         guard_ps = int(round(guard_ns * _PS_PER_NS))
+        self.engine._led_gen += 1       # wiring change: drop eternal caches
         for link in self.links:
             if link.region == region:
                 link._rguard_ps = guard_ps

@@ -108,6 +108,35 @@ def test_quick_benchmark_matches_committed_baseline():
 
 
 @pytest.mark.slow
+def test_quick_benchmark_wall_within_tolerance_of_median():
+    """Coarse wall-clock gate (ISSUE 6): the committed quick row records
+    min/median/stddev over ``WALL_TRIALS`` runs; a fresh single sample must
+    land within a *generous* multiple of the committed median.  This only
+    catches order-of-magnitude perf regressions — shared-CPU CI boxes swing
+    individual samples by 30%+, so anything tighter would flake."""
+    if not os.path.exists(QUICK_BASELINE):
+        pytest.skip("no committed BENCH_engine_quick.json baseline")
+    with open(QUICK_BASELINE) as f:
+        base = json.load(f)
+    ref = base["modes"]["coalesce"]
+    med = ref.get("wall_median_s")
+    if med is None:
+        pytest.skip("baseline predates wall_median_s")
+    wl = base["workload"]
+
+    import time
+    cluster = Cluster(wl["nranks"], noc=NocConfig())
+    t0 = time.perf_counter()
+    simulate_collective(
+        C.ring_all_reduce(wl["nranks"], wl["size_bytes"],
+                          wl["nworkgroups"], wl["protocol"]),
+        cluster=cluster)
+    wall = time.perf_counter() - t0
+    assert wall <= med * 4 + 2.0, \
+        f"quick coalesce wall {wall:.2f}s blew past committed median {med}s"
+
+
+@pytest.mark.slow
 def test_trace_benchmark_matches_committed_baseline():
     """The tracked trace workload (ISSUE 5): every fidelity tier's
     ``time_ns`` must stay bit-identical to the committed BENCH_trace.json

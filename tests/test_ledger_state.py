@@ -1,0 +1,120 @@
+"""Ledger state isolation and configuration parity (ISSUE 6).
+
+The channel-clock kernel keeps all of its mutable state — batch flags,
+cache generation, depth budget, observability counters — on the
+:class:`~repro.core.engine.Engine` instance (plus per-link slots), never
+in module globals.  These tests pin that contract:
+
+* two simulations interleaved event-by-event in one process produce
+  bit-identical results to the same simulations run solo;
+* the clock recursion budget (``NocConfig.ledger_depth``) changes only
+  wall-time/event trade-offs, never ``time_ns``;
+* the adaptive per-link probe policy (``fabric_ledger="auto"``) is
+  timing-neutral against always-on proving.
+"""
+
+import pytest
+
+from repro.core import collectives as C
+from repro.core.cluster import Cluster, NocConfig
+from repro.core.mscclpp import lower_program
+from repro.core.system import simulate_collective
+
+NRANKS = 4
+SIZE = 1 << 14
+
+
+def _prepare(noc=None):
+    """Build a cluster with the reference collective dispatched and sealed,
+    ready to be driven manually through its engine."""
+    program = C.ring_all_reduce(NRANKS, SIZE, 1, "put")
+    cluster = Cluster(NRANKS, noc=noc or NocConfig())
+    done_at = {}
+
+    def on_done(kernel, t, rank=None):
+        done_at[kernel.gpu] = t
+
+    for k in lower_program(program):
+        k.on_done = on_done
+        cluster.dispatch(k)
+    cluster.seal()
+    return cluster, done_at
+
+
+def _drain(cluster):
+    cluster.run(5e10)
+    return cluster
+
+
+def _result(cluster, done_at):
+    assert len(done_at) == NRANKS, "collective did not complete"
+    return (max(done_at.values()),
+            tuple(done_at[r] for r in range(NRANKS)),
+            cluster.engine.events_processed,
+            cluster.fabric.order_violations)
+
+
+def test_interleaved_simulations_match_solo_runs():
+    """Two clusters alternating through ``Engine.run(max_events=...)`` in
+    one process must each reproduce their solo run bit-exactly: nothing in
+    the clock kernel (generation counters, memo epochs, batch flags,
+    backoff state) may leak across engine instances."""
+    ca, da = _prepare()
+    _drain(ca)
+    solo_a = _result(ca, da)
+    cb, db = _prepare(NocConfig(fabric_mode="exact"))
+    _drain(cb)
+    solo_b = _result(cb, db)
+
+    ia, ida = _prepare()
+    ib, idb = _prepare(NocConfig(fabric_mode="exact"))
+    # alternate in uneven slices so the interleave points differ from any
+    # natural phase boundary of either simulation
+    step = 257
+    while ia.engine.pending or ib.engine.pending:
+        if ia.engine.pending:
+            ia.engine.run(max_events=step)
+        if ib.engine.pending:
+            ib.engine.run(max_events=step + 91)
+    assert _result(ia, ida) == solo_a
+    assert _result(ib, idb) == solo_b
+
+
+def test_back_to_back_simulations_match_solo_runs():
+    """Sequential reuse in one process: a second simulation after a first
+    has fully drained must be unaffected by it."""
+    ca, da = _prepare()
+    _drain(ca)
+    ref = _result(ca, da)
+    cb, db = _prepare()
+    _drain(cb)
+    assert _result(cb, db) == ref
+
+
+@pytest.mark.parametrize("depth", [0, 2, 4])
+def test_ledger_depth_is_timing_neutral(depth):
+    """The recursion budget bounds how hard the prover tries, never what
+    the simulated hardware does: ``time_ns`` must be bit-identical at any
+    depth (depth 0 degenerates to horizon-only proofs)."""
+    ref = simulate_collective(C.ring_all_reduce(NRANKS, SIZE, 1, "put"),
+                              noc=NocConfig())
+    cluster = Cluster(NRANKS, noc=NocConfig(ledger_depth=depth))
+    r = simulate_collective(C.ring_all_reduce(NRANKS, SIZE, 1, "put"),
+                            cluster=cluster)
+    assert r.time_ns == ref.time_ns
+    assert r.per_rank_done_ns == ref.per_rank_done_ns
+    assert cluster.fabric.order_violations == 0
+
+
+@pytest.mark.parametrize("ledger", ["off", "auto"])
+def test_ledger_policy_is_timing_neutral(ledger):
+    """Disabling proving entirely, or letting the adaptive policy disable
+    it per link, only changes event counts — never the schedule."""
+    ref = simulate_collective(C.ring_all_reduce(NRANKS, SIZE, 1, "put"),
+                              noc=NocConfig())
+    cluster = Cluster(NRANKS, noc=NocConfig(fabric_ledger=ledger))
+    r = simulate_collective(C.ring_all_reduce(NRANKS, SIZE, 1, "put"),
+                            cluster=cluster)
+    assert r.time_ns == ref.time_ns
+    assert r.per_rank_done_ns == ref.per_rank_done_ns
+    assert cluster.fabric.order_violations == 0
