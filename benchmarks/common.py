@@ -9,14 +9,10 @@ absolute magnitudes, are the reproduction target (DESIGN.md §9/§10).
 
 from __future__ import annotations
 
-import csv
-import io
 import json
 import os
-import sys
 import time
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List
 
 from repro.core.cluster import NocConfig
 from repro.core.gpu_model import GpuConfig

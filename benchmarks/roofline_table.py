@@ -5,10 +5,9 @@ ratio, and a one-line 'what would move the dominant term' note."""
 from __future__ import annotations
 
 import json
-import os
 from typing import Dict, List
 
-from .common import RESULTS_DIR, Report
+from .common import Report
 
 NOTES = {
     ("memory", "train"): "fuse attention/WKV inner loops (Pallas kernels "

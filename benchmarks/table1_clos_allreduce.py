@@ -8,9 +8,8 @@ bandwidth, and per-flow FCT statistics (min/max/avg vs standalone)."""
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import List
 
-from repro.core.collectives import ring_all_reduce
 from repro.core.engine import Engine
 from repro.core.infragraph import clos_fat_tree_fabric, to_fabric
 from repro.core.network.fabric import DATA

@@ -9,7 +9,7 @@ from repro.core.cluster import NocConfig
 from repro.core.collectives import (direct_all_gather,
                                     direct_reduce_scatter, ring_all_reduce)
 from repro.core.gpu_model import GpuConfig
-from repro.core.mscclpp import Program, ProgramBuilder
+from repro.core.mscclpp import ProgramBuilder
 from repro.core.system import simulate_collective
 from repro.core.verify import check_program
 

@@ -14,14 +14,12 @@ layer (DESIGN.md §2).  Two fidelity levels:
 
 from __future__ import annotations
 
-import math
-from typing import Dict, Optional
+from typing import Dict
 
 from ..configs.base import SHAPES, get
 from ..core.chakra import ExecutionTrace, TraceExecutor
 from ..core.cluster import Cluster, NocConfig
-from ..core.network.simple import best_collective_time
-from .roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+from .roofline import LINK_BW, PEAK_FLOPS
 
 ALPHA_ICI_NS = 1000.0     # per-hop collective launch latency (1 us)
 

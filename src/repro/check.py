@@ -1,0 +1,7 @@
+"""``python -m repro.check`` entry point (shim over
+:mod:`repro.core.check.cli`)."""
+
+from repro.core.check.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

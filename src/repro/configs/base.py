@@ -8,7 +8,7 @@ is a ``ShapeConfig``.  ``registry()`` maps ``--arch`` ids to configs;
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
 
 
@@ -170,10 +170,10 @@ def register(cfg: ArchConfig) -> ArchConfig:
 
 def registry() -> Dict[str, ArchConfig]:
     # import for side effects: each config module registers itself
-    from . import (gemma_2b, grok_1_314b, internvl2_1b, llama3_8b,  # noqa
-                   moonshot_v1_16b_a3b, phi3_medium_14b,
-                   recurrentgemma_9b, rwkv6_7b, seamless_m4t_large_v2,
-                   starcoder2_7b)
+    from . import gemma_2b, grok_1_314b, internvl2_1b, llama3_8b  # noqa: E501,F401
+    from . import moonshot_v1_16b_a3b, phi3_medium_14b  # noqa: F401
+    from . import recurrentgemma_9b, rwkv6_7b  # noqa: F401
+    from . import seamless_m4t_large_v2, starcoder2_7b  # noqa: F401
     return dict(_REGISTRY)
 
 

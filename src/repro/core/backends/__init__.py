@@ -87,8 +87,29 @@ def _check_fidelity(fidelity: str) -> None:
                          f"choose from {sorted(FIDELITIES)}")
 
 
+def _run_check(workload, infra, config, check: str) -> None:
+    """Pre-simulation static verification (``check="warn"|"error"``)."""
+    if check not in ("off", "warn", "error"):
+        raise ValueError(f"check={check!r}; choose 'off', 'warn' or 'error'")
+    import warnings
+
+    from ..check import CheckWarning, check_workload
+    report = check_workload(
+        workload, infra,
+        workgroups=getattr(config, "coll_workgroups", 4),
+        protocol=getattr(config, "protocol", "put"))
+    if check == "error":
+        report.raise_if_errors()
+    if not report.clean:
+        warnings.warn(
+            f"static check found issues (simulate(..., check='off') to "
+            f"silence, check='error' to fail fast):\n{report.format()}",
+            CheckWarning, stacklevel=3)
+
+
 def simulate(workload, infra=None, fidelity: Optional[str] = None,
-             config: Optional[SimConfig] = None, **kwargs) -> SimResult:
+             config: Optional[SimConfig] = None, check: str = "warn",
+             **kwargs) -> SimResult:
     """Simulate ``workload`` over ``infra`` at the chosen fidelity tier.
 
     ``workload`` is an MSCCL++ :class:`~repro.core.mscclpp.Program` (one
@@ -103,6 +124,14 @@ def simulate(workload, infra=None, fidelity: Optional[str] = None,
     ``rank_delay_ns`` / ``unroll`` / ``cluster`` for programs; anything
     else raises with the valid-key list (legacy backend-construction
     keywords are split into the tier config by a deprecation shim).
+
+    ``check`` runs the static verifier (:mod:`repro.core.check`) before
+    any event is simulated: ``"warn"`` (default) emits a
+    :class:`~repro.core.check.CheckWarning` describing every finding,
+    ``"error"`` raises :class:`~repro.core.check.CheckError` on
+    error-severity findings (deadlocks, races, out-of-bounds transfers),
+    ``"off"`` skips verification entirely.  Program reports are memoized,
+    so sweeps re-simulating the same generated workload pay once.
     """
     if config is not None:
         cfg_fid = getattr(config, "fidelity", None)
@@ -127,6 +156,8 @@ def simulate(workload, infra=None, fidelity: Optional[str] = None,
                 f"a {'trace' if trace else 'program'} run at fidelity "
                 f"{fidelity!r}; valid run keys: {sorted(run_keys)}")
         run_kw = kwargs
+    if check != "off":
+        _run_check(workload, infra, config, check)
     backend = config.make_backend(infra)
     if trace:
         workload.reset_runtime()

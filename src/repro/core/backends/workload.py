@@ -27,7 +27,7 @@ scheduler without an import cycle.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from .interpreter import AnalyticTransport, ProgramInterpreter
 

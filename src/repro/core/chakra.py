@@ -200,6 +200,38 @@ class ExecutionTrace:
                 raise ValueError(f"collective {cid}: inconsistent "
                                  f"kind/bytes/algorithm across ranks: "
                                  f"{sorted(sig)}")
+        self._check_acyclic()
+
+    def _check_acyclic(self) -> None:
+        """Reject dependency cycles: the DagScheduler would otherwise run
+        zero nodes and report the whole trace as incomplete, with no hint
+        of which deps are circular.  Iterative tricolor DFS."""
+        by_id = {n.nid: n for n in self.nodes}
+        WHITE, GRAY, BLACK = 0, 1, 2
+        color = {nid: WHITE for nid in by_id}
+        for root in by_id:
+            if color[root] != WHITE:
+                continue
+            color[root] = GRAY
+            stack = [(root, iter(by_id[root].deps))]
+            path = [root]
+            while stack:
+                nid, it = stack[-1]
+                for d in it:
+                    if color[d] == GRAY:
+                        cyc = path[path.index(d):] + [d]
+                        raise ValueError(
+                            "dependency cycle: "
+                            + " -> ".join(str(x) for x in cyc))
+                    if color[d] == WHITE:
+                        color[d] = GRAY
+                        stack.append((d, iter(by_id[d].deps)))
+                        path.append(d)
+                        break
+                else:
+                    color[nid] = BLACK
+                    stack.pop()
+                    path.pop()
 
 
 @dataclass

@@ -1,0 +1,138 @@
+"""``python -m repro.check`` — the sweep-pipeline face of the verifier.
+
+    python -m repro.check program.json trace.json infra.json
+    python -m repro.check --json program.json        # machine-readable
+    python -m repro.check --collectives              # verify every builtin
+
+File kind is sniffed from the JSON shape: ``gpus``+``buffers`` is an
+MSCCL++ Program, ``nodes`` is an ExecutionTrace, ``devices``+
+``instances`` is an InfraGraph Infrastructure.  Exit status: 0 all clean
+(warnings allowed with ``--quiet`` semantics intact), 1 at least one
+error-severity diagnostic, 2 a file could not be loaded.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Tuple
+
+from .report import CheckReport
+
+
+def _load(path: str) -> Tuple[str, CheckReport]:
+    """Sniff + parse + check one file; returns (kind, report)."""
+    with open(path) as f:
+        text = f.read()
+    d = json.loads(text)
+    if isinstance(d, dict) and "gpus" in d and "buffers" in d:
+        from ..mscclpp import Program
+        from . import check_program
+        return "program", check_program(Program.from_json(text))
+    if isinstance(d, list) or (isinstance(d, dict) and "nodes" in d):
+        from ..chakra import ExecutionTrace
+        from . import check_trace
+        try:
+            trace = ExecutionTrace.from_json(text)
+        except ValueError as exc:
+            rep = CheckReport(source=f"trace {path}")
+            from .report import Location
+            rep.add("error", "TR-PARSE", Location(), str(exc))
+            return "trace", rep
+        return "trace", check_trace(trace)
+    if isinstance(d, dict) and "devices" in d and "instances" in d:
+        from ..infragraph.graph import Infrastructure
+        from . import check_infrastructure
+        return "infrastructure", check_infrastructure(
+            Infrastructure.from_json(text))
+    raise ValueError(
+        f"{path}: unrecognized JSON shape (expected an MSCCL++ program "
+        f"with 'gpus'+'buffers', a trace with 'nodes', or an "
+        f"infrastructure with 'devices'+'instances')")
+
+
+def builtin_collective_reports(rank_counts=(2, 3, 4, 5, 8),
+                               nworkgroups=(1, 2), shard_bytes: int = 96
+                               ) -> List[Tuple[str, CheckReport]]:
+    """Check every built-in generator at several shapes (the CI sweep).
+
+    ``shard_bytes`` is scaled so per-workgroup slices never degenerate to
+    zero bytes at the largest rank count.
+    """
+    from ..collectives import ALGORITHMS
+    from . import check_program
+    out = []
+    for (kind, algo), gen in sorted(ALGORITHMS.items()):
+        protocols = ("put", "get") if algo in ("ring", "direct") else (None,)
+        for n in rank_counts:
+            if algo == "halving_doubling" and n & (n - 1):
+                continue
+            for nwg in nworkgroups:
+                size = shard_bytes * n * nwg
+                for proto in protocols:
+                    try:
+                        prog = (gen(n, size, nwg) if proto is None
+                                else gen(n, size, nwg, protocol=proto))
+                    except ValueError:
+                        continue    # e.g. protocol not supported
+                    label = (f"{kind}/{algo}"
+                             + (f"/{proto}" if proto else "")
+                             + f" n={n} nwg={nwg}")
+                    out.append((label, check_program(prog)))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description="Statically verify MSCCL++ programs, execution traces "
+                    "and InfraGraph infrastructures before simulating them.")
+    ap.add_argument("files", nargs="*",
+                    help="program/trace/infrastructure JSON files")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit one JSON report object per input")
+    ap.add_argument("--collectives", action="store_true",
+                    help="verify every built-in collective generator "
+                         "across rank counts and workgroup splits")
+    ap.add_argument("--max-diags", type=int, default=50,
+                    help="human-readable diagnostics shown per input")
+    args = ap.parse_args(argv)
+    if not args.files and not args.collectives:
+        ap.print_usage(sys.stderr)
+        return 2
+
+    results: List[Tuple[str, CheckReport]] = []
+    status = 0
+    for path in args.files:
+        try:
+            kind, rep = _load(path)
+        except (OSError, ValueError, json.JSONDecodeError) as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            return 2
+        results.append((f"{kind} {path}", rep))
+    if args.collectives:
+        results.extend(builtin_collective_reports())
+
+    for label, rep in results:
+        if rep.errors:
+            status = 1
+    if args.as_json:
+        print(json.dumps([{"input": label,
+                           **json.loads(rep.to_json())}
+                          for label, rep in results], indent=1))
+    else:
+        n_err = sum(len(rep.errors) for _, rep in results)
+        n_warn = sum(len(rep.warnings) for _, rep in results)
+        for label, rep in results:
+            if rep.clean:
+                continue
+            rep2 = CheckReport(source=label, diagnostics=rep.diagnostics)
+            print(rep2.format(limit=args.max_diags))
+        print(f"checked {len(results)} input(s): "
+              f"{n_err} error(s), {n_warn} warning(s)")
+    return status
+
+
+if __name__ == "__main__":          # pragma: no cover
+    raise SystemExit(main())

@@ -1,0 +1,96 @@
+"""Static lint of InfraGraph infrastructures.
+
+Catches the sweep-killers before any event is simulated: unreachable
+node pairs (a collective would hang routing through them), zero or
+negative link bandwidth (infinite serialization time), negative or
+absurd latencies, and endpoint capacity below the workload's rank count.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+from .report import CheckReport, Location
+
+#: sanity ceilings: beyond these a value is almost certainly a unit bug
+MAX_SANE_BANDWIDTH_GBPS = 100_000.0     # 100 TB/s per link
+MAX_SANE_LATENCY_NS = 1e9               # 1 s per hop
+
+
+def check_infrastructure(infra, num_ranks: Optional[int] = None
+                         ) -> CheckReport:
+    rep = CheckReport(source=f"infrastructure {infra.name!r}")
+    try:
+        g = infra.expand()
+    except Exception as exc:
+        rep.add("error", "IG-EXPAND", Location(),
+                f"infrastructure does not expand: {exc}")
+        return rep
+
+    # --- link property sanity (each distinct (edge, LinkType) pairing)
+    seen_links = set()
+    for (src, dst), lt in g.edges.items():
+        key = (lt.name, lt.bandwidth_GBps, lt.latency_ns)
+        if lt.bandwidth_GBps <= 0:
+            rep.add("error", "IG-LINK-BW", Location.graph(f"{src}->{dst}"),
+                    f"link {lt.name!r} has non-positive bandwidth "
+                    f"{lt.bandwidth_GBps} GB/s")
+        elif lt.bandwidth_GBps > MAX_SANE_BANDWIDTH_GBPS and \
+                key not in seen_links:
+            rep.add("warning", "IG-LINK-BW", Location.graph(f"{src}->{dst}"),
+                    f"link {lt.name!r} bandwidth {lt.bandwidth_GBps} GB/s "
+                    f"exceeds {MAX_SANE_BANDWIDTH_GBPS} (unit bug?)")
+        if lt.latency_ns < 0:
+            rep.add("error", "IG-LINK-LAT", Location.graph(f"{src}->{dst}"),
+                    f"link {lt.name!r} has negative latency "
+                    f"{lt.latency_ns} ns")
+        elif lt.latency_ns > MAX_SANE_LATENCY_NS and key not in seen_links:
+            rep.add("warning", "IG-LINK-LAT", Location.graph(f"{src}->{dst}"),
+                    f"link {lt.name!r} latency {lt.latency_ns} ns exceeds "
+                    f"{MAX_SANE_LATENCY_NS} (unit bug?)")
+        seen_links.add(key)
+
+    # --- all-pairs reachability (directed BFS forward + backward from one
+    # root: equivalent to strong connectivity on this edge set)
+    if g.nodes:
+        root = next(iter(g.nodes))
+        fwd = _reach(g.adj, root)
+        radj = {n: [] for n in g.nodes}
+        for (src, dst) in g.edges:
+            radj[dst].append(src)
+        bwd = _reach(radj, root)
+        unreachable = sorted(set(g.nodes) - (fwd & bwd))
+        if unreachable:
+            rep.add("error", "IG-UNREACHABLE",
+                    Location.graph(unreachable[0]),
+                    f"{len(unreachable)} node(s) not reachable from/to "
+                    f"{root!r} (first: {unreachable[:5]}); traffic routed "
+                    f"through them would hang",
+                    witness={"root": root,
+                             "unreachable": unreachable[:50]})
+
+    # --- endpoint capacity vs the workload
+    from ..infragraph.translate import endpoint_nodes
+    eps = endpoint_nodes(g)
+    if not eps:
+        rep.add("warning", "IG-NO-ENDPOINT", Location(),
+                "no rank-bearing endpoints (gpu/core/cu) in infrastructure")
+    elif num_ranks is not None and len(eps) < num_ranks:
+        rep.add("error", "IG-CAPACITY", Location.graph(eps[0]),
+                f"infrastructure has {len(eps)} endpoint(s) but the "
+                f"workload needs {num_ranks} ranks",
+                witness={"endpoints": len(eps), "num_ranks": num_ranks})
+    return rep
+
+
+def _reach(adj, root):
+    seen = {root}
+    q = deque([root])
+    while q:
+        u = q.popleft()
+        for v in adj.get(u, ()):
+            if v not in seen:
+                seen.add(v)
+                q.append(v)
+    return seen

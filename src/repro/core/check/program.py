@@ -1,0 +1,752 @@
+"""Static analysis of MSCCL++ Programs: deadlock, data race, bounds,
+output coverage.
+
+The analyses exploit a structural property of MSCCL++ programs: op lists
+are static (no data-dependent branching), semaphores are monotone
+counters, and barriers are rank-local joint transitions.  Such a system
+is *confluent* — executing any enabled op never disables another — so a
+single greedy "saturation" run of an abstract interpreter (no data, no
+timing) reaches the unique maximal quiescent state:
+
+* if every cursor finishes, the program is deadlock-free under **every**
+  interleaving;
+* if cursors remain blocked, the program deadlocks under every
+  interleaving, and the blocked set is the witness.
+
+This makes the deadlock pass sound *and* complete, at O(total ops).
+
+On deadlock-free programs a **must-happens-before** DAG is built:
+program order, barrier rounds (recorded during saturation), and
+signal→wait edges derived by semaphore *counting* — a signal must
+precede a wait iff the wait's ``expected`` cannot be reached without it,
+computed per totally-ordered per-workgroup signal chain and iterated to
+a fixpoint as the order grows.  Must-happens-before under-approximates
+guaranteed ordering, so the race pass (byte-interval overlap of accesses
+not ordered by the DAG) over-approximates real races — it can cry wolf
+on exotic synchronization idioms, but never misses a race expressible in
+this op vocabulary, and reports zero findings on every built-in
+generator in :mod:`repro.core.collectives`.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from typing import Dict, List, Set, Tuple
+
+from ..mscclpp import Program, VALID_OPS
+from .report import CheckReport, Location
+
+#: data-movement ops (everything else is control/synchronization)
+DATA_OPS = ("put", "get", "copy", "reduce")
+
+#: collectives whose output buffer must be fully written
+COVERED_COLLECTIVES = ("all_gather", "reduce_scatter", "all_reduce",
+                       "all_to_all")
+
+#: op-count ceiling for the quadratic-ish passes (happens-before closure
+#: and race detection); larger programs still get the linear passes
+HB_OP_LIMIT = 20_000
+
+
+# ---------------------------------------------------------------------------
+# flattened view
+# ---------------------------------------------------------------------------
+
+class _Prog:
+    """Index of a Program: flat node ids per (rank, wg, op_index)."""
+
+    def __init__(self, program: Program):
+        self.p = program
+        self.node_of: Dict[Tuple[int, int, int], int] = {}
+        self.cursor_of: List[Tuple[int, int, int]] = []
+        for r, wgs in enumerate(program.gpus):
+            for w, ops in enumerate(wgs):
+                for i in range(len(ops)):
+                    self.node_of[(r, w, i)] = len(self.cursor_of)
+                    self.cursor_of.append((r, w, i))
+        self.n_ops = len(self.cursor_of)
+        # static semaphore signal totals: (target rank, sem) -> count
+        self.sig_total: Dict[Tuple[int, int], int] = defaultdict(int)
+        for r, wgs in enumerate(program.gpus):
+            for ops in wgs:
+                for o in ops:
+                    if o.op == "signal" and \
+                            0 <= o.remote_rank < program.num_ranks:
+                        self.sig_total[(o.remote_rank, o.sem)] += 1
+
+    def op(self, r: int, w: int, i: int):
+        return self.p.gpus[r][w][i]
+
+    def loc(self, node: int) -> Location:
+        return Location.op(*self.cursor_of[node])
+
+
+# ---------------------------------------------------------------------------
+# pass 1: structural / bounds
+# ---------------------------------------------------------------------------
+
+def _check_bounds(px: _Prog, rep: CheckReport) -> None:
+    p = px.p
+    for r, wgs in enumerate(p.gpus):
+        for w, ops in enumerate(wgs):
+            for i, o in enumerate(ops):
+                loc = Location.op(r, w, i)
+                if o.op not in VALID_OPS:
+                    rep.add("error", "OP-UNKNOWN", loc,
+                            f"unknown op {o.op!r}")
+                    continue
+                if o.op in ("put", "get", "signal") and not (
+                        0 <= o.remote_rank < p.num_ranks):
+                    rep.add("error", "OP-RANK", loc,
+                            f"{o.op} targets rank {o.remote_rank}, outside "
+                            f"0..{p.num_ranks - 1}")
+                if o.op in ("signal", "wait") and o.sem < 0:
+                    rep.add("error", "OP-SEM", loc,
+                            f"{o.op} uses negative semaphore id {o.sem}")
+                if o.op == "wait" and o.expected < 1:
+                    rep.add("warning", "OP-SEM", loc,
+                            f"wait with expected={o.expected} is trivially "
+                            f"satisfied (no ordering)")
+                if o.op not in DATA_OPS:
+                    continue
+                if o.size < 0:
+                    rep.add("error", "BUF-SIZE", loc,
+                            f"{o.op} with negative size {o.size}")
+                elif o.size == 0:
+                    rep.add("warning", "BUF-SIZE", loc,
+                            f"{o.op} with size 0 moves no data")
+                if o.op == "reduce":
+                    if not o.srcs:
+                        rep.add("warning", "BUF-SIZE", loc,
+                                "reduce with no sources writes zeros")
+                    for (buf, off, rk) in o.srcs or []:
+                        if rk >= p.num_ranks or rk < -1:
+                            rep.add("error", "OP-RANK", loc,
+                                    f"reduce src references rank {rk}, "
+                                    f"outside 0..{p.num_ranks - 1}")
+                        else:
+                            _check_range(p, rep, loc, o.op, buf, off, o.size)
+                else:
+                    if o.src_buf:
+                        _check_range(p, rep, loc, o.op, o.src_buf, o.src_off,
+                                     o.size)
+                    elif o.op in ("put", "get", "copy"):
+                        rep.add("error", "BUF-UNKNOWN", loc,
+                                f"{o.op} without a source buffer")
+                if o.op in DATA_OPS:
+                    if o.dst_buf:
+                        _check_range(p, rep, loc, o.op, o.dst_buf, o.dst_off,
+                                     o.size)
+                    else:
+                        rep.add("error", "BUF-UNKNOWN", loc,
+                                f"{o.op} without a destination buffer")
+
+
+def _check_range(p: Program, rep: CheckReport, loc: Location, op: str,
+                 buf: str, off: int, size: int) -> None:
+    declared = p.buffers.get(buf)
+    if declared is None:
+        rep.add("error", "BUF-UNKNOWN", loc,
+                f"{op} references undeclared buffer {buf!r} "
+                f"(declared: {sorted(p.buffers)})")
+        return
+    if off < 0 or (size > 0 and off + size > declared):
+        rep.add("error", "BUF-OOB", loc,
+                f"{op} touches {buf}[{off}:{off + max(size, 0)}] but "
+                f"{buf!r} is {declared} bytes",
+                witness={"buffer": buf, "range": [off, off + max(size, 0)],
+                         "declared": declared})
+
+
+# ---------------------------------------------------------------------------
+# pass 2: saturation (deadlock) — see module docstring for why this is
+# sound and complete
+# ---------------------------------------------------------------------------
+
+class _Saturation:
+    def __init__(self, px: _Prog):
+        self.px = px
+        p = px.p
+        self.pcs: Dict[Tuple[int, int], int] = {
+            (r, w): 0 for r in range(p.num_ranks)
+            for w in range(len(p.gpus[r]))}
+        self.sems: Dict[Tuple[int, int], int] = defaultdict(int)
+        self.order: List[int] = []            # node ids in execution order
+        self.parked: Set[Tuple[int, int]] = set()   # cursors at a barrier
+        self.waiters: Dict[Tuple[int, int],
+                           List[Tuple[int, int]]] = defaultdict(list)
+        # per rank: list of rounds; each round maps wg -> barrier op_index,
+        # plus the set of wgs already finished when the round fired
+        self.rounds: Dict[int, List[Tuple[Dict[int, int], Set[int]]]] = \
+            defaultdict(list)
+        self.virtual_rounds: List[Tuple[int, int]] = []  # (rank, round idx)
+
+    def run(self) -> None:
+        work = deque(self.pcs)
+        queued = set(work)
+        while work:
+            cur = work.popleft()
+            queued.discard(cur)
+            self._advance(cur, work, queued)
+
+    def _advance(self, cur: Tuple[int, int], work, queued) -> None:
+        px, p = self.px, self.px.p
+        r, w = cur
+        ops = p.gpus[r][w]
+        while True:
+            pc = self.pcs[cur]
+            if pc >= len(ops):
+                self._try_barrier(r, work, queued)    # siblings may unblock
+                return
+            o = ops[pc]
+            if o.op == "wait":
+                if o.sem < 0:                  # diagnosed; treat as satisfied
+                    self.order.append(px.node_of[(r, w, pc)])
+                    self.pcs[cur] = pc + 1
+                    continue
+                if self.sems[(r, o.sem)] >= o.expected:
+                    self.order.append(px.node_of[(r, w, pc)])
+                    self.pcs[cur] = pc + 1
+                    continue
+                self.waiters[(r, o.sem)].append(cur)
+                return
+            if o.op == "barrier":
+                self.parked.add(cur)
+                self._try_barrier(r, work, queued)
+                return
+            if o.op == "signal":
+                self.order.append(px.node_of[(r, w, pc)])
+                self.pcs[cur] = pc + 1
+                if 0 <= o.remote_rank < p.num_ranks:
+                    key = (o.remote_rank, o.sem)
+                    self.sems[key] += 1
+                    have = self.sems[key]
+                    still = []
+                    for c2 in self.waiters[key]:
+                        r2, w2 = c2
+                        o2 = p.gpus[r2][w2][self.pcs[c2]]
+                        if o2.expected <= have:
+                            if c2 not in queued:
+                                work.append(c2)
+                                queued.add(c2)
+                        else:
+                            still.append(c2)
+                    self.waiters[key] = still
+                continue
+            # data ops / nop / flush: pure progress
+            self.order.append(px.node_of[(r, w, pc)])
+            self.pcs[cur] = pc + 1
+
+    def _try_barrier(self, r: int, work, queued) -> None:
+        px, p = self.px, self.px.p
+        nwg = len(p.gpus[r])
+        participants: Dict[int, int] = {}
+        done: Set[int] = set()
+        for w2 in range(nwg):
+            pc2 = self.pcs[(r, w2)]
+            if pc2 >= len(p.gpus[r][w2]):
+                done.add(w2)
+            elif (r, w2) in self.parked:
+                participants[w2] = pc2
+            else:
+                return                          # some sibling still running
+        if not participants:
+            return
+        for w2, pc2 in participants.items():
+            self.order.append(px.node_of[(r, w2, pc2)])
+            self.pcs[(r, w2)] = pc2 + 1
+            self.parked.discard((r, w2))
+        self.rounds[r].append((dict(participants), done))
+        self.virtual_rounds.append((r, len(self.rounds[r]) - 1))
+        for w2 in participants:
+            if (r, w2) not in queued:
+                work.append((r, w2))
+                queued.add((r, w2))
+
+    def blocked(self) -> List[Tuple[int, int]]:
+        p = self.px.p
+        return sorted(c for c, pc in self.pcs.items()
+                      if pc < len(p.gpus[c[0]][c[1]]))
+
+
+def _barrier_arity(px: _Prog, rep: CheckReport,
+                   deadlocked: bool) -> Set[int]:
+    """Flag ranks whose workgroups disagree on barrier count.  Returns the
+    offending ranks (their stuck-at-barrier cursors are then explained by
+    this diagnostic rather than a separate cycle report)."""
+    p = px.p
+    bad: Set[int] = set()
+    for r, wgs in enumerate(p.gpus):
+        if len(wgs) < 2:
+            continue
+        counts = [sum(1 for o in ops if o.op == "barrier") for ops in wgs]
+        if len(set(counts)) > 1:
+            bad.add(r)
+            w = counts.index(max(counts))
+            idx = [i for i, o in enumerate(wgs[w]) if o.op == "barrier"]
+            sev = "error" if deadlocked else "warning"
+            rep.add(sev, "DL-BARRIER-ARITY",
+                    Location.op(r, w, idx[min(counts)] if
+                                min(counts) < len(idx) else idx[-1]),
+                    f"rank {r} workgroups disagree on barrier count "
+                    f"{counts}; a barrier only releases when every "
+                    f"workgroup reaches one (or ends)",
+                    witness={"rank": r, "barrier_counts": counts})
+    return bad
+
+
+def _check_deadlock(px: _Prog, sat: _Saturation, rep: CheckReport) -> bool:
+    """Classify blocked cursors.  Returns True iff the program deadlocks."""
+    p = px.p
+    blocked = sat.blocked()
+    arity_bad = _barrier_arity(px, rep, deadlocked=bool(blocked))
+    if not blocked:
+        return False
+
+    explained: Set[Tuple[int, int]] = set()
+    # --- under-signaled waits: expected not coverable by program-wide total
+    for (r, w) in blocked:
+        pc = sat.pcs[(r, w)]
+        o = p.gpus[r][w][pc]
+        if o.op != "wait":
+            continue
+        total = px.sig_total.get((r, o.sem), 0)
+        if total < o.expected:
+            have = sat.sems.get((r, o.sem), 0)
+            rep.add("error", "DL-UNDERSIGNAL", Location.op(r, w, pc),
+                    f"wait on sem {o.sem} needs {o.expected} signal(s) but "
+                    f"the whole program only issues {total} to rank {r} "
+                    f"(delivered before the hang: {have})",
+                    witness={"sem": o.sem, "rank": r,
+                             "expected": o.expected, "signals_total": total,
+                             "signals_delivered": have})
+            explained.add((r, w))
+    # barrier cursors on arity-mismatched ranks are already explained
+    for (r, w) in blocked:
+        pc = sat.pcs[(r, w)]
+        if p.gpus[r][w][pc].op == "barrier" and r in arity_bad:
+            explained.add((r, w))
+
+    # --- wait-for graph over the remaining blocked cursors
+    remaining = [c for c in blocked if c not in explained]
+    idx = {c: i for i, c in enumerate(remaining)}
+    succ: List[List[int]] = [[] for _ in remaining]
+    for c in remaining:
+        r, w = c
+        pc = sat.pcs[c]
+        o = p.gpus[r][w][pc]
+        if o.op == "wait":
+            # any blocked cursor whose unexecuted suffix holds a matching
+            # signal could still satisfy this wait
+            for c2 in blocked:
+                if c2 == c or c2 not in idx:
+                    continue
+                r2, w2 = c2
+                suffix = p.gpus[r2][w2][sat.pcs[c2]:]
+                if any(s.op == "signal" and s.remote_rank == r and
+                       s.sem == o.sem for s in suffix):
+                    succ[idx[c]].append(idx[c2])
+            # a signal later in this cursor's own suffix can never run
+            suffix = p.gpus[r][w][pc + 1:]
+            if any(s.op == "signal" and s.remote_rank == r and
+                   s.sem == o.sem for s in suffix):
+                succ[idx[c]].append(idx[c])
+        elif o.op == "barrier":
+            for w2 in range(len(p.gpus[r])):
+                c2 = (r, w2)
+                if c2 != c and c2 in idx and c2 not in sat.parked:
+                    succ[idx[c]].append(idx[c2])
+
+    sccs = _tarjan(succ)
+    in_cycle: Set[int] = set()
+    for comp in sccs:
+        cyclic = len(comp) > 1 or comp[0] in succ[comp[0]]
+        if not cyclic:
+            continue
+        in_cycle.update(comp)
+        cyc = []
+        for ci in comp:
+            r, w = remaining[ci]
+            pc = sat.pcs[(r, w)]
+            o = p.gpus[r][w][pc]
+            cyc.append({"rank": r, "wg": w, "op_index": pc, "op": o.op,
+                        "sem": o.sem if o.op == "wait" else None,
+                        "expected": o.expected if o.op == "wait" else None})
+        r, w = remaining[comp[0]]
+        rep.add("error", "DL-CYCLE",
+                Location.op(r, w, sat.pcs[(r, w)]),
+                f"circular wait among {len(comp)} cursor(s): "
+                + " -> ".join(f"(r{e['rank']},wg{e['wg']},op{e['op_index']}:"
+                              f"{e['op']})" for e in cyc),
+                witness={"cycle": cyc})
+
+    leftovers = [c for c in remaining if idx[c] not in in_cycle]
+    if leftovers and not explained and not in_cycle:
+        # blocked but neither under-signaled nor cyclic (e.g. waiting on a
+        # cursor blocked for another reason): report the stuck set
+        wit = []
+        for (r, w) in blocked:
+            pc = sat.pcs[(r, w)]
+            o = p.gpus[r][w][pc]
+            wit.append({"rank": r, "wg": w, "op_index": pc, "op": o.op,
+                        "sem": o.sem if o.op in ("wait", "signal") else None})
+        r, w = leftovers[0]
+        rep.add("error", "DL-STUCK", Location.op(r, w, sat.pcs[(r, w)]),
+                f"{len(blocked)} cursor(s) blocked with no runnable op",
+                witness={"blocked": wit})
+    return True
+
+
+def _tarjan(succ: List[List[int]]) -> List[List[int]]:
+    """Strongly connected components (iterative Tarjan)."""
+    n = len(succ)
+    index = [-1] * n
+    low = [0] * n
+    on_stack = [False] * n
+    stack: List[int] = []
+    out: List[List[int]] = []
+    counter = [0]
+    for root in range(n):
+        if index[root] != -1:
+            continue
+        work = [(root, 0)]
+        while work:
+            v, pi = work[-1]
+            if pi == 0:
+                index[v] = low[v] = counter[0]
+                counter[0] += 1
+                stack.append(v)
+                on_stack[v] = True
+            recurse = False
+            for i in range(pi, len(succ[v])):
+                u = succ[v][i]
+                if index[u] == -1:
+                    work[-1] = (v, i + 1)
+                    work.append((u, 0))
+                    recurse = True
+                    break
+                if on_stack[u]:
+                    low[v] = min(low[v], index[u])
+            if recurse:
+                continue
+            work.pop()
+            if low[v] == index[v]:
+                comp = []
+                while True:
+                    u = stack.pop()
+                    on_stack[u] = False
+                    comp.append(u)
+                    if u == v:
+                        break
+                out.append(comp)
+            if work:
+                pv = work[-1][0]
+                low[pv] = min(low[pv], low[v])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass 3: must-happens-before DAG + transitive closure
+# ---------------------------------------------------------------------------
+
+class _HB:
+    """Must-happens-before over op nodes + virtual barrier-round nodes.
+
+    ``anc[i]`` is a bitset (int) of topological positions that are proven
+    to precede node ``i`` in every execution.
+    """
+
+    def __init__(self, px: _Prog, sat: _Saturation):
+        self.px = px
+        p = px.p
+        n_virtual = len(sat.virtual_rounds)
+        self.n = px.n_ops + n_virtual
+        self.preds: List[List[int]] = [[] for _ in range(self.n)]
+        # program order
+        for r, wgs in enumerate(p.gpus):
+            for w, ops in enumerate(wgs):
+                for i in range(1, len(ops)):
+                    self.preds[px.node_of[(r, w, i)]].append(
+                        px.node_of[(r, w, i - 1)])
+        # barrier rounds: every participant's barrier op (and the last op
+        # of each already-finished workgroup) precedes the virtual round
+        # node, which precedes each participant's next op
+        vbase = px.n_ops
+        vid = {}
+        for k, (r, ridx) in enumerate(sat.virtual_rounds):
+            vid[(r, ridx)] = vbase + k
+        for (r, ridx), v in vid.items():
+            participants, done = sat.rounds[r][ridx]
+            for w, bar_i in participants.items():
+                self.preds[v].append(px.node_of[(r, w, bar_i)])
+                if bar_i + 1 < len(p.gpus[r][w]):
+                    self.preds[px.node_of[(r, w, bar_i + 1)]].append(v)
+            for w in done:
+                ops = p.gpus[r][w]
+                if ops:
+                    self.preds[v].append(px.node_of[(r, w, len(ops) - 1)])
+        # topological order over preds (the graph is a DAG whenever the
+        # saturation run completed — every edge is consistent with that
+        # execution's order)
+        self.order = self._kahn()
+        self.pos = [0] * self.n
+        for i, node in enumerate(self.order):
+            self.pos[node] = i
+        self.anc: List[int] = [0] * self.n
+
+    def _kahn(self) -> List[int]:
+        indeg = [0] * self.n
+        succ: List[List[int]] = [[] for _ in range(self.n)]
+        for v, ps in enumerate(self.preds):
+            for u in ps:
+                succ[u].append(v)
+                indeg[v] += 1
+        q = deque(i for i in range(self.n) if indeg[i] == 0)
+        out = []
+        while q:
+            u = q.popleft()
+            out.append(u)
+            for v in succ[u]:
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    q.append(v)
+        if len(out) != self.n:                           # pragma: no cover
+            raise RuntimeError("happens-before graph has a cycle")
+        return out
+
+    # ---------------------------------------------------------------- closure
+    def close(self) -> None:
+        anc = self.anc = [0] * self.n
+        pos = self.pos
+        for node in self.order:
+            a = 0
+            for u in self.preds[node]:
+                a |= anc[u] | (1 << pos[u])
+            anc[node] = a
+
+    def before(self, a: int, b: int) -> bool:
+        """True iff node ``a`` must happen before node ``b``."""
+        return (self.anc[b] >> self.pos[a]) & 1 == 1
+
+    # ------------------------------------------------- signal->wait matching
+    def add_must_signal_edges(self) -> None:
+        """Fixpoint: a signal must precede a wait iff the wait's expected
+        count is unreachable without it (per-workgroup signal chains)."""
+        px, p = self.px, self.px.p
+        sigs_by_key: Dict[Tuple[int, int], List[int]] = defaultdict(list)
+        waits: List[Tuple[int, Tuple[int, int], int]] = []
+        for r, wgs in enumerate(p.gpus):
+            for w, ops in enumerate(wgs):
+                for i, o in enumerate(ops):
+                    node = px.node_of[(r, w, i)]
+                    if o.op == "signal" and \
+                            0 <= o.remote_rank < p.num_ranks:
+                        sigs_by_key[(o.remote_rank, o.sem)].append(node)
+                    elif o.op == "wait" and o.sem >= 0:
+                        waits.append((node, (r, o.sem), o.expected))
+        have: Set[Tuple[int, int]] = set()
+        for _ in range(64):                     # converges in 2-3 in practice
+            self.close()
+            changed = False
+            for wt, key, expected in waits:
+                sigs = sigs_by_key.get(key, ())
+                ordered = [s for s in sigs if self.before(s, wt)]
+                if len(ordered) >= expected:
+                    continue
+                j = expected - len(ordered)
+                cand = [s for s in sigs
+                        if not self.before(s, wt) and not self.before(wt, s)]
+                chains: Dict[Tuple[int, int], List[int]] = defaultdict(list)
+                for s in cand:
+                    r2, w2, _ = px.cursor_of[s]
+                    chains[(r2, w2)].append(s)
+                total = len(cand)
+                for chain in chains.values():
+                    chain.sort(key=lambda s: px.cursor_of[s][2])
+                    need = j - (total - len(chain))
+                    for s in chain[:max(0, need)]:
+                        if (s, wt) not in have:
+                            have.add((s, wt))
+                            self.preds[wt].append(s)
+                            changed = True
+            if not changed:
+                break
+        # edges changed the graph; refresh order + closure once more
+        self.order = self._kahn()
+        for i, node in enumerate(self.order):
+            self.pos[node] = i
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# pass 4: data races
+# ---------------------------------------------------------------------------
+
+def _accesses(px: _Prog):
+    """Yield (node, is_write, owner_rank, buf, lo, hi) for every in-bounds
+    access of every data op."""
+    p = px.p
+    out = []
+    for r, wgs in enumerate(p.gpus):
+        for w, ops in enumerate(wgs):
+            for i, o in enumerate(ops):
+                if o.op not in DATA_OPS or o.size <= 0:
+                    continue
+                node = px.node_of[(r, w, i)]
+
+                def acc(is_write, rank, buf, off):
+                    declared = p.buffers.get(buf)
+                    if declared is None or off < 0 or off + o.size > declared:
+                        return                  # already diagnosed by bounds
+                    if not (0 <= rank < p.num_ranks):
+                        return
+                    out.append((node, is_write, rank, buf, off, off + o.size))
+
+                if o.op == "put":
+                    acc(False, r, o.src_buf, o.src_off)
+                    acc(True, o.remote_rank, o.dst_buf, o.dst_off)
+                elif o.op == "get":
+                    acc(False, o.remote_rank, o.src_buf, o.src_off)
+                    acc(True, r, o.dst_buf, o.dst_off)
+                elif o.op == "copy":
+                    acc(False, r, o.src_buf, o.src_off)
+                    acc(True, r, o.dst_buf, o.dst_off)
+                elif o.op == "reduce":
+                    for (buf, off, rk) in o.srcs or []:
+                        acc(False, rk if rk >= 0 else r, buf, off)
+                    acc(True, r, o.dst_buf, o.dst_off)
+    return out
+
+
+def _check_races(px: _Prog, hb: _HB, rep: CheckReport,
+                 max_reports: int = 20) -> None:
+    groups: Dict[Tuple[int, str], list] = defaultdict(list)
+    for a in _accesses(px):
+        groups[(a[2], a[3])].append(a)
+    seen_pairs: Set[Tuple[int, int]] = set()
+    n_found = 0
+    for (rank, buf), accs in sorted(groups.items()):
+        accs.sort(key=lambda a: (a[4], a[5]))
+        for i, a in enumerate(accs):
+            for j in range(i + 1, len(accs)):
+                b = accs[j]
+                if b[4] >= a[5]:
+                    break                        # sorted by lo: no overlap
+                if not (a[1] or b[1]):
+                    continue                     # read-read
+                na, nb = a[0], b[0]
+                if na == nb:
+                    continue                     # one op's own read+write
+                pair = (min(na, nb), max(na, nb))
+                if pair in seen_pairs:
+                    continue
+                ca, cb = px.cursor_of[na], px.cursor_of[nb]
+                if ca[:2] == cb[:2]:
+                    continue                     # same workgroup: ordered
+                if hb.before(na, nb) or hb.before(nb, na):
+                    continue
+                seen_pairs.add(pair)
+                n_found += 1
+                if n_found > max_reports:
+                    continue
+                lo, hi = max(a[4], b[4]), min(a[5], b[5])
+                kind = "RACE-WW" if (a[1] and b[1]) else "RACE-RW"
+                wa = "write" if a[1] else "read"
+                wb = "write" if b[1] else "read"
+                rep.add("error", kind, px.loc(na),
+                        f"unordered {wa}/{wb} overlap on rank {rank} "
+                        f"{buf}[{lo}:{hi}] between (r{ca[0]},wg{ca[1]},"
+                        f"op{ca[2]}:{px.op(*ca).op}) and (r{cb[0]},"
+                        f"wg{cb[1]},op{cb[2]}:{px.op(*cb).op})",
+                        witness={"rank": rank, "buffer": buf,
+                                 "overlap": [lo, hi],
+                                 "a": {"loc": list(ca), "op": px.op(*ca).op,
+                                       "access": wa,
+                                       "range": [a[4], a[5]]},
+                                 "b": {"loc": list(cb), "op": px.op(*cb).op,
+                                       "access": wb,
+                                       "range": [b[4], b[5]]}})
+    if n_found > max_reports:
+        rep.add("error", "RACE-MORE", Location(),
+                f"{n_found - max_reports} further racing pairs suppressed")
+
+
+# ---------------------------------------------------------------------------
+# pass 5: output coverage
+# ---------------------------------------------------------------------------
+
+def _check_coverage(px: _Prog, rep: CheckReport) -> None:
+    p = px.p
+    if p.collective not in COVERED_COLLECTIVES:
+        return
+    size = p.buffers.get("output")
+    if not size:
+        rep.add("warning", "COV-OUTPUT", Location(),
+                f"collective {p.collective!r} declares no 'output' buffer; "
+                f"coverage not provable")
+        return
+    writes: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
+    for (node, is_write, rank, buf, lo, hi) in _accesses(px):
+        if is_write and buf == "output":
+            writes[rank].append((lo, hi))
+    for r in range(p.num_ranks):
+        missing = _uncovered(writes.get(r, []), size)
+        if missing:
+            total = sum(hi - lo for lo, hi in missing)
+            rep.add("error", "COV-OUTPUT", Location(rank=r),
+                    f"rank {r} output has {total} byte(s) never written "
+                    f"(first gap: [{missing[0][0]}:{missing[0][1]}]) — "
+                    f"{p.collective} requires full output coverage",
+                    witness={"rank": r, "missing": [list(m) for m in
+                                                    missing[:10]],
+                             "declared": size})
+
+
+def _uncovered(ivals: List[Tuple[int, int]], size: int
+               ) -> List[Tuple[int, int]]:
+    out = []
+    at = 0
+    for lo, hi in sorted(ivals):
+        if lo > at:
+            out.append((at, lo))
+        at = max(at, hi)
+        if at >= size:
+            break
+    if at < size:
+        out.append((at, size))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def check_program(program: Program) -> CheckReport:
+    """Run every static pass over an MSCCL++ Program.
+
+    Never raises on a malformed program — findings come back as
+    diagnostics (the CLI and sweep pipelines depend on this).
+    """
+    rep = CheckReport(source=f"program {program.name!r}")
+    if len(program.gpus) != program.num_ranks:
+        rep.add("error", "OP-RANK", Location(),
+                f"program declares num_ranks={program.num_ranks} but has "
+                f"{len(program.gpus)} per-rank op lists")
+        return rep
+    px = _Prog(program)
+    _check_bounds(px, rep)
+    sat = _Saturation(px)
+    sat.run()
+    deadlocked = _check_deadlock(px, sat, rep)
+    if deadlocked:
+        return rep                  # ordering undefined past the hang
+    if px.n_ops > HB_OP_LIMIT:
+        rep.add("warning", "CHECK-LIMIT", Location(),
+                f"{px.n_ops} ops exceeds the happens-before analysis "
+                f"ceiling ({HB_OP_LIMIT}); race detection skipped")
+    else:
+        hb = _HB(px, sat)
+        hb.add_must_signal_edges()
+        _check_races(px, hb, rep)
+    _check_coverage(px, rep)
+    return rep

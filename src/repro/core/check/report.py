@@ -1,0 +1,191 @@
+"""Structured diagnostics shared by every static-analysis pass.
+
+A :class:`Diagnostic` pins one finding to a location — ``(rank, wg,
+op_index)`` inside an MSCCL++ Program, a trace node id, or a fully
+qualified InfraGraph node name — and carries the *witness* that proves
+it: the wait-for cycle, the pair of overlapping byte ranges, the
+uncovered output intervals.  A :class:`CheckReport` aggregates the
+diagnostics of one workload/infrastructure and renders them for humans
+(``format``) or pipelines (``to_json``).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, List, Tuple
+
+#: severity levels, in increasing order
+SEVERITIES = ("warning", "error")
+
+
+@dataclass(frozen=True)
+class Location:
+    """Where a diagnostic points.
+
+    Exactly one of the three shapes is populated:
+
+    * program op:  ``(rank, wg, op_index)``
+    * trace node:  ``node_id``
+    * graph node:  ``graph_node`` (fully qualified name)
+    """
+    rank: int = -1
+    wg: int = -1
+    op_index: int = -1
+    node_id: int = -1
+    graph_node: str = ""
+
+    @staticmethod
+    def op(rank: int, wg: int, op_index: int) -> "Location":
+        return Location(rank=rank, wg=wg, op_index=op_index)
+
+    @staticmethod
+    def node(node_id: int) -> "Location":
+        return Location(node_id=node_id)
+
+    @staticmethod
+    def graph(name: str) -> "Location":
+        return Location(graph_node=name)
+
+    @property
+    def cursor(self) -> Tuple[int, int, int]:
+        """The ``(rank, wg, op_index)`` triple (program locations)."""
+        return (self.rank, self.wg, self.op_index)
+
+    def __str__(self) -> str:
+        if self.graph_node:
+            return self.graph_node
+        if self.node_id >= 0:
+            return f"node {self.node_id}"
+        if self.op_index >= 0:
+            return f"(rank {self.rank}, wg {self.wg}, op {self.op_index})"
+        if self.rank >= 0:
+            return f"(rank {self.rank})"
+        return "<workload>"
+
+    def to_json(self) -> dict:
+        d = {}
+        if self.graph_node:
+            d["graph_node"] = self.graph_node
+        elif self.node_id >= 0:
+            d["node_id"] = self.node_id
+        else:
+            if self.rank >= 0:
+                d["rank"] = self.rank
+            if self.wg >= 0:
+                d["wg"] = self.wg
+            if self.op_index >= 0:
+                d["op_index"] = self.op_index
+        return d
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    """One finding of the static checker."""
+    severity: str                 # "error" | "warning"
+    rule: str                     # e.g. "DL-CYCLE", "RACE-WW", "BUF-OOB"
+    loc: Location
+    message: str
+    #: machine-readable proof: cycle as cursor list, overlapping ranges, ...
+    witness: Any = None
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"bad severity {self.severity!r}; "
+                             f"choose from {SEVERITIES}")
+
+    def __str__(self) -> str:
+        return f"{self.severity}[{self.rule}] {self.loc}: {self.message}"
+
+    def to_json(self) -> dict:
+        d = {"severity": self.severity, "rule": self.rule,
+             "loc": self.loc.to_json(), "message": self.message}
+        if self.witness is not None:
+            d["witness"] = _jsonable(self.witness)
+        return d
+
+
+def _jsonable(obj):
+    """Best-effort conversion of witness structures to JSON-safe values."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, Location):
+        return obj.to_json()
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return str(obj)
+
+
+@dataclass
+class CheckReport:
+    """All diagnostics for one workload (plus optional infrastructure)."""
+    source: str = ""                       # e.g. program/trace/graph name
+    diagnostics: List[Diagnostic] = field(default_factory=list)
+
+    def add(self, severity: str, rule: str, loc: Location, message: str,
+            witness: Any = None) -> None:
+        self.diagnostics.append(Diagnostic(severity, rule, loc, message,
+                                           witness))
+
+    def extend(self, other: "CheckReport") -> None:
+        self.diagnostics.extend(other.diagnostics)
+
+    @property
+    def errors(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == "error"]
+
+    @property
+    def warnings(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == "warning"]
+
+    @property
+    def ok(self) -> bool:
+        """True iff no *errors* (warnings are advisory)."""
+        return not self.errors
+
+    @property
+    def clean(self) -> bool:
+        """True iff no diagnostics at all."""
+        return not self.diagnostics
+
+    def by_rule(self, rule: str) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.rule == rule]
+
+    def format(self, limit: int = 50) -> str:
+        head = (f"check {self.source or '<workload>'}: "
+                f"{len(self.errors)} error(s), "
+                f"{len(self.warnings)} warning(s)")
+        lines = [head]
+        for d in self.diagnostics[:limit]:
+            lines.append(f"  {d}")
+        if len(self.diagnostics) > limit:
+            lines.append(f"  ... and {len(self.diagnostics) - limit} more")
+        return "\n".join(lines)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "source": self.source,
+            "errors": len(self.errors),
+            "warnings": len(self.warnings),
+            "diagnostics": [d.to_json() for d in self.diagnostics],
+        }, indent=1)
+
+    def raise_if_errors(self) -> None:
+        if self.errors:
+            raise CheckError(self)
+
+
+class CheckError(RuntimeError):
+    """Raised by ``simulate(..., check="error")`` when the static checker
+    finds at least one error-severity diagnostic."""
+
+    def __init__(self, report: CheckReport):
+        self.report = report
+        super().__init__(report.format())
+
+
+class CheckWarning(UserWarning):
+    """Emitted by ``simulate(..., check="warn")`` (the default) when the
+    static checker reports any diagnostic."""

@@ -1,0 +1,157 @@
+"""Static lint of Chakra-style ExecutionTraces.
+
+Structural findings (duplicate ids, dangling dependencies, dependency
+cycles, bad ranks, malformed collective groups) come back as diagnostics
+instead of exceptions, so sweep pipelines can triage thousands of
+generated traces.  Optionally each distinct collective signature is
+*deep-checked*: the MSCCL++ program a backend would lower it to is
+generated and run through :func:`~repro.core.check.program.check_program`
+(results cached per signature, so sweeps pay once per algorithm shape).
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+from .program import check_program
+from .report import CheckReport, Location
+
+#: deep-check result cache: signature -> list of (severity, rule, message)
+_DEEP_CACHE: Dict[Tuple, List] = {}
+
+
+def check_trace(trace, deep: bool = True, workgroups: int = 4,
+                protocol: str = "put") -> CheckReport:
+    rep = CheckReport(source=f"trace ({trace.num_ranks} ranks, "
+                             f"{len(trace.nodes)} nodes)")
+    nodes = trace.nodes
+    if trace.num_ranks < 1:
+        rep.add("error", "TR-RANK", Location(),
+                f"trace needs num_ranks >= 1, got {trace.num_ranks}")
+        return rep
+    by_id = {}
+    for n in nodes:
+        if n.nid in by_id:
+            rep.add("error", "TR-DUP", Location.node(n.nid),
+                    f"duplicate node id {n.nid}")
+        by_id[n.nid] = n
+    colls: Dict[int, Dict[int, object]] = defaultdict(dict)
+    for n in nodes:
+        loc = Location.node(n.nid)
+        if n.kind not in ("comp", "coll"):
+            rep.add("error", "TR-KIND", loc, f"bad kind {n.kind!r}")
+        if not (0 <= n.rank < trace.num_ranks):
+            rep.add("error", "TR-RANK", loc,
+                    f"rank {n.rank} outside 0..{trace.num_ranks - 1}")
+        for d in n.deps:
+            if d not in by_id:
+                rep.add("error", "TR-DANGLING", loc,
+                        f"depends on missing node {d}")
+        if n.kind == "comp" and (n.flops < 0 or n.bytes_moved < 0):
+            rep.add("error", "TR-COMP", loc,
+                    f"negative cost (flops={n.flops}, "
+                    f"bytes_moved={n.bytes_moved})")
+        if n.kind == "coll":
+            if n.coll_id < 0 or not n.coll_kind:
+                rep.add("error", "TR-COLL", loc,
+                        "collective node needs coll_id >= 0 and a coll_kind")
+            else:
+                prev = colls[n.coll_id].get(n.rank)
+                if prev is not None:
+                    rep.add("error", "TR-COLL", loc,
+                            f"rank {n.rank} appears twice in collective "
+                            f"{n.coll_id} (also node {prev.nid})")
+                colls[n.coll_id][n.rank] = n
+            if n.coll_bytes < 0:
+                rep.add("error", "TR-COLL", loc,
+                        f"negative coll_bytes {n.coll_bytes}")
+
+    _check_cycles(trace, by_id, rep)
+
+    # collective groups must cover every rank with consistent parameters
+    for cid, group in sorted(colls.items()):
+        missing = sorted(set(range(trace.num_ranks)) - set(group))
+        any_node = next(iter(group.values()))
+        if missing:
+            rep.add("error", "TR-COLL", Location.node(any_node.nid),
+                    f"collective {cid} missing rank halves for {missing}; "
+                    f"every executor would deadlock waiting for them",
+                    witness={"coll_id": cid, "missing_ranks": missing})
+        sig = {(n.coll_kind, n.coll_bytes, n.algorithm)
+               for n in group.values()}
+        if len(sig) != 1:
+            rep.add("error", "TR-COLL", Location.node(any_node.nid),
+                    f"collective {cid} inconsistent across ranks: "
+                    f"{sorted(sig)}")
+
+    if deep and rep.ok:
+        _deep_check(trace, colls, rep, workgroups, protocol)
+    return rep
+
+
+def _check_cycles(trace, by_id, rep: CheckReport) -> None:
+    """Dependency cycles: DagScheduler would simply never finish on one —
+    this reports the cycle statically, with its member ids as witness."""
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color = {nid: WHITE for nid in by_id}
+    for root in by_id:
+        if color[root] != WHITE:
+            continue
+        stack = [(root, iter(by_id[root].deps))]
+        color[root] = GRAY
+        path = [root]
+        while stack:
+            nid, it = stack[-1]
+            advanced = False
+            for d in it:
+                if d not in by_id:
+                    continue
+                if color[d] == GRAY:
+                    cyc = path[path.index(d):] + [d]
+                    rep.add("error", "TR-CYCLE", Location.node(d),
+                            "dependency cycle: "
+                            + " -> ".join(str(x) for x in cyc),
+                            witness={"cycle": cyc[:-1]})
+                    continue
+                if color[d] == WHITE:
+                    color[d] = GRAY
+                    stack.append((d, iter(by_id[d].deps)))
+                    path.append(d)
+                    advanced = True
+                    break
+            if not advanced:
+                color[nid] = BLACK
+                stack.pop()
+                path.pop()
+
+
+def _deep_check(trace, colls, rep: CheckReport, workgroups: int,
+                protocol: str) -> None:
+    from ..chakra import collective_program
+    for cid, group in sorted(colls.items()):
+        node = next(iter(group.values()))
+        sig = (node.coll_kind, node.algorithm, trace.num_ranks,
+               node.coll_bytes, workgroups, protocol)
+        cached = _DEEP_CACHE.get(sig)
+        if cached is None:
+            cached = []
+            try:
+                prog = collective_program(node, trace.num_ranks, workgroups,
+                                          protocol)
+            except Exception as exc:
+                cached.append(("error", "TR-COLL",
+                               f"collective {node.coll_kind}/"
+                               f"{node.algorithm} cannot be generated for "
+                               f"{trace.num_ranks} ranks: {exc}"))
+            else:
+                sub = check_program(prog)
+                for d in sub.diagnostics:
+                    cached.append((d.severity, d.rule,
+                                   f"[{prog.name} @ {d.loc}] {d.message}"))
+            if len(_DEEP_CACHE) > 512:
+                _DEEP_CACHE.clear()
+            _DEEP_CACHE[sig] = cached
+        for severity, rule, message in cached:
+            rep.add(severity, rule, Location.node(node.nid),
+                    f"collective {cid}: {message}")

@@ -29,10 +29,8 @@ from heapq import heappop as _heappop, heappush as _heappush
 from typing import Dict, List, Optional, Tuple
 
 from .engine import Engine
-from .instructions import (LOAD, REDUCE, SEM_ACQUIRE, SEM_RELEASE, STORE,
-                           WAITCNT)
+from .instructions import REDUCE, SEM_ACQUIRE, STORE, WAITCNT
 from .operations import OpContext
-from .network import fabric as _fabric
 from .network.fabric import (Fabric, Flight, InjectionSource, _clock_eval,
                              _clock_ge)
 from .workload import Kernel, WavefrontState, Workgroup

@@ -12,9 +12,9 @@ predictor.
 from __future__ import annotations
 
 import math
-from typing import List, Optional, Tuple
+from typing import Optional
 
-from .graph import Component, Device, Infrastructure, Instance, LinkType
+from .graph import Component, Device, Infrastructure, LinkType
 
 
 # ---------------------------------------------------------------------------

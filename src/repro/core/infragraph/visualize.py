@@ -4,9 +4,8 @@ users can check the graph they defined is the one they intended."""
 from __future__ import annotations
 
 from collections import Counter
-from typing import Dict, Optional
 
-from .graph import FQGraph, Infrastructure
+from .graph import Infrastructure
 
 
 def to_dot(infra: Infrastructure, collapse_devices: bool = True) -> str:

@@ -18,13 +18,12 @@ This module provides:
 from __future__ import annotations
 
 import json
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass
 from typing import Dict, List, Optional, Tuple
 
 from .instructions import MemRef, Space
-from .operations import (BarrierOp, FenceOp, FusedReduceOp, GpuOp, LoadOp,
-                         MemcpyOp, NopOp, ReduceOp, SemaphoreAcquireOp,
-                         SemaphoreReleaseOp, StoreOp)
+from .operations import (BarrierOp, FenceOp, FusedReduceOp, GpuOp, MemcpyOp,
+                         NopOp, SemaphoreAcquireOp, SemaphoreReleaseOp)
 from .workload import Kernel, Workgroup
 
 VALID_OPS = ("put", "get", "copy", "reduce", "signal", "wait", "barrier",
@@ -99,15 +98,60 @@ class Program:
                        {k: int(v) for k, v in d["buffers"].items()}, gpus)
 
     def validate(self) -> None:
-        assert len(self.gpus) == self.num_ranks
+        """Structural validation: cheap per-op invariants that make the
+        program meaningless if violated.  Raises ``ValueError`` at the
+        first offense (with the ``(rank, wg, op)`` cursor).  Semantic
+        analysis — deadlock, race, coverage — lives in
+        :mod:`repro.core.check` and returns a report instead of raising.
+        """
+        if len(self.gpus) != self.num_ranks:
+            raise ValueError(f"program {self.name!r}: num_ranks="
+                             f"{self.num_ranks} but {len(self.gpus)} gpu "
+                             f"entries")
         for r, wgs in enumerate(self.gpus):
-            for wg in wgs:
-                for o in wg:
-                    if o.op not in VALID_OPS:
-                        raise ValueError(f"rank {r}: bad op {o.op!r}")
-                    if o.op in ("put", "get") and not (
-                            0 <= o.remote_rank < self.num_ranks):
-                        raise ValueError(f"rank {r}: bad remote {o.remote_rank}")
+            for w, wg in enumerate(wgs):
+                for i, o in enumerate(wg):
+                    try:
+                        self._validate_op(o)
+                    except ValueError as exc:
+                        raise ValueError(
+                            f"program {self.name!r} (rank {r}, wg {w}, "
+                            f"op {i}): {exc}") from None
+
+    def _validate_op(self, o: CollOp) -> None:
+        if o.op not in VALID_OPS:
+            raise ValueError(f"bad op {o.op!r}")
+        if o.op in ("put", "get") and not (0 <= o.remote_rank < self.num_ranks):
+            raise ValueError(f"{o.op} remote_rank {o.remote_rank} outside "
+                             f"0..{self.num_ranks - 1}")
+        if o.op == "signal" and not (0 <= o.remote_rank < self.num_ranks):
+            raise ValueError(f"signal remote_rank {o.remote_rank} outside "
+                             f"0..{self.num_ranks - 1}")
+        if o.op in ("signal", "wait") and o.sem < 0:
+            raise ValueError(f"{o.op} needs sem >= 0, got {o.sem}")
+        if o.op == "wait" and o.expected < 1:
+            raise ValueError(f"wait needs expected >= 1, got {o.expected}")
+        if o.op in ("put", "get", "copy", "reduce"):
+            if o.size <= 0:
+                raise ValueError(f"{o.op} needs size > 0, got {o.size}")
+            srcs = (o.srcs or []) if o.op == "reduce" else \
+                [(o.src_buf, o.src_off, -1)]
+            for (buf, off, src_rank) in srcs:
+                self._validate_range(o.op, "src", buf, off, o.size)
+                if o.op == "reduce" and not (-1 <= src_rank < self.num_ranks):
+                    raise ValueError(f"reduce src rank {src_rank} outside "
+                                     f"-1..{self.num_ranks - 1}")
+            self._validate_range(o.op, "dst", o.dst_buf, o.dst_off, o.size)
+
+    def _validate_range(self, op: str, role: str, buf: str, off: int,
+                        size: int) -> None:
+        if buf not in self.buffers:
+            raise ValueError(f"{op} {role} references unknown buffer {buf!r} "
+                             f"(declared: {sorted(self.buffers)})")
+        cap = self.buffers[buf]
+        if off < 0 or off + size > cap:
+            raise ValueError(f"{op} {role} range {buf}[{off}:{off + size}] "
+                             f"outside buffer of {cap} bytes")
 
     def op_count(self) -> int:
         return sum(len(wg) for wgs in self.gpus for wg in wgs)

@@ -17,7 +17,7 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from ..engine import Engine
-from .fabric import CONTROL, DATA, Fabric, Flight
+from .fabric import DATA, Fabric
 
 
 def alpha_beta_time(size_bytes: float, alpha_ns: float, beta_GBps: float) -> float:

@@ -13,8 +13,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Iterator, List, Optional
 
-from .instructions import (IKind, Instruction, InstrStream, LOAD, MemRef,
-                           REDUCE, STORE, Space, WAITCNT, entry_of)
+from .instructions import (Instruction, InstrStream, LOAD, MemRef, REDUCE,
+                           STORE, WAITCNT, entry_of)
 
 
 @dataclass

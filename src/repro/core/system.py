@@ -23,8 +23,7 @@ from __future__ import annotations
 
 from typing import List, Optional
 
-from .backends import (CollectiveResult, CoarseBackend, FineBackend,
-                       SimResult, payload_bytes, simulate)
+from .backends import CollectiveResult, CoarseBackend, FineBackend
 from .cluster import Cluster, NocConfig
 from .gpu_model import GpuConfig
 from .mscclpp import Program

@@ -17,11 +17,25 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .mscclpp import CollOp, Program
+from .mscclpp import Program
 
 
 class DeadlockError(RuntimeError):
-    pass
+    """The executor found live cursors but none runnable.
+
+    ``blocked`` lists one dict per stuck cursor — ``rank``, ``wg``, ``pc``,
+    the blocking ``op`` (wait/barrier), and for waits the semaphore id,
+    the ``expected`` count and how many signals ``have`` arrived.
+    ``semaphores`` snapshots every ``(rank, sem) -> count``.  The same
+    hang is reported *statically* (no execution) by
+    :func:`repro.core.check.check_program`.
+    """
+
+    def __init__(self, message: str, blocked: Optional[List[dict]] = None,
+                 semaphores: Optional[Dict[Tuple[int, int], int]] = None):
+        super().__init__(message)
+        self.blocked = blocked or []
+        self.semaphores = dict(semaphores or {})
 
 
 def make_inputs(program: Program, seed: int = 0) -> List[np.ndarray]:
@@ -112,11 +126,23 @@ def execute(program: Program, inputs: Optional[List[np.ndarray]] = None,
             break
         runnable = [(r, w) for (r, w) in live if ready(r, w)]
         if not runnable:
-            stuck = [(r, w, program.gpus[r][w][pcs[(r, w)]].op,
-                      program.gpus[r][w][pcs[(r, w)]].sem,
-                      program.gpus[r][w][pcs[(r, w)]].expected)
-                     for (r, w) in live]
-            raise DeadlockError(f"no runnable cursor; stuck at {stuck[:8]}")
+            blocked = []
+            for (r, w) in live:
+                o = program.gpus[r][w][pcs[(r, w)]]
+                entry = {"rank": r, "wg": w, "pc": pcs[(r, w)], "op": o.op}
+                if o.op == "wait":
+                    entry["sem"] = o.sem
+                    entry["expected"] = o.expected
+                    entry["have"] = sems.get((r, o.sem), 0)
+                blocked.append(entry)
+            brief = [(b["rank"], b["wg"], b["pc"], b["op"],
+                      b.get("sem", -1), b.get("have", "-"),
+                      b.get("expected", "-")) for b in blocked[:8]]
+            raise DeadlockError(
+                f"no runnable cursor after {steps} step(s); "
+                f"{len(blocked)} cursor(s) stuck "
+                f"(rank, wg, pc, op, sem, have, expected): {brief}",
+                blocked=blocked, semaphores=sems)
         r, w = rng.choice(runnable)
         step(r, w)
         steps += 1

@@ -16,7 +16,7 @@ import os
 import shutil
 import tempfile
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np

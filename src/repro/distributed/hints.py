@@ -11,9 +11,8 @@ not divisible — so one call site serves every (arch, mesh) combination.
 
 from __future__ import annotations
 
-import math
 from contextlib import contextmanager
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import numpy as np

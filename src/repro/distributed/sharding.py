@@ -18,13 +18,13 @@ Plan summary (axes: optional 'pod' (pure DP), 'data' (DP/FSDP), 'model'
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..configs.base import ArchConfig, ShapeConfig
+from ..configs.base import ArchConfig
 
 # parameter-name classification
 _COL_PARALLEL = {"wq", "wk", "wv", "wg", "wu", "cm_k", "w_x", "w_y", "w_a",

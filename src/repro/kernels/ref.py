@@ -9,7 +9,6 @@ bug in the clever form cannot hide in the reference.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

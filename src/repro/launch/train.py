@@ -14,7 +14,6 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -22,9 +21,7 @@ import jax.numpy as jnp
 from ..configs.base import ShapeConfig, get, reduced
 from ..data.pipeline import PipelineConfig, TokenPipeline
 from ..distributed import hints
-from ..distributed import sharding as shard
 from ..distributed.checkpoint import CheckpointManager
-from ..models import api
 from ..optim.adamw import AdamWConfig
 from ..train.step import init_train_state, make_train_step
 from .mesh import make_cpu_mesh

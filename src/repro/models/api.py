@@ -12,7 +12,7 @@ kind (tokens, labels, stub frame/patch embeddings).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,6 @@ import numpy as np
 
 from ..configs.base import ArchConfig, ShapeConfig
 from . import encdec, griffin, rwkv6, transformer
-from . import layers as L
 
 Params = Dict[str, Any]
 

@@ -9,8 +9,7 @@ the encoder memory.  Decode caches both the self-attn KV and the
 
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

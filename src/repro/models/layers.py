@@ -9,8 +9,7 @@ flash-attention kernel (src/repro/kernels) implements the same contract.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

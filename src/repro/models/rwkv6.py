@@ -120,7 +120,6 @@ def _wkv6_chunked_impl(r, k, v, logw, u, state, chunk: int = 32):
         c_end = c[:, -1:]                       # (B,1,H,N)
         # intra-chunk: scores[t,s] = sum_n r[t]k[s]exp(c_prev[t]-c[s]), s<t
         rt = rch.astype(jnp.float32) * jnp.exp(c_prev)
-        ks_ = kch.astype(jnp.float32) * jnp.exp(-c)
         # mask strictly-lower triangular; bound each factor via the masked
         # product trick: exp(c_prev[t]-c[s]) <= 1 for s <= t-1, but the
         # factorized exps individually can overflow — so fold the bound in:

@@ -11,7 +11,6 @@ size are depth-independent — essential for the 512-device dry-run.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

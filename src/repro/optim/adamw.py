@@ -8,7 +8,7 @@ under the FSDP parameter sharding of distributed/sharding.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

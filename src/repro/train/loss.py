@@ -9,7 +9,6 @@ recomputes per chunk (the scan is rematerialized), keeping live memory at
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

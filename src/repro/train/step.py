@@ -6,13 +6,12 @@ cell and what ``launch/train.py`` runs for real on CPU smoke scales.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ArchConfig, ShapeConfig
+from ..configs.base import ArchConfig
 from ..models import api
 from ..optim import adamw
 from .loss import chunked_xent

@@ -11,11 +11,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import SHAPES, ShapeConfig, get, reduced, registry
+from repro.configs import ShapeConfig, get, reduced, registry
 from repro.models import api
 from repro.optim.adamw import AdamWConfig
-from repro.train.step import (init_train_state, make_serve_step,
-                              make_train_step)
+from repro.train.step import init_train_state, make_train_step
 
 ARCHS = sorted(registry().keys())
 SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")

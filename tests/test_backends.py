@@ -9,8 +9,7 @@ InfraGraph-driven cluster wiring.
 import pytest
 
 from repro.core import collectives as C
-from repro.core.backends import (AnalyticBackend, CoarseBackend, FIDELITIES,
-                                 FineBackend, ProgramInterpreter, simulate)
+from repro.core.backends import FIDELITIES, ProgramInterpreter, simulate
 from repro.core.cluster import NocConfig
 from repro.core.infragraph import single_tier_fabric
 from repro.core.infragraph.blueprints import ring_fabric

@@ -1,0 +1,486 @@
+"""The static workload verifier: seeded bugs must fire the right rule at
+the right location, and every built-in generator must verify clean.
+
+Detection tests mutate a known-good program — drop a signal, swap a
+semaphore id, shrink a put — and assert the corresponding rule and
+``(rank, wg, op_index)``.  The no-false-positive sweep runs every
+generator in :mod:`repro.core.collectives` across rank counts and
+workgroup splits (the same sweep CI runs via ``python -m repro.check
+--collectives``).
+"""
+
+import copy
+import json
+import warnings
+
+import pytest
+
+from repro.core import collectives as C
+from repro.core.chakra import ExecutionTrace
+from repro.core.check import (CheckError, CheckWarning, check_infrastructure,
+                              check_program, check_trace, check_workload)
+from repro.core.check.cli import builtin_collective_reports, main as check_cli
+from repro.core.infragraph import single_tier_fabric
+from repro.core.mscclpp import CollOp, Program
+from repro.core.verify import DeadlockError, execute
+
+
+def find_op(prog: Program, kind: str, rank=None):
+    """First (rank, wg, i, op) matching ``kind`` (optionally on ``rank``)."""
+    for r, wgs in enumerate(prog.gpus):
+        if rank is not None and r != rank:
+            continue
+        for w, ops in enumerate(wgs):
+            for i, o in enumerate(ops):
+                if o.op == kind:
+                    return r, w, i, o
+    raise AssertionError(f"no {kind} op in {prog.name}")
+
+
+def rules(report):
+    return {d.rule for d in report.diagnostics}
+
+
+# ------------------------------------------------------------ clean sweep
+def test_every_builtin_generator_verifies_clean():
+    """The acceptance bar: zero diagnostics on all builtin collectives,
+    across rank counts, workgroup splits, and protocols."""
+    reports = builtin_collective_reports()
+    dirty = [(label, rep.format()) for label, rep in reports if not rep.clean]
+    assert not dirty, "false positives:\n" + "\n".join(
+        f"{label}:\n{text}" for label, text in dirty)
+    assert len(reports) > 100    # the sweep actually swept
+
+
+def test_clean_program_report_shape():
+    rep = check_program(C.ring_all_reduce(4, 48, 2, "put"))
+    assert rep.ok and rep.clean
+    assert rep.errors == [] and rep.warnings == []
+    parsed = json.loads(rep.to_json())
+    assert parsed["errors"] == 0 and parsed["diagnostics"] == []
+
+
+# --------------------------------------------------------------- deadlock
+def test_dropped_signal_reports_undersignal_at_wait():
+    prog = C.ring_all_gather(4, 64, 1, "put")
+    r, w, i, sig = find_op(prog, "signal", rank=2)
+    target = sig.remote_rank
+    del prog.gpus[r][w][i]
+    rep = check_program(prog)
+    assert not rep.ok
+    under = rep.by_rule("DL-UNDERSIGNAL")
+    assert under, rep.format()
+    # the starved wait is on the dropped signal's target rank
+    assert all(d.severity == "error" for d in under)
+    assert any(d.loc.rank == target for d in under), rep.format()
+
+
+def test_swapped_sem_ids_report_deadlock():
+    """Exchange two semaphore ids on one rank's signals: its peers wake
+    in the wrong order / never, and the checker must find the hang."""
+    prog = C.ring_all_gather(4, 64, 1, "put")
+    sems = sorted({o.sem for o in prog.gpus[1][0] if o.op == "signal"})
+    assert len(sems) >= 2
+    a, b = sems[0], sems[1]
+    for o in prog.gpus[1][0]:
+        if o.op == "signal":
+            o.sem = b if o.sem == a else (a if o.sem == b else o.sem)
+    rep = check_program(prog)
+    assert not rep.ok
+    assert rules(rep) & {"DL-CYCLE", "DL-UNDERSIGNAL", "DL-STUCK"}, \
+        rep.format()
+
+
+def test_circular_wait_reports_cycle_with_witness():
+    """Two ranks, each signaling only *after* its wait: classic cycle."""
+    buffers = {"input": 8, "output": 16}
+    gpus = []
+    for r in range(2):
+        peer = 1 - r
+        gpus.append([[
+            CollOp("wait", sem=0, expected=1),
+            CollOp("signal", remote_rank=peer, sem=0),
+        ]])
+    prog = Program("circular", "all_gather", 2, buffers, gpus)
+    rep = check_program(prog)
+    cyc = rep.by_rule("DL-CYCLE")
+    assert cyc, rep.format()
+    witness = cyc[0].witness
+    assert witness and len(witness["cycle"]) >= 2
+
+
+def test_barrier_arity_mismatch_reported():
+    """wg0 runs 2 barriers, wg1 runs 1: rank can never retire the second."""
+    buffers = {"input": 8, "output": 8}
+    gpus = [[[CollOp("barrier"), CollOp("barrier")],
+             [CollOp("barrier")]]]
+    prog = Program("lopsided", "all_gather", 1, buffers, gpus)
+    rep = check_program(prog)
+    assert "DL-BARRIER-ARITY" in rules(rep), rep.format()
+
+
+def test_static_and_dynamic_deadlock_agree_on_halving_doubling():
+    """Regression for the seed's halving-doubling dropped-signal bug: the
+    same mutation must be caught statically (DL rule, no execution) and
+    dynamically (DeadlockError with blocked-cursor context)."""
+    prog = C.halving_doubling_all_reduce(4, 64, 2)
+    r, w, i, _ = find_op(prog, "signal")
+    del prog.gpus[r][w][i]
+
+    rep = check_program(prog)
+    assert not rep.ok
+    assert rules(rep) & {"DL-UNDERSIGNAL", "DL-CYCLE", "DL-STUCK"}, \
+        rep.format()
+    static_cursors = {d.loc.cursor for d in rep.errors
+                      if d.rule.startswith("DL-")}
+
+    with pytest.raises(DeadlockError) as exc:
+        execute(prog, seed=7)
+    blocked = exc.value.blocked
+    assert blocked, "DeadlockError must carry blocked-cursor context"
+    for b in blocked:
+        assert {"rank", "wg", "pc", "op"} <= set(b)
+        if b["op"] == "wait":
+            assert b["have"] < b["expected"]
+    # at least one dynamically-stuck cursor was named statically
+    dynamic_cursors = {(b["rank"], b["wg"], b["pc"]) for b in blocked}
+    assert static_cursors & dynamic_cursors, \
+        (sorted(static_cursors), sorted(dynamic_cursors))
+    assert exc.value.semaphores is not None
+
+
+# ------------------------------------------------------------------ races
+def test_dropped_wait_reports_race():
+    prog = C.ring_reduce_scatter(4, 48, 1, "put")
+    r, w, i, _ = find_op(prog, "wait", rank=0)
+    del prog.gpus[r][w][i]
+    rep = check_program(prog)
+    race = [d for d in rep.diagnostics if d.rule.startswith("RACE-")]
+    assert race, rep.format()
+    d = race[0]
+    assert d.severity == "error"
+    assert d.witness["buffer"] == "scratch"
+    # witness names both access sites
+    assert d.witness["a"] and d.witness["b"]
+
+
+def test_overlapping_unordered_puts_report_ww_race():
+    """Two ranks write the same remote interval with no ordering."""
+    buffers = {"input": 16, "output": 16}
+    gpus = [
+        [[CollOp("put", src_buf="input", src_off=0, dst_buf="output",
+                 dst_off=0, size=16, remote_rank=2)]],
+        [[CollOp("put", src_buf="input", src_off=0, dst_buf="output",
+                 dst_off=8, size=8, remote_rank=2)]],
+        [[]],
+    ]
+    prog = Program("ww_race", "all_to_all", 3, buffers, gpus)
+    rep = check_program(prog)
+    ww = rep.by_rule("RACE-WW")
+    assert ww, rep.format()
+    lo, hi = ww[0].witness["overlap"]
+    assert (lo, hi) == (8, 16)
+
+
+def test_read_read_overlap_is_not_a_race():
+    """Two ranks *get* from the same remote interval: no diagnostic."""
+    buffers = {"input": 16, "output": 16}
+    gpus = [
+        [[]],
+        [[CollOp("get", src_buf="input", src_off=0, dst_buf="output",
+                 dst_off=0, size=16, remote_rank=0)]],
+        [[CollOp("get", src_buf="input", src_off=0, dst_buf="output",
+                 dst_off=0, size=16, remote_rank=0)]],
+    ]
+    # "broadcast" keeps the output-coverage pass out of the way: this
+    # test is about the race pass alone
+    prog = Program("rr_ok", "broadcast", 3, buffers, gpus)
+    rep = check_program(prog)
+    assert not any(d.rule.startswith("RACE-") for d in rep.diagnostics), \
+        rep.format()
+    assert rep.clean
+
+
+# --------------------------------------------------- bounds and coverage
+def test_oob_transfer_reports_buf_oob_not_raise():
+    prog = C.ring_all_gather(4, 64, 1, "put")
+    r, w, i, o = find_op(prog, "put", rank=2)
+    o.size = 10 ** 6
+    rep = check_program(prog)     # reports, never raises
+    oob = rep.by_rule("BUF-OOB")
+    assert oob and oob[0].loc.cursor == (r, w, i), rep.format()
+
+
+def test_unknown_buffer_reported():
+    prog = C.ring_all_gather(2, 32, 1, "put")
+    r, w, i, o = find_op(prog, "copy")
+    o.src_buf = "ghost"
+    rep = check_program(prog)
+    assert "BUF-UNKNOWN" in rules(rep)
+
+
+def test_truncated_all_gather_reports_coverage_gap():
+    prog = C.ring_all_gather(4, 64, 1, "put")
+    r, w, i, o = find_op(prog, "put", rank=1)
+    o.size -= 8
+    rep = check_program(prog)
+    cov = rep.by_rule("COV-OUTPUT")
+    assert cov, rep.format()
+    assert "never written" in cov[0].message
+
+
+# --------------------------------------------------- Program.validate()
+def test_validate_rejects_oob_and_unknown_buffers():
+    prog = C.ring_all_gather(4, 64, 1, "put")
+    bad = copy.deepcopy(prog)
+    find_op(bad, "put")[3].src_off = 10 ** 9
+    with pytest.raises(ValueError, match="outside buffer"):
+        bad.validate()
+    bad = copy.deepcopy(prog)
+    find_op(bad, "copy")[3].dst_buf = "nope"
+    with pytest.raises(ValueError, match="unknown buffer"):
+        bad.validate()
+
+
+def test_validate_rejects_nonpositive_sizes_and_bad_reduce_ranks():
+    prog = C.ring_all_reduce(4, 48, 1, "put")
+    bad = copy.deepcopy(prog)
+    find_op(bad, "reduce")[3].size = 0
+    with pytest.raises(ValueError, match="size > 0"):
+        bad.validate()
+    bad = copy.deepcopy(prog)
+    op = find_op(bad, "reduce")[3]
+    buf, off, _ = op.srcs[0]
+    op.srcs[0] = (buf, off, 99)
+    with pytest.raises(ValueError, match="src rank 99"):
+        bad.validate()
+
+
+def test_validate_rejects_rank_count_mismatch_and_bad_sems():
+    prog = C.ring_all_gather(4, 64, 1, "put")
+    bad = copy.deepcopy(prog)
+    bad.num_ranks = 5
+    with pytest.raises(ValueError, match="gpu entries"):
+        bad.validate()
+    bad = copy.deepcopy(prog)
+    find_op(bad, "wait")[3].sem = -2
+    with pytest.raises(ValueError, match="sem >= 0"):
+        bad.validate()
+    bad = copy.deepcopy(prog)
+    find_op(bad, "signal")[3].remote_rank = 17
+    with pytest.raises(ValueError, match="remote_rank 17"):
+        bad.validate()
+
+
+# ------------------------------------------------------------ trace lint
+def _trace_with_coll(n=4, kind="all_gather", algo="ring"):
+    et = ExecutionTrace(num_ranks=n)
+    comp = {r: et.comp(r, f"c{r}", flops=1e6) for r in range(n)}
+    et.coll(0, kind, 4096, algo,
+            deps_by_rank={r: [comp[r]] for r in range(n)})
+    return et
+
+
+def test_clean_trace_verifies_clean():
+    assert check_trace(_trace_with_coll()).clean
+
+
+def test_trace_cycle_reported_and_rejected():
+    et = _trace_with_coll()
+    a = et.comp(0, "x", flops=1)
+    b = et.comp(0, "y", flops=1, deps=[a])
+    a.deps.append(b.nid)
+    rep = check_trace(et, deep=False)
+    cyc = rep.by_rule("TR-CYCLE")
+    assert cyc and cyc[0].witness["cycle"]
+    with pytest.raises(ValueError, match="dependency cycle"):
+        et.validate()
+
+
+def test_trace_dangling_dep_and_missing_rank_reported():
+    et = ExecutionTrace(num_ranks=3)
+    n0 = et.comp(0, "a", flops=1)
+    n0.deps.append(999)
+    et.coll(0, "all_gather", 1024, "ring", deps_by_rank={})
+    # drop rank 2's half of the collective
+    et.nodes = [n for n in et.nodes
+                if not (n.kind == "coll" and n.rank == 2)]
+    rep = check_trace(et, deep=False)
+    assert {"TR-DANGLING", "TR-COLL"} <= rules(rep), rep.format()
+
+
+def test_trace_deep_check_surfaces_generator_failure():
+    """halving_doubling cannot be generated for 3 ranks: the deep check
+    reports it instead of blowing up at simulate() time."""
+    et = _trace_with_coll(n=3, algo="halving_doubling")
+    rep = check_trace(et, deep=True)
+    assert not rep.ok
+    assert any("cannot be generated" in d.message
+               for d in rep.by_rule("TR-COLL")), rep.format()
+
+
+# ------------------------------------------------------------ infra lint
+def test_infra_zero_bandwidth_link_reported():
+    infra = single_tier_fabric(2, link_GBps=0.0)
+    rep = check_infrastructure(infra)
+    assert any(d.severity == "error" for d in rep.by_rule("IG-LINK-BW"))
+
+
+def test_infra_capacity_below_rank_count_reported():
+    infra = single_tier_fabric(2)
+    rep = check_infrastructure(infra, num_ranks=64)
+    cap = rep.by_rule("IG-CAPACITY")
+    assert cap and cap[0].witness["num_ranks"] == 64
+
+
+def test_infra_clean_fabric_is_clean():
+    assert check_infrastructure(single_tier_fabric(4), num_ranks=4).clean
+
+
+def test_check_workload_merges_infra_without_poisoning_cache():
+    prog = C.ring_all_gather(2, 32, 1, "put")
+    bad_infra = single_tier_fabric(2, link_GBps=0.0)
+    merged = check_workload(prog, bad_infra)
+    assert "IG-LINK-BW" in rules(merged)
+    # a second check of the same program alone must come back clean
+    assert check_workload(prog).clean
+
+
+# ------------------------------------------------- simulate() integration
+def test_simulate_default_warns_on_buggy_program():
+    from repro.core.backends import simulate
+    prog = C.ring_all_gather(4, 64, 1, "put")
+    find_op(prog, "put", rank=1)[3].size -= 8
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        simulate(prog, fidelity="analytic")
+    assert any(issubclass(w.category, CheckWarning) for w in caught)
+
+
+def test_simulate_check_error_raises_with_report():
+    from repro.core.backends import simulate
+    prog = C.ring_all_gather(4, 64, 1, "put")
+    r, w, i, _ = find_op(prog, "signal", rank=2)
+    del prog.gpus[r][w][i]
+    with pytest.raises(CheckError) as exc:
+        simulate(prog, fidelity="analytic", check="error")
+    assert exc.value.report.errors
+    assert "DL-" in exc.value.report.errors[0].rule
+
+
+def test_simulate_check_off_and_clean_are_silent():
+    from repro.core.backends import simulate
+    prog = C.ring_all_gather(4, 64, 1, "put")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        simulate(prog, fidelity="analytic")                  # clean: silent
+        bad = copy.deepcopy(prog)
+        find_op(bad, "put", rank=1)[3].size -= 8
+        simulate(bad, fidelity="analytic", check="off")      # off: silent
+    with pytest.raises(ValueError, match="choose 'off'"):
+        simulate(prog, fidelity="analytic", check="loud")
+
+
+def test_simulate_checks_traces_too():
+    from repro.core.backends import simulate
+    et = _trace_with_coll(n=3, algo="halving_doubling")
+    with pytest.raises(CheckError):
+        simulate(et, fidelity="analytic", check="error")
+
+
+# -------------------------------------------------------------------- CLI
+def test_cli_clean_program_exits_zero(tmp_path, capsys):
+    path = tmp_path / "prog.json"
+    path.write_text(C.ring_all_gather(4, 64, 1, "put").to_json())
+    assert check_cli([str(path)]) == 0
+    assert "0 error(s)" in capsys.readouterr().out
+
+
+def test_cli_buggy_program_exits_one_with_location(tmp_path, capsys):
+    prog = C.ring_all_gather(4, 64, 1, "put")
+    r, w, i, _ = find_op(prog, "signal", rank=2)
+    del prog.gpus[r][w][i]
+    path = tmp_path / "bad.json"
+    path.write_text(prog.to_json())
+    assert check_cli([str(path)]) == 1
+    out = capsys.readouterr().out
+    assert "DL-" in out and "rank" in out
+
+
+def test_cli_json_mode_and_trace_and_infra(tmp_path, capsys):
+    ppath = tmp_path / "p.json"
+    ppath.write_text(C.ring_all_gather(2, 32, 1, "put").to_json())
+    tpath = tmp_path / "t.json"
+    tpath.write_text(_trace_with_coll().to_json())
+    ipath = tmp_path / "i.json"
+    ipath.write_text(single_tier_fabric(2).to_json())
+    assert check_cli(["--json", str(ppath), str(tpath), str(ipath)]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert len(payload) == 3
+    assert all(entry["errors"] == 0 for entry in payload)
+
+
+def test_cli_unreadable_file_exits_two(tmp_path, capsys):
+    path = tmp_path / "garbage.json"
+    path.write_text("{\"what\": 1}")
+    assert check_cli([str(path)]) == 2
+
+
+def test_cli_collectives_sweep_is_clean(capsys):
+    assert check_cli(["--collectives"]) == 0
+    assert "0 error(s), 0 warning(s)" in capsys.readouterr().out
+
+
+# ---------------------------------------------------- property mutations
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    GENS = [
+        lambda n, nwg: C.ring_all_gather(n, 32 * n * nwg, nwg, "put"),
+        lambda n, nwg: C.ring_reduce_scatter(n, 32 * n * nwg, nwg, "put"),
+        lambda n, nwg: C.ring_all_reduce(n, 32 * n * nwg, nwg, "put"),
+        lambda n, nwg: C.direct_all_gather(n, 32 * n * nwg, nwg, "get"),
+    ]
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, len(GENS) - 1), st.integers(2, 6),
+           st.integers(1, 2), st.integers(0, 10 ** 6))
+    def test_dropping_any_signal_is_always_caught(gi, n, nwg, pick):
+        prog = GENS[gi](n, nwg)
+        sigs = [(r, w, i) for r, wgs in enumerate(prog.gpus)
+                for w, ops in enumerate(wgs)
+                for i, o in enumerate(ops) if o.op == "signal"]
+        if not sigs:
+            return
+        r, w, i = sigs[pick % len(sigs)]
+        del prog.gpus[r][w][i]
+        rep = check_program(prog)
+        assert not rep.ok, rep.format()
+        assert any(d.rule.startswith("DL-") for d in rep.errors)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, len(GENS) - 1), st.integers(2, 6),
+           st.integers(0, 10 ** 6), st.integers(1, 31))
+    def test_shrinking_any_put_is_always_caught(gi, n, pick, shrink):
+        prog = GENS[gi](n, 1)
+        puts = [(r, w, i) for r, wgs in enumerate(prog.gpus)
+                for w, ops in enumerate(wgs)
+                for i, o in enumerate(ops)
+                if o.op in ("put", "get") and o.dst_buf == "output"]
+        if not puts:
+            return
+        r, w, i = puts[pick % len(puts)]
+        o = prog.gpus[r][w][i]
+        if o.size <= shrink:
+            return
+        o.size -= shrink
+        rep = check_program(prog)
+        assert not rep.clean, rep.format()
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_mutations():
+        pass

@@ -5,7 +5,7 @@ import pytest
 
 from repro.core import collectives as C
 from repro.core.mscclpp import Program
-from repro.core.verify import check_program, execute, make_inputs
+from repro.core.verify import check_program
 
 NR = [2, 3, 4, 5, 8]
 NR_POW2 = [2, 4, 8]

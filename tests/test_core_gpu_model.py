@@ -115,7 +115,6 @@ def test_barrier_syncs_workgroups_within_kernel():
 
 
 def test_barrier_with_undispatched_workgroups_raises():
-    from repro.core.gpu_model import GpuConfig
     noc = NocConfig(mesh_x=1, mesh_y=1, cus_per_router=1)  # 1 CU
     c = Cluster(1, noc=noc)
     wgs = [Workgroup([BarrierOp()], num_wavefronts=1) for _ in range(2)]

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import SHAPES, ShapeConfig, get, reduced
+from repro.configs import ShapeConfig, get, reduced
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.distributed import hints
 from repro.distributed import sharding as shard
@@ -38,7 +38,6 @@ def test_param_specs_divisible_on_production_mesh_shapes():
     for arch in ("llama3-8b", "grok-1-314b", "moonshot-v1-16b-a3b",
                  "rwkv6-7b", "recurrentgemma-9b", "gemma-2b"):
         cfg = get(arch)
-        mesh = jax.make_mesh((1, 1), ("data", "model"))
         # emulate the 16x16 divisibility question without 256 devices:
         # param_spec uses _div against the REAL mesh, so build specs with a
         # fake mesh object exposing shape 16/16
@@ -91,8 +90,7 @@ def test_sharded_train_step_runs_on_cpu_mesh():
     shape = ShapeConfig("t", 32, 2, "train")
     with hints.use_mesh(mesh):
         state = init_train_state(jax.random.PRNGKey(0), cfg)
-        st_specs = shard.state_specs(
-            jax.eval_shape(lambda: state), cfg, mesh)
+        shard.state_specs(jax.eval_shape(lambda: state), cfg, mesh)
         step = jax.jit(make_train_step(cfg, AdamWConfig()))
         batch = {k: jnp.asarray(v)
                  for k, v in api.make_batch(cfg, shape).items()}
@@ -131,7 +129,6 @@ def test_checkpoint_partial_write_not_visible(tmp_path):
 def test_elastic_restore_resharding(tmp_path):
     """Checkpoint under one sharding, restore under another (elastic)."""
     cm = CheckpointManager(str(tmp_path))
-    mesh1 = jax.make_mesh((1,), ("data",))
     x = jnp.arange(16.0).reshape(4, 4)
     cm.save(1, {"w": x})
     mesh2 = jax.make_mesh((1, 1), ("data", "model"))

@@ -1,15 +1,13 @@
 """InfraGraph representation, blueprints, translators, visualizer."""
 
-import json
 
 import pytest
 
-from repro.core.engine import Engine
 from repro.core.infragraph import (Infrastructure, clos_fat_tree_fabric,
                                    generic_gpu_device, single_tier_fabric,
                                    summary, switch_device, to_dot, to_fabric,
                                    to_simple_topology, torus2d_fabric,
-                                   tpu_pod_fabric, tpu_v5e_device)
+                                   tpu_pod_fabric)
 from repro.core.network.fabric import DATA
 
 

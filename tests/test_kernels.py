@@ -142,7 +142,6 @@ def test_rg_lru_kernel_matches_ref(B, T, R, bt, br, dtype):
 
 def test_rg_lru_matches_model_associative_scan():
     """Kernel == the model's associative-scan formulation."""
-    from repro.models.griffin import rg_lru
     # build equivalent a/b from a tiny param set
     B, T, R = 1, 64, 128
     ks = jax.random.split(jax.random.PRNGKey(7), 2)

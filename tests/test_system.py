@@ -6,8 +6,6 @@ import os
 import subprocess
 import sys
 
-import numpy as np
-import pytest
 
 
 def _run(mod, *args, timeout=400):

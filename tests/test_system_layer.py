@@ -62,7 +62,6 @@ def test_trace_executor_comp_then_collective():
     res = TraceExecutor(et, cl, comp_workgroups=4, coll_workgroups=2).run()
     assert res.time_ns > 0
     # collective must start after its rank's compute
-    comp_end = max(res.node_times[c.nid][1] for c in comp.values())
     coll_nodes = [n for n in et.nodes if n.kind == "coll"]
     assert all(res.node_times[n.nid][0] >= min(
         res.node_times[c.nid][1] for c in comp.values()) - 1
