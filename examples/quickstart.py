@@ -81,6 +81,26 @@ print(f"[check] seeded truncation -> {bad.errors[0].rule} at "
 #   python -m repro.check prog.json trace.json --json
 #   python -m repro.check --collectives      # verify every builtin
 
+# --- simulate a serving scenario --------------------------------------------
+# Latency-sensitive inference is the paper's headline motivation: compose a
+# seeded arrival process with a scenario builder and the result is a plain
+# ExecutionTrace — same simulate(), every tier — whose result carries
+# per-request tail latency extracted from request-tagged nodes.
+from repro.serve import (PoissonArrivals, ServingModel, continuous_batching,
+                         generate_requests)
+
+requests = generate_requests(PoissonArrivals(2000.0), n=16, seed=7,
+                             prompt_tokens=(16, 64), decode_tokens=(4, 16))
+model = ServingModel("demo", flops_per_token=2e6, weight_bytes=1e6,
+                     coll_bytes_per_token=4096, kv_bytes_per_token=2048)
+scenario = continuous_batching(model, requests, tp=4)
+for fidelity in ("analytic", "coarse"):
+    res = scenario.simulate(infra, fidelity=fidelity)
+    lat = res.latency
+    print(f"[serve:{fidelity:8s}] {lat.count} requests: "
+          f"p50 {lat.p50_ns/1e3:7.1f} us, p99 {lat.p99_ns/1e3:7.1f} us, "
+          f"goodput {lat.goodput_rps:7.1f} req/s")
+
 # --- 2. the framework -------------------------------------------------------
 from repro.configs import ShapeConfig, get, reduced
 from repro.models import api

@@ -1,0 +1,59 @@
+"""Serving study: how traffic shape and serving topology move the tail.
+
+Sweeps three seeded arrival processes (steady Poisson, diurnal-modulated,
+bursty MMPP) over two serving topologies — continuous-batching decode on
+one TP group, and disaggregated prefill/decode with per-request KV-cache
+p2p transfers — and prints per-request tail latency (p50/p99/p999) and
+goodput at the coarse tier, with an analytic cross-check.
+
+The model's per-token costs are derived from a real architecture config
+(the reduced llama3-8b variant), so flops, weight traffic, TP all-reduce
+payloads and KV-cache sizes are all internally consistent.
+
+Run:  PYTHONPATH=src python examples/serving_study.py
+"""
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.configs import get, reduced
+from repro.serve import (DiurnalArrivals, MMPPArrivals, PoissonArrivals,
+                         ServingModel, continuous_batching, disaggregated,
+                         generate_requests)
+
+SEED = 42
+N_REQUESTS = 32
+
+model = ServingModel.from_arch(reduced(get("llama3-8b")))
+print(f"model {model.name}: {model.flops_per_token:.2e} flops/token, "
+      f"{model.kv_bytes_per_token} KV bytes/token, "
+      f"{model.coll_bytes_per_token} TP all-reduce bytes/token\n")
+
+processes = [
+    PoissonArrivals(2000.0),
+    DiurnalArrivals(2000.0, amplitude=0.6, period_s=0.02),
+    MMPPArrivals(400.0, 8000.0, mean_dwell_s=0.002),
+]
+
+header = (f"{'traffic':34s} {'topology':22s} {'p50 us':>8s} "
+          f"{'p99 us':>8s} {'p999 us':>9s} {'goodput':>9s}")
+print(header)
+print("-" * len(header))
+for proc in processes:
+    reqs = generate_requests(proc, n=N_REQUESTS, seed=SEED,
+                             prompt_tokens=(16, 64), decode_tokens=(4, 24))
+    scenarios = [
+        ("continuous tp=4", continuous_batching(model, reqs, tp=4)),
+        ("disagg 2p+2d", disaggregated(model, reqs, prefill_ranks=2,
+                                       decode_ranks=2)),
+    ]
+    for label, scen in scenarios:
+        res = scen.simulate(fidelity="coarse", check="off")
+        quick = scen.simulate(fidelity="analytic", check="off")
+        lat = res.latency
+        print(f"{proc.name:34s} {label:22s} {lat.p50_ns/1e3:8.1f} "
+              f"{lat.p99_ns/1e3:8.1f} {lat.p999_ns/1e3:9.1f} "
+              f"{lat.goodput_rps:7.1f}/s"
+              f"   (analytic p99 {quick.latency.p99_ns/1e3:.1f} us)")
+print("\nserving study OK")

@@ -63,12 +63,20 @@ class AnalyticBackend:
         bw, lat = self.link_params()
         n = program.num_ranks
         buf = _GLOBAL_BUFFER.get(program.collective)
-        skew = max(rank_delay_ns) if rank_delay_ns else 0.0
-        skewed = bool(rank_delay_ns) and any(rank_delay_ns)
-        if buf is not None and buf in program.buffers and not skewed:
+        delays = list(rank_delay_ns) if rank_delay_ns else [0.0] * n
+        skew = max(delays)
+        # The closed form answers "every rank finishes at t" — only true
+        # when every rank launches together.  A *uniform* delay d merely
+        # shifts the collective (t + d keeps every percentile honest), but
+        # non-uniform skew changes the critical path per rank, so those
+        # runs must go through the interpreter or per_rank_done_ns would
+        # silently flatten every tail percentile to p50.
+        uniform = len(set(delays)) == 1
+        if buf is not None and buf in program.buffers and uniform:
             size = program.buffers[buf]
             t, algo = best_collective_time(program.collective, size, n,
                                            bw, lat)
+            t += delays[0]
             return CollectiveResult(
                 program=f"{program.name}.analytic[{algo}]",
                 collective=program.collective, nranks=n, time_ns=t,

@@ -86,7 +86,19 @@ class ProgramInterpreter:
         self.done_at: Dict[int, float] = {}
         self.live = 0
         for r in range(program.num_ranks):
-            for w in range(len(program.gpus[r])):
+            wgs = program.gpus[r]
+            if not wgs and not deferred:
+                # a rank with no workgroups at all (e.g. a p2p transfer's
+                # bystander) schedules no cursors and would otherwise never
+                # reach _rank_done, leaving done_at[r] missing and the
+                # backend's per_rank_done_ns assembly raising.  Complete it
+                # immediately — via an event, mirroring start_rank(), so
+                # completion observes a consistent `now` (and any launch
+                # delay still applies).
+                delay = rank_delay_ns[r] if rank_delay_ns else 0.0
+                self.e.schedule(delay, self._rank_done, r)
+                continue
+            for w in range(len(wgs)):
                 self.pcs[(r, w)] = 0
                 self.blocked[(r, w)] = False
                 self.live += 1

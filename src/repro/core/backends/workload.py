@@ -144,7 +144,15 @@ class _TierTraceExecutor:
         return self.dag.result(self.engine, self.fidelity)
 
     def _launch(self, node) -> None:
-        node.start_ns = self.engine.now
+        # arrival release: hold the node past its resolved deps until
+        # start_after_ns (request arrival jitter), then dispatch for real
+        release_ps = int(round(node.start_after_ns * 1000.0))
+        if release_ps > self.engine.now_ps:
+            self.engine.schedule_abs_ps(release_ps, self._dispatch, node)
+            return
+        self._dispatch(node)
+
+    def _dispatch(self, node) -> None:
         if node.kind == "comp":
             self._launch_comp(node)
         else:
@@ -175,6 +183,16 @@ class _TierTraceExecutor:
     # ------------------------------------------------------------ collectives
     def _launch_coll(self, node) -> None:
         cid = node.coll_id
+        key = (cid, node.rank)
+        if key in self._coll_nid:
+            # validate()/check_trace (TR-DUP-COLL) catch this statically;
+            # raising here too keeps completion routing from silently
+            # mis-wiring if a caller bypassed validation
+            raise RuntimeError(
+                f"rank {node.rank} appears twice in collective {cid} "
+                f"(nodes {self._coll_nid[key]} and {node.nid}); duplicate "
+                f"(coll_id, rank) halves corrupt completion routing "
+                f"[TR-DUP-COLL]")
         interp = self._interps.get(cid)
         if interp is None:
             from ..chakra import collective_program
@@ -186,7 +204,11 @@ class _TierTraceExecutor:
                 deferred=True,
                 on_rank_done=lambda r, t, cid=cid: self._coll_done(cid, r))
             self._interps[cid] = interp
-        self._coll_nid[(cid, node.rank)] = node.nid
+        self._coll_nid[key] = node.nid
+        # stamp at the moment the rank's half is actually released into the
+        # interpreter (after any arrival hold), not when the node was first
+        # handed to _launch — node_times-derived latencies stay honest
+        node.start_ns = self.engine.now
         interp.start_rank(node.rank)
 
     def _coll_done(self, cid: int, rank: int) -> None:

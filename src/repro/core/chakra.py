@@ -26,7 +26,10 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
+
+if TYPE_CHECKING:                                       # no runtime cycle
+    from ..serve.metrics import LatencyStats
 
 from .backends.base import SimResult
 from .backends.workload import DagScheduler
@@ -38,6 +41,11 @@ from .workload import Kernel, Workgroup
 
 #: per-node runtime state, never serialized
 _RUNTIME_FIELDS = ("start_ns", "end_ns")
+
+#: optional fields elided from JSON at their defaults, so dumps of traces
+#: that don't use them stay byte-identical to the pre-serving format
+_DEFAULT_ELIDED = {"start_after_ns": 0.0, "req_done": [],
+                   "src_rank": -1, "dst_rank": -1}
 
 
 @dataclass
@@ -53,9 +61,18 @@ class ETNode:
     bytes_moved: float = 0.0
     # coll attributes
     coll_id: int = -1               # groups the per-rank halves of a collective
-    coll_kind: str = ""             # all_reduce | all_gather | ...
+    coll_kind: str = ""             # all_reduce | all_gather | ... | p2p
     coll_bytes: int = 0             # per-rank payload
     algorithm: str = "ring"
+    # p2p endpoints (coll_kind == "p2p"): every other rank is a bystander
+    src_rank: int = -1
+    dst_rank: int = -1
+    # serving attributes: earliest release time (request arrival — the node
+    # is held even when its deps resolve sooner) and the ids of requests
+    # whose completion this node marks (request -> node tagging for
+    # per-request latency extraction)
+    start_after_ns: float = 0.0
+    req_done: List[int] = field(default_factory=list)
     # runtime
     start_ns: float = -1.0
     end_ns: float = -1.0
@@ -68,10 +85,11 @@ class ExecutionTrace:
     _next: int = 0
 
     def comp(self, rank: int, name: str, flops: float, bytes_moved: float = 0,
-             deps: Optional[List[ETNode]] = None) -> ETNode:
+             deps: Optional[List[ETNode]] = None,
+             start_after_ns: float = 0.0) -> ETNode:
         n = ETNode(self._next, rank, name, "comp",
                    deps=[d.nid for d in deps or []], flops=flops,
-                   bytes_moved=bytes_moved)
+                   bytes_moved=bytes_moved, start_after_ns=start_after_ns)
         self._next += 1
         self.nodes.append(n)
         return n
@@ -79,14 +97,35 @@ class ExecutionTrace:
     def coll(self, coll_id: int, kind: str, per_rank_bytes: int,
              algorithm: str = "ring",
              deps_by_rank: Optional[Dict[int, List[ETNode]]] = None,
-             name: str = "") -> List[ETNode]:
+             name: str = "", start_after_ns: float = 0.0) -> List[ETNode]:
         """Add the per-rank halves of one collective."""
         out = []
         for r in range(self.num_ranks):
             deps = [d.nid for d in (deps_by_rank or {}).get(r, [])]
             n = ETNode(self._next, r, name or f"{kind}#{coll_id}", "coll",
                        deps=deps, coll_id=coll_id, coll_kind=kind,
-                       coll_bytes=per_rank_bytes, algorithm=algorithm)
+                       coll_bytes=per_rank_bytes, algorithm=algorithm,
+                       start_after_ns=start_after_ns)
+            self._next += 1
+            self.nodes.append(n)
+            out.append(n)
+        return out
+
+    def p2p(self, coll_id: int, size_bytes: int, src: int, dst: int,
+            deps_by_rank: Optional[Dict[int, List[ETNode]]] = None,
+            name: str = "", start_after_ns: float = 0.0) -> List[ETNode]:
+        """Add the two halves of a point-to-point transfer (KV-cache
+        handoff): ``src`` streams ``size_bytes`` to ``dst``; every other
+        rank is a pure bystander with no ops.  Returns ``[src_half,
+        dst_half]``."""
+        out = []
+        for r in (src, dst):
+            deps = [d.nid for d in (deps_by_rank or {}).get(r, [])]
+            n = ETNode(self._next, r, name or f"p2p#{coll_id}", "coll",
+                       deps=deps, coll_id=coll_id, coll_kind="p2p",
+                       coll_bytes=size_bytes, algorithm="direct",
+                       src_rank=src, dst_rank=dst,
+                       start_after_ns=start_after_ns)
             self._next += 1
             self.nodes.append(n)
             out.append(n)
@@ -97,7 +136,9 @@ class ExecutionTrace:
         """Serialize the trace *structure*: runtime start/end timestamps are
         stripped, so a dump taken after a run round-trips to a clean trace."""
         nodes = [{k: v for k, v in n.__dict__.items()
-                  if k not in _RUNTIME_FIELDS} for n in self.nodes]
+                  if k not in _RUNTIME_FIELDS
+                  and not (k in _DEFAULT_ELIDED and v == _DEFAULT_ELIDED[k])}
+                 for n in self.nodes]
         return json.dumps({"num_ranks": self.num_ranks, "nodes": nodes},
                           indent=1)
 
@@ -166,6 +207,9 @@ class ExecutionTrace:
             if not (0 <= n.rank < self.num_ranks):
                 raise ValueError(f"node {n.nid}: rank {n.rank} outside "
                                  f"0..{self.num_ranks - 1}")
+            if n.start_after_ns < 0:
+                raise ValueError(f"node {n.nid}: negative start_after_ns "
+                                 f"{n.start_after_ns}")
             if n.kind == "coll":
                 if n.coll_id < 0 or not n.coll_kind:
                     raise ValueError(f"node {n.nid}: collective node needs "
@@ -175,6 +219,19 @@ class ExecutionTrace:
                         f"node {n.nid}: no algorithm "
                         f"{(n.coll_kind, n.algorithm)!r}; known: "
                         f"{sorted(ALGORITHMS)}")
+                if n.coll_kind == "p2p":
+                    for role, r in (("src", n.src_rank), ("dst", n.dst_rank)):
+                        if not (0 <= r < self.num_ranks):
+                            raise ValueError(
+                                f"node {n.nid}: p2p {role}_rank {r} outside "
+                                f"0..{self.num_ranks - 1}")
+                    if n.src_rank == n.dst_rank:
+                        raise ValueError(f"node {n.nid}: p2p src_rank == "
+                                         f"dst_rank ({n.src_rank})")
+                    if n.rank not in (n.src_rank, n.dst_rank):
+                        raise ValueError(
+                            f"node {n.nid}: p2p half on rank {n.rank} but "
+                            f"the transfer is {n.src_rank} -> {n.dst_rank}")
                 group = colls.setdefault(n.coll_id, {})
                 prev = group.get(n.rank)
                 if prev is not None:
@@ -187,15 +244,25 @@ class ExecutionTrace:
                 if d not in ids:
                     raise ValueError(f"node {n.nid}: missing dep {d}")
         # each collective is lowered once, from any member: the group must
-        # cover every rank exactly once and agree on its parameters, or the
-        # executors would deadlock (missing rank) or silently diverge
+        # cover every participating rank exactly once and agree on its
+        # parameters, or the executors would deadlock (missing rank) or
+        # silently diverge.  Full collectives span every rank; p2p spans
+        # exactly its {src, dst} pair.
         for cid, group in colls.items():
-            if len(group) != self.num_ranks:
-                missing = sorted(set(range(self.num_ranks)) - set(group))
-                raise ValueError(f"collective {cid}: missing rank halves "
-                                 f"for ranks {missing}")
-            sig = {(n.coll_kind, n.coll_bytes, n.algorithm)
-                   for n in group.values()}
+            any_node = next(iter(group.values()))
+            if any_node.coll_kind == "p2p":
+                want = {any_node.src_rank, any_node.dst_rank}
+            else:
+                want = set(range(self.num_ranks))
+            if set(group) != want:
+                missing = sorted(want - set(group))
+                extra = sorted(set(group) - want)
+                raise ValueError(
+                    f"collective {cid}: "
+                    + (f"missing rank halves for ranks {missing}"
+                       if missing else f"stray rank halves on ranks {extra}"))
+            sig = {(n.coll_kind, n.coll_bytes, n.algorithm,
+                    n.src_rank, n.dst_rank) for n in group.values()}
             if len(sig) != 1:
                 raise ValueError(f"collective {cid}: inconsistent "
                                  f"kind/bytes/algorithm across ranks: "
@@ -241,8 +308,15 @@ class TraceResult(SimResult):
     Shares :class:`~repro.core.backends.base.SimResult` with
     ``CollectiveResult`` so sweep scripts handle programs and traces
     uniformly; adds the per-node interval map.
+
+    ``latency`` is populated by serving runs
+    (:meth:`repro.serve.ServingScenario.simulate`): per-request tail
+    latency statistics (p50/p95/p99/p999, mean, max, goodput) extracted
+    from ``node_times`` via the trace's request tags.  Plain trace runs
+    leave it ``None``.
     """
     node_times: Dict[int, Tuple[float, float]] = field(default_factory=dict)
+    latency: Optional["LatencyStats"] = None
 
     @property
     def per_rank_end_ns(self) -> List[float]:
@@ -253,6 +327,11 @@ class TraceResult(SimResult):
 def collective_program(node: ETNode, num_ranks: int, workgroups: int,
                        protocol: str = "put") -> Program:
     """Generate the MSCCL++ program for one trace collective node."""
+    if node.coll_kind == "p2p":
+        from .collectives import p2p_transfer
+        return p2p_transfer(num_ranks, node.coll_bytes, workgroups,
+                            protocol=protocol, src=node.src_rank,
+                            dst=node.dst_rank)
     gen = ALGORITHMS[(node.coll_kind, node.algorithm)]
     try:
         return gen(num_ranks, node.coll_bytes, workgroups, protocol=protocol)
@@ -285,6 +364,16 @@ class TraceExecutor:
         return self.dag.result(self.cluster.engine, "fine")
 
     def _launch(self, node: ETNode) -> None:
+        # arrival release: hold the node past its resolved deps until
+        # start_after_ns (request arrival jitter), then dispatch for real
+        eng = self.cluster.engine
+        release_ps = int(round(node.start_after_ns * 1000.0))
+        if release_ps > eng.now_ps:
+            eng.schedule_abs_ps(release_ps, self._dispatch, node)
+            return
+        self._dispatch(node)
+
+    def _dispatch(self, node: ETNode) -> None:
         node.start_ns = self.cluster.engine.now
         if node.kind == "comp":
             kernel = self._comp_kernel(node)

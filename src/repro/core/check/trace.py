@@ -52,6 +52,9 @@ def check_trace(trace, deep: bool = True, workgroups: int = 4,
             rep.add("error", "TR-COMP", loc,
                     f"negative cost (flops={n.flops}, "
                     f"bytes_moved={n.bytes_moved})")
+        if n.start_after_ns < 0:
+            rep.add("error", "TR-START", loc,
+                    f"negative start_after_ns {n.start_after_ns}")
         if n.kind == "coll":
             if n.coll_id < 0 or not n.coll_kind:
                 rep.add("error", "TR-COLL", loc,
@@ -59,27 +62,52 @@ def check_trace(trace, deep: bool = True, workgroups: int = 4,
             else:
                 prev = colls[n.coll_id].get(n.rank)
                 if prev is not None:
-                    rep.add("error", "TR-COLL", loc,
+                    rep.add("error", "TR-DUP-COLL", loc,
                             f"rank {n.rank} appears twice in collective "
-                            f"{n.coll_id} (also node {prev.nid})")
+                            f"{n.coll_id} (also node {prev.nid}); duplicate "
+                            f"(coll_id, rank) halves corrupt completion "
+                            f"routing in every executor")
                 colls[n.coll_id][n.rank] = n
             if n.coll_bytes < 0:
                 rep.add("error", "TR-COLL", loc,
                         f"negative coll_bytes {n.coll_bytes}")
+            if n.coll_kind == "p2p":
+                for role, r in (("src", n.src_rank), ("dst", n.dst_rank)):
+                    if not (0 <= r < trace.num_ranks):
+                        rep.add("error", "TR-P2P", loc,
+                                f"p2p {role}_rank {r} outside "
+                                f"0..{trace.num_ranks - 1}")
+                if n.src_rank == n.dst_rank:
+                    rep.add("error", "TR-P2P", loc,
+                            f"p2p src_rank == dst_rank ({n.src_rank})")
+                if n.rank not in (n.src_rank, n.dst_rank):
+                    rep.add("error", "TR-P2P", loc,
+                            f"p2p half on rank {n.rank} but the transfer "
+                            f"is {n.src_rank} -> {n.dst_rank}")
 
     _check_cycles(trace, by_id, rep)
 
-    # collective groups must cover every rank with consistent parameters
+    # collective groups must cover every participating rank with consistent
+    # parameters; full collectives span every rank, p2p exactly {src, dst}
     for cid, group in sorted(colls.items()):
-        missing = sorted(set(range(trace.num_ranks)) - set(group))
         any_node = next(iter(group.values()))
+        if any_node.coll_kind == "p2p":
+            want = {any_node.src_rank, any_node.dst_rank}
+        else:
+            want = set(range(trace.num_ranks))
+        missing = sorted(want - set(group))
+        extra = sorted(set(group) - want)
         if missing:
             rep.add("error", "TR-COLL", Location.node(any_node.nid),
                     f"collective {cid} missing rank halves for {missing}; "
                     f"every executor would deadlock waiting for them",
                     witness={"coll_id": cid, "missing_ranks": missing})
-        sig = {(n.coll_kind, n.coll_bytes, n.algorithm)
-               for n in group.values()}
+        if extra:
+            rep.add("error", "TR-COLL", Location.node(any_node.nid),
+                    f"collective {cid} has stray rank halves on {extra}",
+                    witness={"coll_id": cid, "extra_ranks": extra})
+        sig = {(n.coll_kind, n.coll_bytes, n.algorithm,
+                n.src_rank, n.dst_rank) for n in group.values()}
         if len(sig) != 1:
             rep.add("error", "TR-COLL", Location.node(any_node.nid),
                     f"collective {cid} inconsistent across ranks: "
@@ -132,7 +160,8 @@ def _deep_check(trace, colls, rep: CheckReport, workgroups: int,
     for cid, group in sorted(colls.items()):
         node = next(iter(group.values()))
         sig = (node.coll_kind, node.algorithm, trace.num_ranks,
-               node.coll_bytes, workgroups, protocol)
+               node.coll_bytes, workgroups, protocol,
+               node.src_rank, node.dst_rank)
         cached = _DEEP_CACHE.get(sig)
         if cached is None:
             cached = []

@@ -458,6 +458,45 @@ def direct_all_to_all(nranks: int, shard_bytes: int, nworkgroups: int = 1,
     return b.build()
 
 
+# ---------------------------------------------------------------------------
+# Point-to-point transfer (serving KV-cache handoff)
+# ---------------------------------------------------------------------------
+
+def p2p_transfer(nranks: int, size_bytes: int, nworkgroups: int = 1,
+                 protocol: str = "put", src: int = 0, dst: int = 1) -> Program:
+    """Stream ``size_bytes`` from ``src``'s input to ``dst``'s output.
+
+    The serving layer's KV-cache handoff between a prefill rank and a
+    decode rank.  Every other rank is a *pure bystander*: it carries no
+    workgroups at all (``gpus[r] == []``), so executors must complete it
+    without running anything — the shape that exposed the
+    empty-workgroup-rank completion bug in ``ProgramInterpreter``.
+    """
+    for role, r in (("src", src), ("dst", dst)):
+        if not (0 <= r < nranks):
+            raise ValueError(f"p2p {role} rank {r} outside 0..{nranks - 1}")
+    if src == dst:
+        raise ValueError(f"p2p src == dst ({src})")
+    b = ProgramBuilder(f"p2p_transfer_{protocol}", "p2p", nranks,
+                       {"input": size_bytes, "output": size_bytes},
+                       nworkgroups)
+    for w, (woff, wsz) in enumerate(_slices(size_bytes, nworkgroups)):
+        if protocol == "put":
+            b.put(src, w, ("input", woff), ("output", woff), wsz, remote=dst)
+            b.flush(src, w)
+            b.signal(src, w, remote=dst, sem=b.sem_id(dst, f"kv.{w}"))
+            b.wait(dst, w, sem=b.sem_id(dst, f"kv.{w}"), expected=1)
+        else:  # get: dst pulls once src announces its input is ready
+            b.signal(src, w, remote=dst, sem=b.sem_id(dst, f"kv.{w}"))
+            b.wait(dst, w, sem=b.sem_id(dst, f"kv.{w}"), expected=1)
+            b.get(dst, w, ("input", woff), ("output", woff), wsz, remote=src)
+    p = b.build()
+    for r in range(nranks):
+        if r not in (src, dst):
+            p.gpus[r] = []                     # true bystanders: no program
+    return p
+
+
 # registry used by the system layer and benchmarks
 ALGORITHMS = {
     ("all_gather", "ring"): ring_all_gather,
@@ -470,4 +509,5 @@ ALGORITHMS = {
     ("all_reduce", "halving_doubling"): lambda n, s, w=1, protocol=None:
         halving_doubling_all_reduce(n, s, w),
     ("all_to_all", "direct"): direct_all_to_all,
+    ("p2p", "direct"): p2p_transfer,
 }

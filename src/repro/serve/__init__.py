@@ -1,0 +1,34 @@
+"""Traffic-driven inference serving scenarios (paper motivation:
+latency-sensitive inference; ROADMAP "Production inference scenarios").
+
+Compose a seeded arrival process (:mod:`.traffic`) with a scenario
+builder (:mod:`.scenario`) to get an :class:`ExecutionTrace` that runs
+through ``simulate()`` at every fidelity tier; per-request tail latency
+(:mod:`.metrics`) is extracted from node times via request tags::
+
+    from repro.serve import (PoissonArrivals, ServingModel,
+                             continuous_batching, generate_requests)
+
+    reqs = generate_requests(PoissonArrivals(2000.0), n=64, seed=7)
+    model = ServingModel("toy", flops_per_token=2e6, weight_bytes=1e6,
+                         coll_bytes_per_token=4096, kv_bytes_per_token=2048)
+    scen = continuous_batching(model, reqs, tp=4)
+    res = scen.simulate(fidelity="coarse")
+    print(res.latency.p99_ns, res.latency.goodput_rps)
+"""
+
+from .metrics import (LatencyStats, attach_latency, latency_stats,
+                      percentile, request_completions, request_latencies)
+from .scenario import (ServingModel, ServingScenario, continuous_batching,
+                       disaggregated)
+from .traffic import (NS_PER_S, ArrivalProcess, DiurnalArrivals,
+                      MMPPArrivals, PoissonArrivals, Request,
+                      generate_requests)
+
+__all__ = [
+    "ArrivalProcess", "DiurnalArrivals", "LatencyStats", "MMPPArrivals",
+    "NS_PER_S", "PoissonArrivals", "Request", "ServingModel",
+    "ServingScenario", "attach_latency", "continuous_batching",
+    "disaggregated", "generate_requests", "latency_stats", "percentile",
+    "request_completions", "request_latencies",
+]

@@ -1,0 +1,107 @@
+"""Per-request latency extraction from trace node times.
+
+The serving scenario builders tag trace nodes with ``req_done`` — the ids
+of requests whose completion that node marks.  After a run, a request's
+completion time is the latest ``end_ns`` over its tagged nodes (for
+continuous batching, the last rank's all-reduce half of the request's
+final iteration; for disaggregated serving, its decode compute node), and
+its latency is completion minus arrival.  ``LatencyStats`` condenses the
+distribution into the tail percentiles serving studies actually report.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Sequence
+
+from .traffic import NS_PER_S, Request
+
+
+@dataclass(frozen=True)
+class LatencyStats:
+    """Tail-latency summary of one serving run (all times in ns)."""
+    count: int
+    mean_ns: float
+    p50_ns: float
+    p95_ns: float
+    p99_ns: float
+    p999_ns: float
+    max_ns: float
+    #: completed requests per simulated second (span: first arrival to
+    #: last completion)
+    goodput_rps: float
+
+    def to_dict(self) -> Dict[str, float]:
+        return asdict(self)
+
+
+def percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) of a pre-sorted sequence."""
+    if not sorted_vals:
+        raise ValueError("percentile of empty sequence")
+    if not (0.0 <= q <= 100.0):
+        raise ValueError(f"percentile q must be in [0, 100], got {q}")
+    if q == 0.0:
+        return sorted_vals[0]
+    rank = math.ceil(q / 100.0 * len(sorted_vals))
+    return sorted_vals[rank - 1]
+
+
+def request_completions(trace, node_times: Dict[int, tuple],
+                        ) -> Dict[int, float]:
+    """req_id -> completion time (ns): latest end over its tagged nodes."""
+    done: Dict[int, float] = {}
+    for n in trace.nodes:
+        for rid in n.req_done:
+            end = node_times[n.nid][1]
+            if rid not in done or end > done[rid]:
+                done[rid] = end
+    return done
+
+
+def request_latencies(trace, requests: List[Request],
+                      node_times: Dict[int, tuple]) -> Dict[int, float]:
+    """req_id -> latency (completion - arrival, ns).
+
+    Raises if any request has no tagged completion node — a scenario
+    builder bug that would otherwise silently drop the slowest requests
+    from every percentile.
+    """
+    done = request_completions(trace, node_times)
+    missing = [r.req_id for r in requests if r.req_id not in done]
+    if missing:
+        raise ValueError(
+            f"requests {missing[:10]} have no req_done-tagged node in the "
+            f"trace; cannot compute their latency")
+    out = {}
+    for r in requests:
+        lat = done[r.req_id] - r.arrival_ns
+        if lat < 0:
+            raise ValueError(
+                f"request {r.req_id} completes at {done[r.req_id]} ns, "
+                f"before its arrival at {r.arrival_ns} ns — the scenario "
+                f"failed to hold its nodes past the arrival")
+        out[r.req_id] = lat
+    return out
+
+
+def latency_stats(requests: List[Request],
+                  latencies: Dict[int, float]) -> LatencyStats:
+    vals = sorted(latencies[r.req_id] for r in requests)
+    n = len(vals)
+    first_arrival = min(r.arrival_ns for r in requests)
+    last_done = max(latencies[r.req_id] + r.arrival_ns for r in requests)
+    span_s = max(last_done - first_arrival, 1.0) / NS_PER_S
+    return LatencyStats(
+        count=n, mean_ns=sum(vals) / n,
+        p50_ns=percentile(vals, 50.0), p95_ns=percentile(vals, 95.0),
+        p99_ns=percentile(vals, 99.0), p999_ns=percentile(vals, 99.9),
+        max_ns=vals[-1], goodput_rps=n / span_s)
+
+
+def attach_latency(trace, requests: List[Request], result) -> None:
+    """Compute per-request latencies from ``result.node_times`` and attach
+    :class:`LatencyStats` to ``result.latency`` (in place)."""
+    lats = request_latencies(trace, requests, result.node_times)
+    result.latency = latency_stats(requests, lats)

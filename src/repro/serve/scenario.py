@@ -1,0 +1,246 @@
+"""Compile serving scenarios into ExecutionTraces.
+
+Two serving topologies from the ASTRA-sim line of work:
+
+* :func:`continuous_batching` — one TP group decodes a changing batch:
+  per-iteration compute (roofline flops/bytes from the model config) plus
+  a tensor-parallel all-reduce, batch membership evolving as requests
+  arrive and finish.  Request arrival releases an iteration via
+  ``start_after_ns`` — the deferred-start mechanism every tier honors —
+  so arrival jitter propagates through interpreter semaphores instead of
+  being flattened away.
+* :func:`disaggregated` — dedicated prefill ranks and decode ranks
+  (ASTRA-sim 2.0's serving topology): per request, a prefill compute
+  node, a KV-cache point-to-point transfer collective between the chosen
+  prefill and decode rank, and a decode compute node tagged with the
+  request id for latency extraction.
+
+The *plan* (which requests join which iteration, which rank serves which
+request) is fixed at build time from a deterministic roofline estimate,
+so a scenario is a plain static trace every fidelity tier runs
+identically-shaped; the *timing* is whatever the tier simulates.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from ..core.chakra import ExecutionTrace
+from .metrics import attach_latency
+from .traffic import Request
+
+_DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "float64": 8}
+
+
+@dataclass(frozen=True)
+class ServingModel:
+    """Per-token serving costs of one model (all the scenario builders
+    need; derive from an :class:`~repro.configs.base.ArchConfig` via
+    :meth:`from_arch` or specify directly)."""
+    name: str
+    #: decode flops per generated token (≈ 2 * active params)
+    flops_per_token: float
+    #: weight bytes streamed per decode iteration (amortized over batch)
+    weight_bytes: float
+    #: tensor-parallel all-reduce payload per token (activations)
+    coll_bytes_per_token: int
+    #: KV-cache bytes per prompt token (prefill -> decode handoff)
+    kv_bytes_per_token: int
+    #: prefill flops per prompt token (defaults to flops_per_token)
+    prefill_flops_per_token: float = 0.0
+
+    def __post_init__(self):
+        if self.prefill_flops_per_token <= 0:
+            object.__setattr__(self, "prefill_flops_per_token",
+                               self.flops_per_token)
+
+    @staticmethod
+    def from_arch(arch, dtype_bytes: Optional[int] = None) -> "ServingModel":
+        """Derive serving costs from an ArchConfig (Megatron-style TP:
+        two activation all-reduces per layer)."""
+        db = dtype_bytes or _DTYPE_BYTES.get(arch.dtype, 2)
+        p = arch.active_param_count()
+        return ServingModel(
+            name=arch.name,
+            flops_per_token=2.0 * p,
+            weight_bytes=float(p) * db,
+            coll_bytes_per_token=2 * arch.n_layers * arch.d_model * db,
+            kv_bytes_per_token=2 * arch.n_layers * arch.n_kv_heads
+            * arch.hd * db)
+
+
+@dataclass(frozen=True)
+class _Plan:
+    """Roofline constants for build-time admission/placement planning —
+    deterministic estimates only; actual timing comes from the tier that
+    runs the trace.  Defaults mirror ``CoarseConfig``."""
+    flops_per_ns: float = 16384.0
+    local_GBps: float = 1099.5
+    link_GBps: float = 34.36 * 8
+    link_lat_ns: float = 1000.0
+
+    def comp_ns(self, flops: float, bytes_moved: float) -> float:
+        return max(flops / self.flops_per_ns,
+                   bytes_moved / self.local_GBps, 1.0)
+
+    def all_reduce_ns(self, per_rank_bytes: int, nranks: int) -> float:
+        if nranks < 2:
+            return 0.0
+        steps = 2 * (nranks - 1)
+        return steps * (self.link_lat_ns
+                        + per_rank_bytes / nranks / self.link_GBps)
+
+    def p2p_ns(self, size_bytes: int) -> float:
+        return self.link_lat_ns + size_bytes / self.link_GBps
+
+
+@dataclass
+class ServingScenario:
+    """A compiled serving workload: the trace, its request stream, and
+    build metadata.  ``simulate()`` runs it at any tier and attaches
+    per-request :class:`~repro.serve.metrics.LatencyStats` to the
+    result's ``latency`` field."""
+    name: str
+    trace: ExecutionTrace
+    requests: List[Request]
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    def simulate(self, infra=None, fidelity: str = "coarse", **kwargs):
+        from ..core.backends import simulate as _simulate
+        result = _simulate(self.trace, infra, fidelity=fidelity, **kwargs)
+        attach_latency(self.trace, self.requests, result)
+        return result
+
+
+def continuous_batching(model: ServingModel, requests: List[Request],
+                        tp: int = 4, tokens_per_iteration: int = 8,
+                        max_batch: int = 16, algorithm: str = "ring",
+                        plan: Optional[_Plan] = None,
+                        name: str = "") -> ServingScenario:
+    """Continuous-batching decode on one ``tp``-way tensor-parallel group.
+
+    Each iteration is one comp node per rank (batch flops / TP share of
+    the weights) chained into a TP all-reduce; requests join the batch at
+    the first iteration after their arrival (release enforced by
+    ``start_after_ns`` on the comp nodes) and leave when their decode
+    budget is generated.  The all-reduce halves of a request's final
+    iteration carry its ``req_done`` tag, so its latency is the moment
+    the *last rank* finishes that iteration.
+    """
+    if tp < 2:
+        raise ValueError(f"continuous batching needs tp >= 2, got {tp}")
+    if tokens_per_iteration < 1:
+        raise ValueError(f"tokens_per_iteration must be >= 1, "
+                         f"got {tokens_per_iteration}")
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    pl = plan or _Plan()
+    et = ExecutionTrace(num_ranks=tp)
+    queue = sorted(requests, key=lambda r: (r.arrival_ns, r.req_id))
+    remaining: Dict[int, int] = {}          # req_id -> decode tokens left
+    prev_halves = None
+    est_now, qi, it = 0.0, 0, 0
+    while qi < len(queue) or remaining:
+        if not remaining and queue[qi].arrival_ns > est_now:
+            est_now = queue[qi].arrival_ns  # idle: jump to next arrival
+        admitted = []
+        while qi < len(queue) and len(remaining) < max_batch \
+                and queue[qi].arrival_ns <= est_now:
+            r = queue[qi]
+            qi += 1
+            remaining[r.req_id] = r.decode_tokens
+            admitted.append(r)
+        total_toks = sum(min(tokens_per_iteration, left)
+                         for left in remaining.values())
+        release = max((r.arrival_ns for r in admitted), default=0.0)
+        flops = total_toks * model.flops_per_token / tp
+        bytes_moved = model.weight_bytes / tp
+        comp = [et.comp(rank, f"decode.it{it}.r{rank}", flops=flops,
+                        bytes_moved=bytes_moved,
+                        deps=[prev_halves[rank]] if prev_halves else None,
+                        start_after_ns=release)
+                for rank in range(tp)]
+        finished = sorted(rid for rid, left in remaining.items()
+                          if left <= tokens_per_iteration)
+        coll_bytes = max(1, int(total_toks * model.coll_bytes_per_token))
+        halves = et.coll(it, "all_reduce", coll_bytes, algorithm,
+                         deps_by_rank={rank: [comp[rank]]
+                                       for rank in range(tp)},
+                         name=f"tp_ar.it{it}")
+        for h in halves:
+            h.req_done = list(finished)
+        for rid in finished:
+            del remaining[rid]
+        for rid in remaining:
+            remaining[rid] -= tokens_per_iteration
+        est_now = max(est_now, release) \
+            + pl.comp_ns(flops, bytes_moved) \
+            + pl.all_reduce_ns(coll_bytes, tp)
+        prev_halves = halves
+        it += 1
+    return ServingScenario(
+        name=name or f"continuous_batching[{model.name},tp={tp}]",
+        trace=et, requests=list(requests),
+        meta={"model": model.name, "tp": tp, "iterations": it,
+              "tokens_per_iteration": tokens_per_iteration,
+              "max_batch": max_batch, "algorithm": algorithm})
+
+
+def disaggregated(model: ServingModel, requests: List[Request],
+                  prefill_ranks: int = 2, decode_ranks: int = 2,
+                  plan: Optional[_Plan] = None,
+                  name: str = "") -> ServingScenario:
+    """Disaggregated prefill/decode serving.
+
+    Ranks ``0..prefill_ranks-1`` prefill, the rest decode.  Per request:
+    a prefill comp node on the least-loaded prefill rank (released at the
+    request's arrival), a KV-cache p2p transfer to the least-loaded
+    decode rank, and a decode comp node (memory-bound: the whole decode
+    stream for batch size 1) tagged ``req_done``.  Work on one rank is
+    chained, so placement is a real queueing decision.
+    """
+    if prefill_ranks < 1 or decode_ranks < 1:
+        raise ValueError(f"need >= 1 prefill and decode rank, got "
+                         f"{prefill_ranks}/{decode_ranks}")
+    pl = plan or _Plan()
+    et = ExecutionTrace(num_ranks=prefill_ranks + decode_ranks)
+    pre_busy = [0.0] * prefill_ranks       # estimated rank-free times
+    dec_busy = [0.0] * decode_ranks
+    pre_last = [None] * prefill_ranks      # last node per rank (chaining)
+    dec_last = [None] * decode_ranks
+    for cid, r in enumerate(sorted(requests,
+                                   key=lambda q: (q.arrival_ns, q.req_id))):
+        pr = min(range(prefill_ranks),
+                 key=lambda i: (max(pre_busy[i], r.arrival_ns), i))
+        p_flops = r.prompt_tokens * model.prefill_flops_per_token
+        pnode = et.comp(pr, f"prefill.req{r.req_id}", flops=p_flops,
+                        bytes_moved=model.weight_bytes,
+                        deps=[pre_last[pr]] if pre_last[pr] else None,
+                        start_after_ns=r.arrival_ns)
+        pre_last[pr] = pnode
+        p_done = max(pre_busy[pr], r.arrival_ns) \
+            + pl.comp_ns(p_flops, model.weight_bytes)
+        pre_busy[pr] = p_done
+        kv_bytes = max(1, int(r.prompt_tokens * model.kv_bytes_per_token))
+        dr = min(range(decode_ranks),
+                 key=lambda i: (max(dec_busy[i], p_done), i))
+        dst = prefill_ranks + dr
+        src_half, dst_half = et.p2p(cid, kv_bytes, pr, dst,
+                                    deps_by_rank={pr: [pnode]},
+                                    name=f"kv.req{r.req_id}")
+        d_flops = r.decode_tokens * model.flops_per_token
+        d_bytes = r.decode_tokens * model.weight_bytes
+        deps = [dst_half] + ([dec_last[dr]] if dec_last[dr] else [])
+        dnode = et.comp(dst, f"decode.req{r.req_id}", flops=d_flops,
+                        bytes_moved=d_bytes, deps=deps)
+        dnode.req_done = [r.req_id]
+        dec_last[dr] = dnode
+        dec_busy[dr] = max(dec_busy[dr], p_done + pl.p2p_ns(kv_bytes)) \
+            + pl.comp_ns(d_flops, d_bytes)
+    return ServingScenario(
+        name=name or (f"disaggregated[{model.name},"
+                      f"{prefill_ranks}p+{decode_ranks}d]"),
+        trace=et, requests=list(requests),
+        meta={"model": model.name, "prefill_ranks": prefill_ranks,
+              "decode_ranks": decode_ranks})

@@ -1,0 +1,158 @@
+"""Seeded deterministic arrival processes for serving studies.
+
+Realistic request traffic — not a single cold collective — is what makes
+an inference-infrastructure study credible (network-infrastructure-testing
+line, arxiv 2504.20854).  Every process here is a pure function of an
+explicit ``seed``: no wall-clock reads, no global RNG, so two runs with
+the same seed produce bit-identical arrival streams and scenarios are
+reproducible and resumable.
+
+Seeding idiom: ``random.Random(f"{seed}:{label}")`` — string seeds hash
+through SHA-512 inside CPython's ``random``, which is stable across runs
+and processes (unlike ``hash()``), and the label keeps independent streams
+(arrivals vs. request shapes) from aliasing.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+from typing import List, Tuple, Union
+
+#: nanoseconds per second (arrival processes are specified in req/s;
+#: simulators run in ns)
+NS_PER_S = 1e9
+
+Seed = Union[int, str]
+
+
+@dataclass(frozen=True)
+class Request:
+    """One inference request: arrival time plus prompt/decode token counts."""
+    req_id: int
+    arrival_ns: float
+    prompt_tokens: int
+    decode_tokens: int
+
+
+class ArrivalProcess:
+    """Base: ``arrivals(n, seed)`` returns the first ``n`` arrival times
+    (ns, strictly increasing, deterministic in ``seed``)."""
+
+    name = "arrivals"
+
+    def arrivals(self, n: int, seed: Seed = 0) -> List[float]:
+        raise NotImplementedError
+
+
+class PoissonArrivals(ArrivalProcess):
+    """Homogeneous Poisson traffic at ``rate_rps`` requests/second."""
+
+    def __init__(self, rate_rps: float):
+        if rate_rps <= 0:
+            raise ValueError(f"rate_rps must be > 0, got {rate_rps}")
+        self.rate_rps = rate_rps
+        self.name = f"poisson[{rate_rps:g}rps]"
+
+    def arrivals(self, n: int, seed: Seed = 0) -> List[float]:
+        rng = random.Random(f"{seed}:poisson:{self.rate_rps!r}")
+        t, out = 0.0, []
+        for _ in range(n):
+            t += rng.expovariate(self.rate_rps) * NS_PER_S
+            out.append(t)
+        return out
+
+
+class DiurnalArrivals(ArrivalProcess):
+    """Poisson traffic whose rate follows a sinusoidal day/night cycle.
+
+    Instantaneous rate ``rate_rps * (1 + amplitude*sin(2*pi*t/period))``,
+    sampled by thinning against the peak rate — the standard exact method
+    for inhomogeneous Poisson processes.
+    """
+
+    def __init__(self, rate_rps: float, amplitude: float = 0.5,
+                 period_s: float = 86_400.0, phase: float = 0.0):
+        if rate_rps <= 0:
+            raise ValueError(f"rate_rps must be > 0, got {rate_rps}")
+        if not (0.0 <= amplitude < 1.0):
+            raise ValueError(f"amplitude must be in [0, 1), got {amplitude}")
+        if period_s <= 0:
+            raise ValueError(f"period_s must be > 0, got {period_s}")
+        self.rate_rps = rate_rps
+        self.amplitude = amplitude
+        self.period_s = period_s
+        self.phase = phase
+        self.name = f"diurnal[{rate_rps:g}rps,a={amplitude:g}]"
+
+    def rate_at(self, t_ns: float) -> float:
+        w = 2.0 * math.pi * (t_ns / NS_PER_S) / self.period_s + self.phase
+        return self.rate_rps * (1.0 + self.amplitude * math.sin(w))
+
+    def arrivals(self, n: int, seed: Seed = 0) -> List[float]:
+        rng = random.Random(f"{seed}:diurnal:{self.rate_rps!r}:"
+                            f"{self.amplitude!r}:{self.period_s!r}:"
+                            f"{self.phase!r}")
+        lam_max = self.rate_rps * (1.0 + self.amplitude)
+        t, out = 0.0, []
+        while len(out) < n:
+            t += rng.expovariate(lam_max) * NS_PER_S
+            if rng.random() * lam_max <= self.rate_at(t):
+                out.append(t)
+        return out
+
+
+class MMPPArrivals(ArrivalProcess):
+    """Bursty traffic: a 2-state Markov-modulated Poisson process.
+
+    The process alternates between a quiet state (``rate_low_rps``) and a
+    burst state (``rate_high_rps``); dwell time in each state is
+    exponential with mean ``mean_dwell_s``.  Exponential inter-arrivals
+    are memoryless, so redrawing the gap after a state switch is exact.
+    """
+
+    def __init__(self, rate_low_rps: float, rate_high_rps: float,
+                 mean_dwell_s: float = 1.0):
+        for nm, v in (("rate_low_rps", rate_low_rps),
+                      ("rate_high_rps", rate_high_rps),
+                      ("mean_dwell_s", mean_dwell_s)):
+            if v <= 0:
+                raise ValueError(f"{nm} must be > 0, got {v}")
+        self.rates = (rate_low_rps, rate_high_rps)
+        self.mean_dwell_s = mean_dwell_s
+        self.name = (f"mmpp[{rate_low_rps:g}/{rate_high_rps:g}rps,"
+                     f"dwell={mean_dwell_s:g}s]")
+
+    def arrivals(self, n: int, seed: Seed = 0) -> List[float]:
+        rng = random.Random(f"{seed}:mmpp:{self.rates!r}:"
+                            f"{self.mean_dwell_s!r}")
+        t, state, out = 0.0, 0, []
+        dwell_end = rng.expovariate(1.0 / self.mean_dwell_s) * NS_PER_S
+        while len(out) < n:
+            gap = rng.expovariate(self.rates[state]) * NS_PER_S
+            if t + gap >= dwell_end:
+                t = dwell_end
+                state ^= 1
+                dwell_end = t + rng.expovariate(
+                    1.0 / self.mean_dwell_s) * NS_PER_S
+                continue
+            t += gap
+            out.append(t)
+        return out
+
+
+def generate_requests(process: ArrivalProcess, n: int, seed: Seed = 0,
+                      prompt_tokens: Tuple[int, int] = (64, 512),
+                      decode_tokens: Tuple[int, int] = (16, 128),
+                      ) -> List[Request]:
+    """Draw ``n`` requests: arrivals from ``process``, token counts uniform
+    over the given inclusive ranges.  Fully determined by ``seed``."""
+    if n < 1:
+        raise ValueError(f"need n >= 1 requests, got {n}")
+    times = process.arrivals(n, seed)
+    rng = random.Random(f"{seed}:requests:{process.name}")
+    return [Request(req_id=i, arrival_ns=t,
+                    prompt_tokens=rng.randint(*prompt_tokens),
+                    decode_tokens=rng.randint(*decode_tokens))
+            for i, t in enumerate(times)]

@@ -31,6 +31,7 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 BASELINE = os.path.join(RESULTS, "BENCH_engine.json")
 QUICK_BASELINE = os.path.join(RESULTS, "BENCH_engine_quick.json")
 TRACE_BASELINE = os.path.join(RESULTS, "BENCH_trace.json")
+SERVING_BASELINE = os.path.join(RESULTS, "BENCH_serving.json")
 
 
 @pytest.mark.slow
@@ -165,3 +166,37 @@ def test_trace_benchmark_matches_committed_baseline():
             f"{fid} trace time drifted: {r.time_ns} != {ref['time_ns']}"
         assert r.events <= ref["events"] * 1.02, \
             f"{fid} trace events regressed: {r.events} vs {ref['events']}"
+
+
+@pytest.mark.slow
+def test_serving_benchmark_matches_committed_baseline():
+    """The tracked serving scenarios (ISSUE 8): the seeded Poisson
+    continuous-batching and disaggregated prefill/decode workloads must
+    reproduce every committed tail-latency row bit-for-bit at every tier
+    (time_ns and all percentiles), and event counts must not regress."""
+    if not os.path.exists(SERVING_BASELINE):
+        pytest.skip("no committed BENCH_serving.json baseline")
+    with open(SERVING_BASELINE) as f:
+        base = json.load(f)
+    assert base["workload"]["kind"] == "serving_scenarios"
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    try:
+        from serving_tail_latency import build_scenarios
+    finally:
+        sys.path.pop(0)
+
+    scens = build_scenarios()
+    assert set(scens) == set(base["scenarios"])
+    for name, tiers in base["scenarios"].items():
+        for fid, ref in tiers.items():
+            r = scens[name].simulate(fidelity=fid, check="off")
+            assert r.time_ns == ref["time_ns"], \
+                f"{name}/{fid} time drifted: {r.time_ns} != {ref['time_ns']}"
+            got = r.latency.to_dict()
+            for key in ("p50_ns", "p99_ns", "p999_ns", "mean_ns", "max_ns",
+                        "goodput_rps"):
+                assert got[key] == ref[key], \
+                    f"{name}/{fid} {key} drifted: {got[key]} != {ref[key]}"
+            assert r.events <= ref["events"] * 1.02, \
+                f"{name}/{fid} events regressed: {r.events} vs {ref['events']}"

@@ -1,0 +1,392 @@
+"""Serving layer tests (ISSUE 8): rank-completion bugfix regressions,
+p2p transfer correctness, arrival-release semantics, TR-DUP-COLL, and the
+cross-tier serving parity suite (monotone fidelity, bit-identical seeded
+replay, check_workload-clean generated scenarios).
+
+The three bugfix regression tests are written to FAIL on the pre-PR code:
+
+* ``test_bystander_rank_completes_*`` — ``ProgramInterpreter.__init__``
+  never completed a rank with zero workgroups, so coarse/analytic runs of
+  a p2p program raised "sim incomplete".
+* ``test_analytic_closed_form_*`` — the closed form returned
+  ``per_rank_done_ns=[t]*n`` for every run; uniform delays now shift the
+  closed form (still zero events) and non-uniform skew routes through the
+  interpreter so tails stay honest.
+* ``test_coll_start_stamped_at_release*`` — ``_TierTraceExecutor`` stamped
+  ``node.start_ns`` when the node was handed to ``_launch``, not when the
+  rank's half was actually released into the interpreter.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import collectives as C
+from repro.core import verify
+from repro.core.backends import simulate
+from repro.core.backends.workload import _TierTraceExecutor
+from repro.core.chakra import ExecutionTrace
+from repro.core.check import check_trace, check_workload
+from repro.serve import (DiurnalArrivals, MMPPArrivals, PoissonArrivals,
+                         Request, ServingModel, continuous_batching,
+                         disaggregated, generate_requests, latency_stats,
+                         percentile, request_latencies)
+
+TOY = ServingModel("toy", flops_per_token=2e6, weight_bytes=1e6,
+                   coll_bytes_per_token=4096, kv_bytes_per_token=2048)
+
+
+def toy_requests(n=12, seed=3, rate=2000.0):
+    return generate_requests(PoissonArrivals(rate), n=n, seed=seed,
+                             prompt_tokens=(8, 32), decode_tokens=(2, 12))
+
+
+# ---------------------------------------------------------------------------
+# bugfix 1: empty-workgroup ranks must complete (non-deferred interpreter)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fidelity", ["coarse", "analytic"])
+def test_bystander_rank_completes_at_cheap_tiers(fidelity):
+    """A p2p program leaves every non-endpoint rank with zero workgroups;
+    pre-PR the non-deferred interpreter never completed them and the
+    backend raised 'sim incomplete: ranks [...]'."""
+    prog = C.p2p_transfer(4, 4096, 2, src=0, dst=2)
+    assert prog.gpus[1] == [] and prog.gpus[3] == []
+    r = simulate(prog, fidelity=fidelity, check="off")
+    assert len(r.per_rank_done_ns) == 4
+    # bystanders finish no later than the endpoints
+    assert r.per_rank_done_ns[1] <= r.time_ns
+    assert r.per_rank_done_ns[3] <= r.time_ns
+    assert r.time_ns > 0
+
+
+def test_bystander_rank_honors_rank_delay():
+    prog = C.p2p_transfer(3, 1024, 1, src=0, dst=1)
+    r = simulate(prog, fidelity="coarse", check="off",
+                 rank_delay_ns=[0.0, 0.0, 777.0])
+    assert r.per_rank_done_ns[2] == pytest.approx(777.0)
+
+
+# ---------------------------------------------------------------------------
+# bugfix 2: analytic closed form must stay honest under launch skew
+# ---------------------------------------------------------------------------
+
+def test_analytic_closed_form_uniform_delay_shifts_without_events():
+    """A uniform delay d only shifts the collective: the closed form must
+    still answer (zero events) with every percentile moved by d.  Pre-PR,
+    any nonzero delay fell through to the interpreter (events > 0)."""
+    prog = C.ring_all_reduce(4, 1 << 16, 2)
+    base = simulate(prog, fidelity="analytic", check="off")
+    shifted = simulate(prog, fidelity="analytic", check="off",
+                       rank_delay_ns=[500.0] * 4)
+    assert base.events == 0 and shifted.events == 0
+    assert shifted.time_ns == pytest.approx(base.time_ns + 500.0)
+    for a, b in zip(base.per_rank_done_ns, shifted.per_rank_done_ns):
+        assert b == pytest.approx(a + 500.0)
+
+
+def test_analytic_skewed_run_has_distinct_tail():
+    """Non-uniform skew must NOT be flattened to the closed form's
+    [t]*n — p99 and p50 of per-rank completions must differ."""
+    prog = C.ring_all_reduce(4, 1 << 16, 2)
+    r = simulate(prog, fidelity="analytic", check="off",
+                 rank_delay_ns=[0.0, 0.0, 0.0, 50_000.0])
+    assert r.events > 0, "skewed runs must go through the interpreter"
+    done = sorted(r.per_rank_done_ns)
+    assert percentile(done, 99.0) > percentile(done, 50.0)
+
+
+# ---------------------------------------------------------------------------
+# bugfix 3: coll start_ns stamped at actual release, not launch
+# ---------------------------------------------------------------------------
+
+def _held_coll_trace(hold_ns=5000.0):
+    et = ExecutionTrace(num_ranks=2)
+    halves = et.coll(0, "all_reduce", 2048, "ring")
+    for h in halves:
+        h.start_after_ns = hold_ns
+    return et
+
+
+@pytest.mark.parametrize("fidelity", ["analytic", "coarse", "fine"])
+def test_coll_start_stamped_at_release(fidelity):
+    hold = 5000.0
+    r = simulate(_held_coll_trace(hold), fidelity=fidelity, check="off")
+    for nid, (start, end) in r.node_times.items():
+        assert start >= hold - 1e-9, \
+            f"{fidelity}: node {nid} stamped start {start} before its " \
+            f"release at {hold}"
+        assert end >= start
+
+
+def test_coll_start_release_parity_across_tiers():
+    """The release-time stamp is tier-invariant: every tier reports the
+    held collective starting at its release, not at t=0."""
+    hold = 12_345.0
+    starts = {}
+    for fid in ("analytic", "coarse", "fine"):
+        r = simulate(_held_coll_trace(hold), fidelity=fid, check="off")
+        starts[fid] = {nid: s for nid, (s, _) in r.node_times.items()}
+    for fid, per_node in starts.items():
+        assert all(s == pytest.approx(hold) for s in per_node.values()), \
+            f"{fid}: starts {per_node} != release {hold}"
+
+
+def test_comp_start_after_honored_at_every_tier():
+    for fid in ("analytic", "coarse", "fine"):
+        et = ExecutionTrace(num_ranks=2)
+        et.comp(0, "a", flops=1e6, start_after_ns=3000.0)
+        et.comp(1, "b", flops=1e6)
+        r = simulate(et, fidelity=fid, check="off")
+        assert r.node_times[0][0] >= 3000.0 - 1e-9
+        assert r.node_times[1][0] < 3000.0
+
+
+# ---------------------------------------------------------------------------
+# TR-DUP-COLL: duplicate (coll_id, rank) halves
+# ---------------------------------------------------------------------------
+
+def _dup_coll_trace():
+    et = ExecutionTrace(num_ranks=2)
+    et.coll(7, "all_reduce", 1024, "ring")
+    # reuse coll_id 7 for a second instance — the iterative-decode mistake
+    et.coll(7, "all_reduce", 1024, "ring")
+    return et
+
+
+def test_check_trace_reports_tr_dup_coll():
+    rep = check_trace(_dup_coll_trace(), deep=False)
+    assert not rep.ok
+    assert any(d.rule == "TR-DUP-COLL" for d in rep.diagnostics)
+    assert any("appears twice" in d.message for d in rep.diagnostics)
+
+
+def test_validate_rejects_duplicate_coll_halves():
+    with pytest.raises(ValueError, match="appears twice"):
+        _dup_coll_trace().validate()
+
+
+def test_tier_executor_raises_on_duplicate_instead_of_miswiring(monkeypatch):
+    """Even with validation bypassed, the cheap-tier executor must refuse
+    to overwrite completion routing for a duplicate (coll_id, rank)."""
+    monkeypatch.setattr(ExecutionTrace, "validate", lambda self: None)
+    trace = _dup_coll_trace()
+    from repro.core.backends import CoarseConfig
+    backend = CoarseConfig().make_backend(None)
+    ex = _TierTraceExecutor(trace, backend, CoarseConfig())
+    with pytest.raises(RuntimeError, match="TR-DUP-COLL"):
+        ex.run()
+
+
+# ---------------------------------------------------------------------------
+# p2p transfer: functional correctness + trace integration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("protocol", ["put", "get"])
+def test_p2p_transfer_moves_the_bytes(protocol):
+    prog = C.p2p_transfer(4, 512, 2, protocol=protocol, src=1, dst=3)
+    inputs = verify.make_inputs(prog, seed=5)
+    outs = verify.execute(prog, inputs, seed=5)
+    assert np.array_equal(outs[3], inputs[1]), \
+        "dst output must equal src input"
+    for r in (0, 2):
+        assert not np.array_equal(outs[r], inputs[1])
+
+
+def test_p2p_transfer_rejects_bad_endpoints():
+    with pytest.raises(ValueError):
+        C.p2p_transfer(4, 512, src=0, dst=0)
+    with pytest.raises(ValueError):
+        C.p2p_transfer(4, 512, src=0, dst=7)
+
+
+def test_p2p_trace_node_runs_at_every_tier():
+    events = {}
+    for fid in ("analytic", "coarse", "fine"):
+        et = ExecutionTrace(num_ranks=4)
+        pre = et.comp(0, "prefill", flops=1e6)
+        et.p2p(0, 4096, src=0, dst=2, deps_by_rank={0: [pre]})
+        r = simulate(et, fidelity=fid, check="off")
+        assert r.time_ns > 0
+        events[fid] = r.events
+        # only the two endpoint halves exist; ranks 1 and 3 have no nodes
+        assert len(r.node_times) == 3
+    assert events["analytic"] <= events["coarse"] < events["fine"]
+
+
+def test_p2p_trace_validation_rules():
+    et = ExecutionTrace(num_ranks=4)
+    half = et.p2p(0, 1024, src=0, dst=2)[0]
+    half.rank = 1                                # half on a bystander rank
+    with pytest.raises(ValueError, match="p2p half on rank"):
+        et.validate()
+    rep = check_trace(et, deep=False)
+    assert any(d.rule == "TR-P2P" for d in rep.diagnostics)
+
+
+def test_trace_json_round_trips_serving_fields():
+    et = ExecutionTrace(num_ranks=2)
+    a = et.comp(0, "a", flops=1e6, start_after_ns=1500.0)
+    et.p2p(0, 2048, src=0, dst=1, deps_by_rank={0: [a]})
+    for n in et.nodes:
+        if n.kind == "coll":
+            n.req_done = [4]
+    text = et.to_json()
+    back = ExecutionTrace.from_json(text)
+    assert back.to_json() == text
+    assert back.nodes[0].start_after_ns == 1500.0
+    assert back.nodes[1].src_rank == 0 and back.nodes[1].dst_rank == 1
+    assert back.nodes[1].req_done == [4]
+
+
+def test_negative_start_after_rejected():
+    et = ExecutionTrace(num_ranks=1)
+    et.comp(0, "a", flops=1.0, start_after_ns=-1.0)
+    with pytest.raises(ValueError, match="start_after_ns"):
+        et.validate()
+    assert any(d.rule == "TR-START"
+               for d in check_trace(et, deep=False).diagnostics)
+
+
+# ---------------------------------------------------------------------------
+# traffic: seeded determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("proc", [
+    PoissonArrivals(1000.0),
+    DiurnalArrivals(800.0, amplitude=0.5, period_s=0.05),
+    MMPPArrivals(200.0, 4000.0, mean_dwell_s=0.003),
+], ids=lambda p: p.name)
+def test_arrivals_deterministic_and_increasing(proc):
+    a = proc.arrivals(64, seed=11)
+    b = proc.arrivals(64, seed=11)
+    assert a == b, "same seed must reproduce the stream bit-for-bit"
+    assert proc.arrivals(64, seed=12) != a
+    assert all(x < y for x, y in zip(a, a[1:]))
+    assert a[0] > 0
+
+
+def test_generate_requests_deterministic():
+    r1 = toy_requests(n=20, seed=9)
+    r2 = toy_requests(n=20, seed=9)
+    assert r1 == r2
+    assert r1 != toy_requests(n=20, seed=10)
+    for r in r1:
+        assert 8 <= r.prompt_tokens <= 32
+        assert 2 <= r.decode_tokens <= 12
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_percentile_nearest_rank():
+    vals = sorted(float(v) for v in range(1, 101))
+    assert percentile(vals, 50.0) == 50.0
+    assert percentile(vals, 99.0) == 99.0
+    assert percentile(vals, 100.0) == 100.0
+    assert percentile(vals, 0.0) == 1.0
+    with pytest.raises(ValueError):
+        percentile([], 50.0)
+
+
+def test_request_latencies_raise_on_untagged_request():
+    et = ExecutionTrace(num_ranks=1)
+    n = et.comp(0, "a", flops=1.0)
+    n.req_done = [0]
+    reqs = [Request(0, 0.0, 1, 1), Request(1, 5.0, 1, 1)]
+    with pytest.raises(ValueError, match="no req_done"):
+        request_latencies(et, reqs, {n.nid: (0.0, 10.0)})
+
+
+def test_latency_stats_from_known_distribution():
+    reqs = [Request(i, 0.0, 1, 1) for i in range(10)]
+    lats = {i: float(i + 1) for i in range(10)}
+    s = latency_stats(reqs, lats)
+    assert s.count == 10 and s.max_ns == 10.0
+    assert s.p50_ns == 5.0 and s.mean_ns == pytest.approx(5.5)
+
+
+# ---------------------------------------------------------------------------
+# cross-tier serving parity suite
+# ---------------------------------------------------------------------------
+
+def _scenarios(seed=3):
+    reqs = toy_requests(n=12, seed=seed)
+    return [continuous_batching(TOY, reqs, tp=2),
+            disaggregated(TOY, reqs, prefill_ranks=2, decode_ranks=2)]
+
+
+def test_serving_monotone_fidelity_and_latency_attached():
+    for scen in _scenarios():
+        events = {}
+        for fid in ("analytic", "coarse", "fine"):
+            r = scen.simulate(fidelity=fid, check="off")
+            events[fid] = r.events
+            assert r.latency is not None
+            assert r.latency.count == len(scen.requests)
+            assert r.latency.p50_ns <= r.latency.p95_ns \
+                <= r.latency.p99_ns <= r.latency.p999_ns <= r.latency.max_ns
+            assert r.latency.goodput_rps > 0
+        assert events["analytic"] <= events["coarse"] < events["fine"], \
+            f"{scen.name}: fidelity must buy event detail, got {events}"
+
+
+def test_serving_seeded_replay_bit_identical():
+    for build in (lambda: _scenarios(seed=21)[0],
+                  lambda: _scenarios(seed=21)[1]):
+        a, b = build(), build()
+        assert a.trace.to_json() == b.trace.to_json()
+        ra = a.simulate(fidelity="coarse", check="off")
+        rb = b.simulate(fidelity="coarse", check="off")
+        assert ra.time_ns == rb.time_ns
+        assert ra.events == rb.events
+        assert ra.node_times == rb.node_times
+        assert ra.latency == rb.latency
+
+
+def test_serving_latency_exceeds_queueing_floor():
+    """Every request's latency is positive, and bursty traffic queues:
+    p999 is strictly above p50 for a scenario with contention."""
+    scen = continuous_batching(TOY, toy_requests(n=24, seed=5, rate=5000.0),
+                               tp=2, max_batch=4)
+    r = scen.simulate(fidelity="coarse", check="off")
+    lats = request_latencies(scen.trace, scen.requests, r.node_times)
+    assert all(v > 0 for v in lats.values())
+    assert r.latency.p999_ns > r.latency.p50_ns
+
+
+def _assert_scenario_checks_clean(seed, proc_kind):
+    proc = {"poisson": PoissonArrivals(1500.0),
+            "diurnal": DiurnalArrivals(1000.0, 0.4, 0.02),
+            "mmpp": MMPPArrivals(300.0, 3000.0, 0.002)}[proc_kind]
+    reqs = generate_requests(proc, n=8, seed=seed,
+                             prompt_tokens=(4, 16), decode_tokens=(2, 8))
+    for scen in (continuous_batching(TOY, reqs, tp=2),
+                 disaggregated(TOY, reqs)):
+        rep = check_workload(scen.trace, None)
+        assert rep.clean, f"{scen.name} (seed={seed}): {rep.format()}"
+
+
+def test_seeded_scenarios_pass_check_workload_clean():
+    """Deterministic stand-in for the hypothesis property below."""
+    for seed in range(4):
+        for kind in ("poisson", "diurnal", "mmpp"):
+            _assert_scenario_checks_clean(seed, kind)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                     # optional test extra
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000),
+           st.sampled_from(["poisson", "diurnal", "mmpp"]))
+    def test_generated_scenarios_pass_check_workload_clean(seed, kind):
+        _assert_scenario_checks_clean(seed, kind)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_generated_scenarios_pass_check_workload_clean():
+        pass
