@@ -32,8 +32,8 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import collectives as C                        # noqa: E402
+from repro.core.backends import simulate                       # noqa: E402
 from repro.core.cluster import Cluster, NocConfig              # noqa: E402
-from repro.core.system import simulate_collective              # noqa: E402
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -62,8 +62,8 @@ def run_mode(mode: str, size: int, bulk: str = "on", ledger: str = "on"):
                                                 bulk_emission=bulk,
                                                 fabric_ledger=ledger))
         t0 = time.perf_counter()
-        r = simulate_collective(C.ring_all_reduce(NRANKS, size, NWG,
-                                                  PROTOCOL), cluster=cluster)
+        r = simulate(C.ring_all_reduce(NRANKS, size, NWG, PROTOCOL),
+                     fidelity="fine", cluster=cluster, check="off")
         walls.append(time.perf_counter() - t0)
         sims.add((r.time_ns, r.events, cluster.fabric.order_violations))
     assert len(sims) == 1, f"trials disagree on sim results: {sims}"
@@ -97,7 +97,7 @@ def profile_run(size: int) -> None:
     wl = C.ring_all_reduce(NRANKS, size, NWG, PROTOCOL)
     prof = cProfile.Profile()
     prof.enable()
-    simulate_collective(wl, cluster=cluster)
+    simulate(wl, fidelity="fine", cluster=cluster, check="off")
     prof.disable()
     pstats.Stats(prof).sort_stats("cumulative").print_stats(25)
     print(json.dumps(cluster.fabric.ledger_counters(), indent=1))

@@ -6,9 +6,9 @@ the coarse model)."""
 
 from __future__ import annotations
 
+from repro.core.backends import FineConfig, simulate
 from repro.core.collectives import (direct_all_gather,
                                     direct_reduce_scatter, ring_all_reduce)
-from repro.core.system import simulate_collective, simulate_collective_coarse
 
 from .common import Report, fast_gpu, small_noc
 
@@ -24,9 +24,11 @@ def run(nranks: int = 8, size: int = 64 * KiB) -> str:
                                                         "get")),
         ("direct_ag_put", lambda: direct_all_gather(nranks, size, 2, "put")),
     ]:
-        fine = simulate_collective(prog_fn(), noc=small_noc(),
-                                   gpu_config=fast_gpu(), unroll=8)
-        coarse = simulate_collective_coarse(prog_fn())
+        fine = simulate(prog_fn(), fidelity="fine",
+                        config=FineConfig(noc=small_noc(),
+                                          gpu_config=fast_gpu()),
+                        unroll=8, check="off")
+        coarse = simulate(prog_fn(), fidelity="coarse", check="off")
         gap = fine.time_ns / coarse.time_ns
         gaps[name] = gap
         rep.add(program=name, fine_us=round(fine.time_ns / 1e3, 1),

@@ -7,8 +7,8 @@ put pays semaphore synchronization before every reduce)."""
 
 from __future__ import annotations
 
+from repro.core.backends import FineConfig, simulate
 from repro.core.collectives import direct_reduce_scatter
-from repro.core.system import simulate_collective
 
 from .common import Report, fast_gpu, small_noc
 
@@ -23,8 +23,10 @@ def run(nranks: int = 8, nwg: int = 4, sizes=(16 * KiB, 64 * KiB,
         row = {"buffer_KiB": size // KiB}
         for proto in ("put", "get"):
             prog = direct_reduce_scatter(nranks, size, nwg, proto)
-            r = simulate_collective(prog, noc=small_noc(),
-                                    gpu_config=fast_gpu(), unroll=4)
+            r = simulate(prog, fidelity="fine",
+                         config=FineConfig(noc=small_noc(),
+                                           gpu_config=fast_gpu()),
+                         unroll=4, check="off")
             row[f"bw_{proto}_GBps"] = round(r.bus_GBps, 3)
             row[f"t_{proto}_us"] = round(r.time_ns / 1e3, 1)
         row["get_speedup"] = round(row["t_put_us"] / row["t_get_us"], 3)

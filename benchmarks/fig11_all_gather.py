@@ -7,8 +7,8 @@ links.  Fair arbitration narrows the gap."""
 
 from __future__ import annotations
 
+from repro.core.backends import FineConfig, simulate
 from repro.core.collectives import direct_all_gather
-from repro.core.system import simulate_collective
 
 from .common import Report, fast_gpu, small_noc
 
@@ -25,8 +25,10 @@ def run(nranks: int = 8, nwg: int = 4,
             for arb in ("fifo", "fair"):
                 prog = direct_all_gather(nranks, size, nwg, proto)
                 gc = fast_gpu(max_outstanding=128, unroll=16)
-                r = simulate_collective(prog, noc=small_noc(arb),
-                                        gpu_config=gc, unroll=16)
+                r = simulate(prog, fidelity="fine",
+                             config=FineConfig(noc=small_noc(arb),
+                                               gpu_config=gc),
+                             unroll=16, check="off")
                 row[f"bw_{proto}_{arb}_GBps"] = round(r.bus_GBps, 3)
         rep.add(**row)
         last = row

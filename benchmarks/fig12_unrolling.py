@@ -5,8 +5,8 @@ transfers."""
 
 from __future__ import annotations
 
+from repro.core.backends import FineConfig, simulate
 from repro.core.collectives import direct_all_to_all
-from repro.core.system import simulate_collective
 
 from .common import Report, fast_gpu, small_noc
 
@@ -20,8 +20,10 @@ def run(nranks: int = 8, nwg: int = 4,
     for size in sizes:
         for u in unrolls:
             prog = direct_all_to_all(nranks, size, nwg, "put")
-            r = simulate_collective(prog, noc=small_noc(),
-                                    gpu_config=fast_gpu(), unroll=u)
+            r = simulate(prog, fidelity="fine",
+                         config=FineConfig(noc=small_noc(),
+                                           gpu_config=fast_gpu()),
+                         unroll=u, check="off")
             rep.add(shard_KiB=size // KiB, unroll=u,
                     bw_GBps=round(r.bus_GBps, 3),
                     t_us=round(r.time_ns / 1e3, 1))

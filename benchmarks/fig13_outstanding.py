@@ -4,9 +4,9 @@ bandwidth-bound sizes, no effect for latency-bound ones."""
 
 from __future__ import annotations
 
+from repro.core.backends import FineConfig, simulate
 from repro.core.collectives import direct_all_gather
 from repro.core.gpu_model import GpuConfig
-from repro.core.system import simulate_collective
 
 from .common import Report, small_noc
 
@@ -22,8 +22,9 @@ def run(nranks: int = 8, nwg: int = 4,
             prog = direct_all_gather(nranks, size, nwg, "put")
             gc = GpuConfig(max_outstanding=lim, unroll=8,
                            cache_line=512)
-            r = simulate_collective(prog, noc=small_noc(), gpu_config=gc,
-                                    unroll=8)
+            r = simulate(prog, fidelity="fine",
+                         config=FineConfig(noc=small_noc(), gpu_config=gc),
+                         unroll=8, check="off")
             rep.add(shard_KiB=size // KiB, max_outstanding=lim,
                     bw_GBps=round(r.bus_GBps, 3))
             series.setdefault(size, []).append(r.time_ns)

@@ -1,16 +1,54 @@
 """Paper Figs. 14-15: wall-clock simulation time and simulation throughput
 (simulated ns per wall-clock second) of fine-grained All-Gather, scaling
-target system size.  Paper: 2-128 GPUs at 448 endpoints each; here 2-16
-GPUs at ~30 endpoints each (one CPU core)."""
+target system size.  Paper: 2-128 GPUs at 448 endpoints each; here the
+figure sweep covers 2-16 GPUs at ~30 endpoints each (one CPU core), and
+the tracked scalability bench sweeps 2-128 ranks on the hierarchical
+multi-host blueprint (tiny per-GPU NoC) and writes
+``results/BENCH_scalability.json``.
+
+The bench holds the *total* gathered buffer fixed (shard = total / n), so
+ring All-Gather traffic — and therefore event count — grows linearly with
+rank count; events-per-rank staying flat is the tracked near-linearity
+signal.  Route registration is lazy: a ring workload touches O(n) pairs,
+so ``pairs_registered`` staying well under n^2 is the tracked
+sub-quadratic-registration signal.
+
+Run:  PYTHONPATH=src python benchmarks/fig14_scalability.py [--quick]
+      (--quick caps the sweep at 32 ranks and writes
+       BENCH_scalability_quick.json instead of the tracked baseline)
+"""
 
 from __future__ import annotations
 
-from repro.core.collectives import direct_all_gather
-from repro.core.system import simulate_collective
+import json
+import math
+import os
+import sys
+import time
 
-from .common import Report, fast_gpu, small_noc
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import collectives as C                        # noqa: E402
+from repro.core.backends import FineConfig, simulate           # noqa: E402
+from repro.core.cluster import NocConfig                       # noqa: E402
+from repro.core.infragraph import (hierarchical_fabric,        # noqa: E402
+                                   to_cluster)
+
+try:
+    from .common import Report, fast_gpu, small_noc            # noqa: E402
+except ImportError:                                            # script mode
+    from common import Report, fast_gpu, small_noc             # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
 KiB = 1 << 10
+
+#: fixed total gathered bytes for the bench sweep (shard = TOTAL / n)
+TOTAL = 128 * KiB
+
+#: (hosts, gpus_per_host) points — ranks = hosts * gpus_per_host, 2..128
+BENCH_POINTS = ((1, 2), (1, 4), (2, 4), (4, 4), (8, 4), (16, 4), (32, 4))
 
 
 def run(sizes=(16 * KiB, 64 * KiB), ranks=(2, 4, 8, 16)) -> str:
@@ -18,9 +56,11 @@ def run(sizes=(16 * KiB, 64 * KiB), ranks=(2, 4, 8, 16)) -> str:
     rows = []
     for n in ranks:
         for size in sizes:
-            prog = direct_all_gather(n, size, 2, "put")
-            r = simulate_collective(prog, noc=small_noc(),
-                                    gpu_config=fast_gpu(), unroll=8)
+            prog = C.direct_all_gather(n, size, 2, "put")
+            r = simulate(prog, fidelity="fine",
+                         config=FineConfig(noc=small_noc(),
+                                           gpu_config=fast_gpu()),
+                         unroll=8, check="off")
             thr = r.time_ns / max(r.wallclock_s, 1e-9)
             rows.append((n, size, r.events, r.wallclock_s, thr))
             rep.add(gpus=n, shard_KiB=size // KiB, events=r.events,
@@ -37,5 +77,81 @@ def run(sizes=(16 * KiB, 64 * KiB), ranks=(2, 4, 8, 16)) -> str:
     return derived
 
 
+# ---------------------------------------------------------------------------
+# Tracked scalability bench (hierarchical blueprint, 2-128 ranks)
+# ---------------------------------------------------------------------------
+
+def tiny_noc() -> NocConfig:
+    """Smallest viable per-GPU NoC so the 128-rank point fits one core."""
+    return NocConfig(mesh_x=2, mesh_y=1, cus_per_router=1, mem_channels=2,
+                     io_ports=2)
+
+
+def bench_point(hosts: int, gpus_per_host: int) -> dict:
+    graph = hierarchical_fabric(hosts=hosts, gpus_per_host=gpus_per_host)
+    cluster = to_cluster(graph, noc=tiny_noc(), gpu_config=fast_gpu())
+    n = len(cluster.gpus)
+    assert n == hosts * gpus_per_host
+    prog = C.ring_all_gather(n, TOTAL // n, 1, "put")
+    t0 = time.perf_counter()
+    r = simulate(prog, fidelity="fine", cluster=cluster, check="off")
+    wall = time.perf_counter() - t0
+    fab = cluster.fabric
+    return {
+        "ranks": n,
+        "hosts": hosts,
+        "gpus_per_host": gpus_per_host,
+        "shard_bytes": TOTAL // n,
+        "time_ns": r.time_ns,
+        "events": r.events,
+        "events_per_rank": round(r.events / n, 1),
+        "wall_s": round(wall, 3),
+        "events_per_s": round(r.events / wall) if wall > 0 else None,
+        "order_violations": fab.order_violations,
+        "pairs_registered": cluster.pairs_registered,
+        "routes_registered": fab.routes_registered,
+    }
+
+
+def bench(max_ranks: int = 128, name: str = "BENCH_scalability.json") -> dict:
+    rows = [bench_point(h, g) for h, g in BENCH_POINTS
+            if h * g <= max_ranks]
+    for row in rows:
+        assert row["order_violations"] == 0, row
+        # lazy registration: a ring touches O(n) pairs, never the n^2
+        # product — the sub-quadratic-registration gate
+        n = row["ranks"]
+        assert row["pairs_registered"] <= 4 * n, row
+    # near-linearity: with total bytes fixed, events/rank must be flat
+    # (within noise from the n-1 step count) across the tail of the sweep
+    tail = [r for r in rows if r["ranks"] >= 8]
+    epr = [r["events_per_rank"] for r in tail]
+    slope = max(epr) / min(epr) if epr else 1.0
+    # log-log slope of events vs ranks across the full sweep (1.0 = linear)
+    lo, hi = rows[0], rows[-1]
+    loglog = (math.log(hi["events"] / lo["events"])
+              / math.log(hi["ranks"] / lo["ranks"]))
+    out = {
+        "workload": {"collective": "ring_all_gather",
+                     "total_bytes": TOTAL, "nworkgroups": 1,
+                     "protocol": "put", "blueprint": "hierarchical_fabric",
+                     "noc": "tiny(2x1, 1 cu, 2 mem, 2 io)",
+                     "route_policy": "lazy"},
+        "sweep": rows,
+        "events_per_rank_spread_tail": round(slope, 3),
+        "loglog_slope_events_vs_ranks": round(loglog, 3),
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, name)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(json.dumps(out, indent=1))
+    print(f"\nwrote {path}")
+    return out
+
+
 if __name__ == "__main__":
-    print(run())
+    if "--quick" in sys.argv:
+        bench(max_ranks=32, name="BENCH_scalability_quick.json")
+    else:
+        bench()

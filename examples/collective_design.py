@@ -10,7 +10,7 @@ from repro.core.collectives import (direct_all_gather,
                                     direct_reduce_scatter, ring_all_reduce)
 from repro.core.gpu_model import GpuConfig
 from repro.core.mscclpp import ProgramBuilder
-from repro.core.system import simulate_collective
+from repro.core.backends import FineConfig, simulate
 from repro.core.verify import check_program
 
 NOC = NocConfig(mesh_x=2, mesh_y=2, cus_per_router=2, mem_channels=4,
@@ -20,14 +20,16 @@ KiB = 1 << 10
 
 print("== get vs put reduce-scatter (paper Fig. 10) ==")
 for proto in ("put", "get"):
-    r = simulate_collective(direct_reduce_scatter(8, 64 * KiB, 4, proto),
-                            noc=NOC, gpu_config=GPU, unroll=4)
+    r = simulate(direct_reduce_scatter(8, 64 * KiB, 4, proto),
+                 fidelity="fine", config=FineConfig(noc=NOC, gpu_config=GPU),
+                 unroll=4)
     print(f"  {proto}: {r.time_ns/1e3:9.1f} us   bw {r.bus_GBps:.2f} GB/s")
 
 print("== loop unrolling on all-gather (paper Fig. 12 axis) ==")
 for unroll in (1, 4, 16):
-    r = simulate_collective(direct_all_gather(8, 32 * KiB, 4, "put"),
-                            noc=NOC, gpu_config=GPU, unroll=unroll)
+    r = simulate(direct_all_gather(8, 32 * KiB, 4, "put"),
+                 fidelity="fine", config=FineConfig(noc=NOC, gpu_config=GPU),
+                 unroll=unroll)
     print(f"  unroll={unroll:2d}: {r.time_ns/1e3:9.1f} us")
 
 print("== custom algorithm: broadcast-reduce star (authored in the DSL) ==")
@@ -51,5 +53,6 @@ star = b.build()
 check_program(star)          # it IS correct...
 ring = ring_all_reduce(n, S, 1, "put")
 for name, prog in [("star(custom)", star), ("ring(textbook)", ring)]:
-    r = simulate_collective(prog, noc=NOC, gpu_config=GPU, unroll=4)
+    r = simulate(prog, fidelity="fine",
+                 config=FineConfig(noc=NOC, gpu_config=GPU), unroll=4)
     print(f"  {name:15s}: {r.time_ns/1e3:9.1f} us")   # ...but slower at scale

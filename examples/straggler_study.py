@@ -13,7 +13,7 @@ Run:  PYTHONPATH=src python examples/straggler_study.py
 from repro.core.cluster import NocConfig
 from repro.core.collectives import (direct_all_gather, ring_all_gather)
 from repro.core.gpu_model import GpuConfig
-from repro.core.system import simulate_collective
+from repro.core.backends import FineConfig, simulate
 
 NOC = NocConfig(mesh_x=2, mesh_y=2, cus_per_router=2, mem_channels=4,
                 io_ports=4)
@@ -24,15 +24,15 @@ N = 8
 print(f"{'algorithm':18s} {'clean_us':>9s} {'skewed_us':>10s} {'penalty':>8s}")
 for name, gen in [("ring_ag", ring_all_gather),
                   ("direct_ag", direct_all_gather)]:
-    base = simulate_collective(gen(N, 32 * KiB, 2, "put"), noc=NOC,
-                               gpu_config=GPU, unroll=4)
+    cfg = FineConfig(noc=NOC, gpu_config=GPU)
+    base = simulate(gen(N, 32 * KiB, 2, "put"), fidelity="fine", config=cfg,
+                    unroll=4)
     skew = [0.0] * N
     skew[3] = 20_000.0            # one rank launches 20 us late — comparable
                                   # to the collective itself, so algorithm
                                   # structure (chained ring vs direct) shows
-    lag = simulate_collective(gen(N, 32 * KiB, 2, "put"), noc=NOC,
-                              gpu_config=GPU, unroll=4,
-                              rank_delay_ns=skew)
+    lag = simulate(gen(N, 32 * KiB, 2, "put"), fidelity="fine", config=cfg,
+                   unroll=4, rank_delay_ns=skew)
     penalty = (lag.time_ns - base.time_ns) / 20_000.0
     spread = max(lag.per_rank_done_ns) - min(lag.per_rank_done_ns)
     print(f"{name:18s} {base.time_ns/1e3:9.1f} {lag.time_ns/1e3:10.1f} "

@@ -19,7 +19,7 @@ from typing import Dict, List, Optional
 from heapq import heappush as _heappush
 
 from .engine import Engine
-from .gpu_model import GpuConfig, GpuModel, WRequest
+from .gpu_model import GpuConfig, GpuModel, WRequest, _wreq
 from .instructions import LOAD, SEM_RELEASE, STORE
 from .network.fabric import CONTROL, DATA, EndpointSource, Fabric, Flight
 from .workload import Kernel
@@ -48,6 +48,17 @@ class NocConfig:
                                           # clocks; auto = on, with per-link
                                           # probe kill switches)
     ledger_depth: int = 4                 # channel-clock recursion budget
+    route_policy: str = "lazy"            # "lazy" | "eager" route-table
+                                          # registration (lazy registers a
+                                          # (src,dst) GPU pair's routes on
+                                          # first use — bit-exact with eager,
+                                          # near-linear in ranks actually
+                                          # talking to each other)
+    max_multipath_period: int = 4096      # cap on the per-pair multipath
+                                          # period lcm(io_src, io_dst, hbm):
+                                          # raise it deliberately rather
+                                          # than silently materializing huge
+                                          # route tables
 
     @property
     def num_cus(self) -> int:
@@ -88,6 +99,13 @@ class Cluster:
         self._hbm_lat_ps = int(round(cfg.hbm_latency_ns * 1000))
         self._cl = cfg.cache_line
         self._hdr = cfg.header_bytes
+        if self.noc.route_policy not in ("lazy", "eager"):
+            raise ValueError(
+                f"NocConfig.route_policy must be 'lazy' or 'eager', "
+                f"got {self.noc.route_policy!r}")
+        self._lazy = self.noc.route_policy == "lazy"
+        self.pairs_registered = 0
+        self._maxp = 1                  # key stride: max multipath period
         self.gpus: List[GpuModel] = []
         self._routes: Dict[tuple, list] = {}   # (src, dst, mp-key) -> route
         self._build(num_gpus, topology)
@@ -205,58 +223,146 @@ class Cluster:
                 self.gpus[g].region_guard_ps = int(round(guard * 1000))
 
     def warm_routes(self) -> None:
-        """Pre-register every request/response route this cluster can use,
-        and build the per-CU multipath route tables the hot path indexes.
+        """Initialize the per-CU multipath route tables the hot path
+        indexes, and wire the per-link reservation ledgers.
 
-        Correctness: the fast path's sole-feeder corridors are inferred
-        from *registered* routes (``Fabric._register_feeders``); a route
-        first registered mid-run could widen a link's feeder set after
-        traffic was already committed ahead through it, breaking the
-        per-link FIFO certificate.  Registering the whole (CU x memory
-        endpoint x multipath-key) route space up front makes the census
-        final before the first event — cheap, since routing uses per-source
-        BFS trees.
+        Two policies (``NocConfig.route_policy``):
+
+        * ``"eager"`` — pre-register the whole (CU x memory endpoint x
+          multipath-key) route space up front: the feeder census is final
+          before the first event, but cost is quadratic in ranks.
+        * ``"lazy"`` (default) — allocate empty tables; a (src-GPU,
+          dst-GPU) pair's route bundle is registered on first use
+          (kernel dispatch scans operand GPUs; ``send_request`` has a
+          backstop).  Each registration batch is sealed by
+          ``Fabric.commit_census()``: a census *epoch* that re-arms probe
+          policies, refreshes the static transit floors incrementally
+          through the affected feeder cones, and (mid-run) bumps the
+          memo epoch so no stale clock conclusion survives.  Bit-exact
+          with eager: traffic only ever rides registered routes, so the
+          census is always complete for currently-possible traffic, and
+          route tie-break keys are positional — order-isomorphic to the
+          eager enumeration — so same-tick heap ties resolve identically.
+          The per-link FIFO monitor (``order_violations``) certifies that
+          no ahead-commit window was widened retroactively.
 
         Speed: a request's route and destination node are then a single
         list index by cache-line residue (``cu.reqtab`` / ``cu.resptab``)
         instead of hashing/multipath arithmetic per Wavefront Request.
 
-        The per-link reservation ledgers are wired here too, once the route
-        space is final: each CU becomes the injection source of its own
-        route heads and the delivery sink of its inbound links (its wake
-        heap), and each memory endpoint bounds its response injections by
-        its inbound channel clocks plus the access latency.
+        The per-link reservation ledgers are wired here too: each CU
+        becomes the injection source of its own route heads and the
+        delivery sink of its inbound links (its wake heap), and each
+        memory endpoint bounds its response injections by its inbound
+        channel clocks plus the access latency.
         """
+        ng = len(self.gpus)
+        # key stride: the largest multipath period any pair can have (also
+        # validates every period against NocConfig.max_multipath_period —
+        # cheap, since it only iterates distinct endpoint-count signatures)
+        sizes = {(len(g.io_nodes), len(g.hbm_nodes)) for g in self.gpus}
+        maxp = 1
+        for io_s, _ in sizes:
+            for io_d, h_d in sizes:
+                maxp = max(maxp, self._check_period(h_d),
+                           self._check_period(
+                               math.lcm(io_s, io_d, h_d)) if ng > 1 else 1)
+        self._maxp = maxp
         for src in self.gpus:
             for cu in src.cus:
-                cu.reqtab = [None] * len(self.gpus)
-                cu.resptab = [None] * len(self.gpus)
-                for dst in self.gpus:
-                    if dst is src:
-                        # local: route per HBM channel, both legs
-                        period = len(dst.hbm_nodes)
-                    else:
-                        # cross-GPU: the multipath key space is the
-                        # cache-line residue modulo (io ports x channels)
-                        period = math.lcm(len(src.io_nodes),
-                                          len(dst.io_nodes),
-                                          len(dst.hbm_nodes))
-                    req_routes, resp_routes, nodes = [], [], []
-                    for line in range(period):
-                        addr = line * self._cl
-                        hnode = dst.hbm_node_for(addr, 0)
-                        nodes.append(hnode)
-                        req_routes.append(
-                            self._route(src, cu.node, dst, hnode, addr))
-                        resp_routes.append(
-                            self._route(dst, hnode, src, cu.node, addr))
-                    cu.reqtab[dst.gid] = (period, req_routes, nodes)
-                    cu.resptab[dst.gid] = (period, resp_routes)
+                cu.reqtab = [None] * ng
+                cu.resptab = [None] * ng
+        if self._lazy:
+            if self.fabric.ledger:
+                self._wire_ledger()
+                # compile the (initially route-free) static transit floors;
+                # commit_census() refreshes them per registration epoch
+                self.fabric.build_transit_tables()
+            return
+        for src in self.gpus:
+            for dst in self.gpus:
+                self._register_pair(src.gid, dst.gid)
         if self.fabric.ledger:
             self._wire_ledger()
             # census final: compile the static feeder-cone transit floors
             # the clock kernel short-circuits on (fabric.ledger_tables)
             self.fabric.build_transit_tables()
+
+    def _check_period(self, period: int) -> int:
+        cap = self.noc.max_multipath_period
+        if period > cap:
+            raise ValueError(
+                f"multipath period {period} (lcm of I/O port and HBM "
+                f"channel counts) exceeds NocConfig.max_multipath_period="
+                f"{cap}; use port/channel counts with smaller lcm or "
+                f"raise the cap deliberately")
+        return period
+
+    def _pair_period(self, src: GpuModel, dst: GpuModel) -> int:
+        if dst is src:
+            # local: route per HBM channel, both legs
+            return len(dst.hbm_nodes)
+        # cross-GPU: the multipath key space is the cache-line residue
+        # modulo (io ports x channels)
+        return math.lcm(len(src.io_nodes), len(dst.io_nodes),
+                        len(dst.hbm_nodes))
+
+    def _register_pair(self, sgid: int, dgid: int) -> None:
+        """Register the (src-GPU, dst-GPU) pair's route bundle: one
+        request + one response route per CU and multipath residue, with
+        positional tie-break keys (order-isomorphic to the eager
+        enumeration: src asc, cu asc, dst asc, line asc, request before
+        response; via-segment keys nest in the per-route stride of 8)."""
+        src = self.gpus[sgid]
+        dst = self.gpus[dgid]
+        period = self._pair_period(src, dst)
+        ng = len(self.gpus)
+        ncu = len(src.cus)
+        maxp = self._maxp
+        cl = self._cl
+        for c, cu in enumerate(src.cus):
+            base = ((sgid * ncu + c) * ng + dgid) * maxp
+            req_routes, resp_routes, nodes = [], [], []
+            for line in range(period):
+                addr = line * cl
+                hnode = dst.hbm_node_for(addr, 0)
+                nodes.append(hnode)
+                pos = (base + line) * 2
+                req_routes.append(
+                    self._route(src, cu.node, dst, hnode, addr,
+                                key=(pos << 3) + 1))
+                resp_routes.append(
+                    self._route(dst, hnode, src, cu.node, addr,
+                                key=((pos + 1) << 3) + 1))
+            cu.reqtab[dgid] = (period, req_routes, nodes)
+            cu.resptab[dgid] = (period, resp_routes)
+        self.pairs_registered += 1
+        self.fabric.commit_census()
+
+    def _ensure_pair(self, sgid: int, dgid: int) -> None:
+        if self.gpus[sgid].cus[0].reqtab[dgid] is None:
+            self._register_pair(sgid, dgid)
+
+    def _ensure_kernel_routes(self, kernel: Kernel) -> None:
+        """Register every (src, dst) GPU pair a kernel's operands can
+        touch, before any of its wavefronts issues a request.  Scanning
+        operand ``MemRef.gpu`` fields covers the compiled entry stream
+        (every Load/Store/Memcpy/Reduce/Semaphore entry's target comes
+        from one of these refs); ``send_request`` keeps a backstop."""
+        g = kernel.gpu
+        self._ensure_pair(g, g)
+        for wg in kernel.workgroups:
+            for op in wg.ops:
+                for attr in ("src", "dst", "sem"):
+                    ref = getattr(op, attr, None)
+                    tg = getattr(ref, "gpu", None)
+                    if tg is not None and tg != g:
+                        self._ensure_pair(g, tg)
+                srcs = getattr(op, "srcs", None)
+                if srcs:
+                    for ref in srcs:
+                        if ref.gpu != g:
+                            self._ensure_pair(g, ref.gpu)
 
     def _wire_ledger(self) -> None:
         """Install injection sources and delivery sinks (see warm_routes)."""
@@ -286,6 +392,8 @@ class Cluster:
                 "ledger that no event callback dispatches new kernels "
                 "(use dispatch_at() before sealing, or leave the cluster "
                 "unsealed)")
+        if self._lazy:
+            self._ensure_kernel_routes(kernel)
         self.gpus[kernel.gpu].dispatch(kernel)
 
     def dispatch_at(self, delay_ns: float, kernel: Kernel) -> None:
@@ -297,6 +405,8 @@ class Cluster:
                 "cluster routes not initialized: a topology='none' Cluster "
                 "must have its scale-up fabric wired by the caller and then "
                 "warm_routes() called before dispatching kernels")
+        if self._lazy:
+            self._ensure_kernel_routes(kernel)
         self.engine.schedule(delay_ns, self.gpus[kernel.gpu].dispatch, kernel)
 
     def run(self, until_ns: Optional[float] = None) -> float:
@@ -304,9 +414,10 @@ class Cluster:
 
     # -------------------------------------------------- request/response flow
     def _route(self, src_gpu: GpuModel, src_node: int, dst_gpu: GpuModel,
-               dst_node: int, addr: int) -> List:
+               dst_node: int, addr: int,
+               key: Optional[int] = None) -> List:
         if src_gpu.gid == dst_gpu.gid:
-            return self.fabric.route(src_node, dst_node)
+            return self.fabric.route(src_node, dst_node, key)
         # cross-GPU: hash the cache line across I/O ports for multipathing
         line = addr // self._cl
         skey = line % len(src_gpu.io_nodes)
@@ -316,14 +427,18 @@ class Cluster:
         if route is None:
             via = [src_node, src_gpu.io_nodes[skey], dst_gpu.io_nodes[dkey],
                    dst_node]
-            route = self.fabric.route_via(via)
+            route = self.fabric.route_via(via, key)
             self._routes[rkey] = route
         return route
 
     def send_request(self, req: WRequest, at_ps: Optional[int] = None) -> None:
         """CU -> memory endpoint request leg (at ``at_ps``, default now)."""
         self.request_count += 1
-        period, routes, _ = req.cu.reqtab[req.gpu]
+        tab = req.cu.reqtab[req.gpu]
+        if tab is None:                # lazy backstop (see warm_routes)
+            self._register_pair(req.cu.gpu.gid, req.gpu)
+            tab = req.cu.reqtab[req.gpu]
+        period, routes, _ = tab
         req.route = routes[(req.addr // self._cl) % period]
         if req.kind == STORE:          # payload travels on the request leg
             req.size = req.psize + self._hdr
@@ -385,9 +500,83 @@ class Cluster:
         for j in range(n):
             e = entries[pc + j]
             kind = e[0]
-            period, routes, _ = reqtab[e[1]]
+            tab = reqtab[e[1]]
+            if tab is None:            # lazy backstop (see warm_routes)
+                self._register_pair(gid, e[1])
+                tab = reqtab[e[1]]
+            period, routes, _ = tab
             route = routes[(e[3] // cl) % period]
-            req = WRequest(kind, e[1], e[2], e[3], e[4], cu, wf)
+            req = _wreq(kind, e[1], e[2], e[3], e[4], cu, wf)
+            req.route = route
+            if kind == STORE:
+                req.size = e[4] + hdr
+                req.cls = DATA
+            else:
+                req.size = hdr
+                req.cls = CONTROL
+            req.eager = True
+            req.on_arrive = arrive
+            if route is not group_route:
+                if group:
+                    self._inject_group(gid, group_route, group, ats)
+                group = []
+                ats = []
+                group_route = route
+            group.append(req)
+            ats.append(at)
+            at += cyc
+        if group:
+            self._inject_group(gid, group_route, group, ats)
+
+    def send_request_bulk_rr(self, cu, ready: List, n: int,
+                             t0_ps: int) -> None:
+        """Emit ``n`` load/store lines round-robin across a stable set of
+        ready wavefronts, one batch (see ``ComputeUnit._streak_rr``).
+
+        ``ready`` is the CU's ready set in scan order; line ``l`` issues
+        wavefront ``ready[l % len(ready)]``'s next entry at
+        ``t0 + l*cycle`` — exactly the per-cycle round-robin cadence the
+        per-instruction scan would produce while the ready set stays
+        stable.  Global tick order is preserved across the interleaved
+        per-wavefront streams, so same-route runs still coalesce into
+        trains and FIFO arrival order on shared first links is unchanged.
+        """
+        m = len(ready)
+        self.request_count += n
+        cu.outstanding += n
+        entries_l = []
+        pcs = []
+        q, r = divmod(n, m)
+        for j, (_, w) in enumerate(ready):
+            cnt = q + (1 if j < r else 0)
+            entries_l.append(w.entries)
+            pcs.append(w.pc)
+            w.pc += cnt
+            w.outstanding += cnt
+        cyc = cu._cyc_ps
+        cl = self._cl
+        hdr = self._hdr
+        reqtab = cu.reqtab
+        gid = cu.gpu.gid
+        arrive = self._arrive_at_memory
+        group: List[WRequest] = []
+        ats: List[int] = []
+        group_route = None
+        at = t0_ps
+        taken = [0] * m
+        for line in range(n):
+            j = line % m
+            wf = ready[j][1]
+            e = entries_l[j][pcs[j] + taken[j]]
+            taken[j] += 1
+            kind = e[0]
+            tab = reqtab[e[1]]
+            if tab is None:            # lazy backstop (see warm_routes)
+                self._register_pair(gid, e[1])
+                tab = reqtab[e[1]]
+            period, routes, _ = tab
+            route = routes[(e[3] // cl) % period]
+            req = _wreq(kind, e[1], e[2], e[3], e[4], cu, wf)
             req.route = route
             if kind == STORE:
                 req.size = e[4] + hdr

@@ -85,6 +85,43 @@ class WRequest(Flight):
         self.eta_ps = -1
 
 
+# Free-list for WRequest round trips: at scale the fine tier allocates
+# millions of them, all with identical lifetimes (issued, delivered to
+# memory, re-armed, delivered back to the CU).  ``complete`` is the final
+# consumer — nothing reads a request after its response delivery — so it
+# recycles the object there.
+_REQ_POOL: List[WRequest] = []
+_REQ_POOL_CAP = 4096
+
+
+def _wreq(kind: int, gpu: int, space: int, addr: int, psize: int,
+          cu: "ComputeUnit", wf: Optional[WavefrontState]) -> WRequest:
+    pool = _REQ_POOL
+    if pool:
+        r = pool.pop()
+        r.kind = kind
+        r.gpu = gpu
+        r.space = space
+        r.addr = addr
+        r.psize = psize
+        r.cu = cu
+        r.wf = wf
+        r.value = 0
+        r.hop = 0
+        r.payload = None
+        r.eta_ps = -1
+        return r
+    return WRequest(kind, gpu, space, addr, psize, cu, wf)
+
+
+def _wreq_free(r: WRequest) -> None:
+    if len(_REQ_POOL) < _REQ_POOL_CAP:
+        r.wf = None
+        r.cu = None
+        r.route = None
+        _REQ_POOL.append(r)
+
+
 class _WGExec:
     """A workgroup resident on a CU."""
     __slots__ = ("wg", "kernel", "wavefronts", "nop_arrived", "barrier_arrived")
@@ -449,20 +486,28 @@ class ComputeUnit(InjectionSource):
                 if self.outstanding >= maxo:
                     continue                  # register file full: next wf
                 n = 1
+                ready = None
                 if gpu.bulk:
                     run = wf.runs[wf.pc]
                     if run > 1:
-                        n = self._streak_len(order, wf, run, t_ps, maxo)
+                        n, ready = self._streak_rr(order, start + i, k, wf,
+                                                   run, t_ps, maxo)
                 if n > 1:
-                    gpu.cluster.send_request_bulk(self, wf, n, t_ps)
+                    if len(ready) > 1:
+                        gpu.cluster.send_request_bulk_rr(self, ready, n, t_ps)
+                        # resume the rotation after the last issuing wf
+                        self._rr = (ready[(n - 1) % len(ready)][0] + 1) % k
+                    else:
+                        gpu.cluster.send_request_bulk(self, wf, n, t_ps)
+                        self._rr = (start + i + 1) % k
                 else:
                     wf.outstanding += 1
                     self.outstanding += 1
                     gpu.cluster.send_request(
-                        WRequest(kind, e[1], e[2], e[3], e[4], self, wf),
+                        _wreq(kind, e[1], e[2], e[3], e[4], self, wf),
                         t_ps)
                     wf.pc += 1
-                self._rr = (start + i + 1) % k
+                    self._rr = (start + i + 1) % k
                 return n
             if self._issue_ctrl(wf, e, kind, t_ps):
                 wf.pc += 1
@@ -471,31 +516,56 @@ class ComputeUnit(InjectionSource):
         return 0
 
     # ---------------------------------------------------------------- issue
-    def _streak_len(self, order, wf: WavefrontState, run: int, t_ps: int,
-                    maxo: int) -> int:
-        """How many lines of ``wf``'s streak may be emitted in one batch.
+    def _streak_rr(self, order, istart: int, k: int, wf: WavefrontState,
+                   run: int, t_ps: int, maxo: int):
+        """How many issue slots may be emitted in one batch, and by whom.
 
-        Bulk emission must reproduce the per-cycle cadence exactly, so it
-        only fires when no other wavefront could claim an issue slot
-        mid-streak (they are all blocked or done — and can only unblock via
-        an event, which the commit bound excludes), capped by register-file
-        headroom and by the batch commit bound on the issue ticks.
+        Bulk emission must reproduce the per-cycle cadence exactly.  The
+        per-cycle scan rotates through the ready wavefronts in cyclic scan
+        order, one load/store line per cycle; that rotation is stable —
+        and therefore batchable — as long as every non-ready wavefront
+        stays blocked (they can only unblock via an event, which the
+        commit bound excludes) and every ready wavefront sits in an
+        uninterrupted load/store run.  So the batch is the ready set's
+        round-robin stripe, cut at the shortest run boundary (where the
+        ready set would change), capped by register-file headroom and by
+        the batch commit bound on the issue ticks.
+
+        Returns ``(n, ready)`` with ``ready`` the ``(scan position,
+        wavefront)`` list in rotation order starting at ``wf``, or
+        ``(1, None)`` when only a single per-instruction issue is safe
+        (e.g. a sibling is parked on a sync boundary this batch must not
+        cross).
         """
-        for _, w2 in order:
-            if w2 is not wf and not w2.done and w2.waiting is None:
-                return 1
-        n = maxo - self.outstanding
-        if run < n:
-            n = run
+        ready = [(istart % k, wf)]
+        kmin = run
+        for j in range(1, k):
+            p = (istart + j) % k
+            w2 = order[p][1]
+            if w2.done or w2.waiting is not None:
+                continue
+            e2 = w2.next_entry()
+            if e2 is None or e2[0] > STORE:
+                # sync/retire/control boundary mid-rotation: the ready set
+                # would mutate, so fall back to per-instruction issue
+                return 1, None
+            r2 = w2.runs[w2.pc]
+            ready.append((p, w2))
+            if r2 < kmin:
+                kmin = r2
+        n = len(ready) * kmin
+        cap = maxo - self.outstanding
+        if cap < n:
+            n = cap
         if n <= 1:
-            return 1
+            return 1, None
         bound = self._bound
         if bound is not None:
             # issue ticks t, t+cyc, ... must stay strictly below the bound
             fit = (bound - 1 - t_ps) // self._cyc_ps + 1
             if fit < n:
                 n = fit
-        return n if n > 1 else 1
+        return (n, ready) if n > 1 else (1, None)
 
     def _issue_ctrl(self, wf: WavefrontState, e: tuple, kind: int,
                     t_ps: int) -> bool:
@@ -520,12 +590,12 @@ class ComputeUnit(InjectionSource):
             wf.waiting = "sem"
             if e[1] != self.gpu.gid:
                 self._remote_sem += 1
-            req = WRequest(kind, e[1], e[2], e[3], hdr, self, wf)
+            req = _wreq(kind, e[1], e[2], e[3], hdr, self, wf)
             req.value = e[5]             # expected count rides along
             self._inject(req, t_ps)
             return True
         # SEM_RELEASE
-        req = WRequest(kind, e[1], e[2], e[3], hdr, self, wf)
+        req = _wreq(kind, e[1], e[2], e[3], hdr, self, wf)
         wf.outstanding += 1
         self._inject(req, t_ps)
         return True
@@ -540,18 +610,23 @@ class ComputeUnit(InjectionSource):
     def complete(self, req: WRequest) -> None:
         self.outstanding -= 1
         wf = req.wf
-        if req.kind == SEM_ACQUIRE:
-            sem_home = self.gpu.cluster.gpus[req.gpu]
+        kind = req.kind
+        if kind == SEM_ACQUIRE:
+            gid = req.gpu
+            addr = req.addr
             expected = req.value if req.value else 1
-            if sem_home.sem_value(req.addr) >= expected:
+            _wreq_free(req)              # final consumer: recycle
+            sem_home = self.gpu.cluster.gpus[gid]
+            if sem_home.sem_value(addr) >= expected:
                 wf.waiting = None
-                if req.gpu != self.gpu.gid:
+                if gid != self.gpu.gid:
                     self._remote_sem -= 1
                 self.wake()
             else:
                 # subscribe: when a release bumps this semaphore, re-poll.
-                sem_home.sem_subscribe(req.addr, self, wf, expected)
+                sem_home.sem_subscribe(addr, self, wf, expected)
             return
+        _wreq_free(req)                  # final consumer: recycle
         wf.outstanding -= 1
         if wf.waiting == "waitcnt" and wf.outstanding <= wf.wait_thresh:
             wf.waiting = None
@@ -563,8 +638,8 @@ class ComputeUnit(InjectionSource):
     def repoll(self, wf: WavefrontState, gpu: int, addr: int,
                expected: int) -> None:
         """Re-issue a semaphore poll after a release event."""
-        req = WRequest(SEM_ACQUIRE, gpu, _SEM_SPACE, addr,
-                       self.gpu.config.header_bytes, self, wf)
+        req = _wreq(SEM_ACQUIRE, gpu, _SEM_SPACE, addr,
+                    self.gpu.config.header_bytes, self, wf)
         req.value = expected
         self._inject(req)
 

@@ -1,6 +1,7 @@
 from .graph import (Component, Device, Infrastructure, Instance, LinkType,
                     FQGraph)
 from .blueprints import (clos_fat_tree_fabric, generic_gpu_device,
+                         hierarchical_fabric, hierarchical_host_device,
                          host_device, single_tier_fabric, switch_device,
                          torus2d_fabric, tpu_v5e_device, tpu_pod_fabric)
 from .translate import to_fabric, to_simple_topology, to_cluster
@@ -8,7 +9,8 @@ from .visualize import to_dot, summary
 
 __all__ = [
     "Component", "Device", "Infrastructure", "Instance", "LinkType",
-    "FQGraph", "clos_fat_tree_fabric", "generic_gpu_device", "host_device",
+    "FQGraph", "clos_fat_tree_fabric", "generic_gpu_device",
+    "hierarchical_fabric", "hierarchical_host_device", "host_device",
     "single_tier_fabric", "switch_device", "torus2d_fabric",
     "tpu_v5e_device", "tpu_pod_fabric", "to_fabric", "to_simple_topology",
     "to_cluster", "to_dot", "summary",

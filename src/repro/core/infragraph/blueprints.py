@@ -92,6 +92,27 @@ def host_device(gpus: int = 8, nic_GBps: float = 50.0) -> Device:
     return d
 
 
+def hierarchical_host_device(gpus: int = 4, nic_GBps: float = 50.0,
+                             scaleup_GBps: float = 200.0,
+                             scaleup_lat_ns: float = 500.0) -> Device:
+    """Multi-GPU host for hierarchical fabrics: ``gpus`` rank-bearing GPU
+    endpoints joined by a shared scale-up bridge (NVLink-switch-style, a
+    fabric node of its own under ``to_cluster``), plus one scale-out NIC
+    per GPU.  Intra-host GPU-to-GPU traffic crosses the bridge; inter-host
+    traffic leaves through the NICs."""
+    d = Device(f"hhost{gpus}g", [
+        Component("gpu", gpus),
+        Component("bridge", 1),
+        Component("nic", gpus, (("GBps", nic_GBps),)),
+    ])
+    d.add_link_type(LinkType("scaleup", scaleup_GBps, scaleup_lat_ns))
+    d.add_link_type(LinkType("pcie", 64.0, 500.0))
+    for g in range(gpus):
+        d.wire(("gpu", g), ("bridge", 0), "scaleup")
+        d.wire(("gpu", g), ("nic", g), "pcie")
+    return d
+
+
 def switch_device(ports: int, port_GBps: float = 50.0,
                   name: Optional[str] = None) -> Device:
     """Switch: one ASIC vertex + ``ports`` port vertices (paper §4.7.3's
@@ -204,6 +225,68 @@ def clos_fat_tree_fabric(num_hosts: int = 8, switch_ports: int = 4,
         for s in range(num_spines):
             infra.connect(("leaf", l, "port", half + s),
                           ("spine", s, "port", l), "eth")
+    return infra
+
+
+def hierarchical_fabric(hosts: int = 2, gpus_per_host: int = 4,
+                        scaleout: str = "leafspine",
+                        switch_ports: Optional[int] = None,
+                        nic_GBps: float = 50.0,
+                        scaleup_GBps: float = 200.0,
+                        scaleup_lat_ns: float = 500.0,
+                        eth_lat_ns: float = 500.0,
+                        device: Optional[Device] = None) -> Infrastructure:
+    """Hierarchical multi-host fabric: detailed NoC per GPU, a shared
+    scale-up bridge per host, and a scale-out network between the hosts'
+    NICs (the thousand-rank blueprint; paper Figs. 14-15 run this shape).
+
+    ``scaleout`` selects the inter-host tier:
+
+    * ``"leafspine"`` (default) — 2-tier folded Clos over all NICs:
+      ``switch_ports`` ports per leaf (default ``2 * gpus_per_host`` — one
+      leaf per host), half down to NICs, half up to spines;
+    * ``"switch"`` — one flat switch with a port per NIC.
+
+    Each tier keeps its own link type (``scaleup`` / ``pcie`` / ``eth``),
+    so ``translate.to_cluster`` wires per-tier bandwidth and latency from
+    the graph rather than the ``NocConfig`` scale-up defaults.
+    """
+    dev = device or hierarchical_host_device(
+        gpus_per_host, nic_GBps, scaleup_GBps, scaleup_lat_ns)
+    infra = Infrastructure(f"hier_{hosts}x{gpus_per_host}_{scaleout}")
+    infra.add(dev, "host", hosts)
+    if hosts == 1:
+        return infra                  # scale-up bridge only: no scale-out
+    infra.add_link_type(LinkType("eth", nic_GBps, eth_lat_ns))
+    total = hosts * gpus_per_host
+    if scaleout == "switch":
+        infra.add(switch_device(total, nic_GBps, "scaleoutsw"), "switch", 1)
+        for i in range(total):
+            h, j = divmod(i, gpus_per_host)
+            infra.connect(("host", h, "nic", j), ("switch", 0, "port", i),
+                          "eth")
+    elif scaleout == "leafspine":
+        ports = switch_ports or 2 * gpus_per_host
+        half = ports // 2
+        if half < 1:
+            raise ValueError("leafspine scale-out needs switch_ports >= 2")
+        num_leaves = math.ceil(total / half)
+        num_spines = half
+        infra.add(switch_device(ports, nic_GBps, "leafsw"), "leaf",
+                  num_leaves)
+        infra.add(switch_device(max(num_leaves, 1), nic_GBps, "spinesw"),
+                  "spine", num_spines)
+        for i in range(total):
+            h, j = divmod(i, gpus_per_host)
+            infra.connect(("host", h, "nic", j),
+                          ("leaf", i // half, "port", i % half), "eth")
+        for l in range(num_leaves):
+            for s in range(num_spines):
+                infra.connect(("leaf", l, "port", half + s),
+                              ("spine", s, "port", l), "eth")
+    else:
+        raise ValueError(
+            f"unknown scaleout {scaleout!r} (use 'leafspine' or 'switch')")
     return infra
 
 

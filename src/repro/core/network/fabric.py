@@ -293,14 +293,48 @@ class _Train:
     ``at_ps[i]`` (non-decreasing); the single heap event fires at
     ``at_ps[0]``.  Formed by :meth:`Link._admit` when a flight lands on a
     link whose pending tail train shares the same remaining route.
+
+    ``tailed`` marks trains that were ever stored in a link's ``_tails``
+    joinability map.  Those entries are never removed eagerly, so a tailed
+    train may be referenced long after it delivered; it is therefore
+    excluded from the free-list below (recycling it could let a stale
+    ``_tails`` entry alias a fresh train and wrongly accept a joiner).
     """
-    __slots__ = ("route", "hop", "lines", "at_ps")
+    __slots__ = ("route", "hop", "lines", "at_ps", "tailed")
 
     def __init__(self, route: List["Link"], hop: int):
         self.route = route
         self.hop = hop              # index of the link just serialized
         self.lines: List[Flight] = []
         self.at_ps: List[int] = []
+        self.tailed = False
+
+
+# Free-list for train shells (steady-state event processing allocates one
+# train per leg; the shells are plain containers, fully re-armed on reuse,
+# so one process-wide pool is safe across engines).  Only never-tailed
+# trains are recycled — see _Train.tailed.
+_TRAIN_POOL: List[_Train] = []
+_TRAIN_POOL_CAP = 1024
+
+
+def _train_new(route: List["Link"], hop: int) -> _Train:
+    pool = _TRAIN_POOL
+    if pool:
+        t = pool.pop()
+        t.route = route
+        t.hop = hop
+        t.tailed = False
+        return t
+    return _Train(route, hop)
+
+
+def _train_free(t: _Train) -> None:
+    if not t.tailed and len(_TRAIN_POOL) < _TRAIN_POOL_CAP:
+        t.route = None
+        t.lines.clear()
+        t.at_ps.clear()
+        _TRAIN_POOL.append(t)
 
 
 class Link:
@@ -314,7 +348,7 @@ class Link:
                  "fast", "coalesce", "_free_ps", "_lat_ps", "_ser_ps_cache",
                  "_tails", "_win_ps", "_last_arr_ps", "order_violations",
                  "region", "_rguard_ps", "_sole_feed",
-                 "led", "_feeders", "_inj_fed", "_inj_src", "_sink",
+                 "led", "_feeders", "_deps", "_inj_fed", "_inj_src", "_sink",
                  "_resv", "_xfer_lb", "_ge_e", "_ge_v", "_geL_g", "_geL_v",
                  "_lt_e", "_lt_v", "_ltr_v", "_ltr_u", "_busy_e",
                  "_static_lb", "_auto", "_probe_on", "_probe_ok",
@@ -361,6 +395,9 @@ class Link:
         # ---- reservation ledger (channel clock) -----------------------
         self.led = ledger and self.fast
         self._feeders: List["Link"] = []  # distinct upstream feeder links
+        self._deps: List["Link"] = []     # links this one feeds (reverse
+                                          # census edges, for incremental
+                                          # static-floor refresh)
         self._inj_fed = False             # heads a publicly-routed path
         self._inj_src: Optional[InjectionSource] = None
         self._sink = None                 # endpoint wake heap (list) or None
@@ -466,12 +503,13 @@ class Link:
                             and self._sink is not None:
                         _heappush(self._sink, next_at)
                     return
-                train = _Train(flight.route, flight.hop)
+                train = _train_new(flight.route, flight.hop)
                 train.lines.append(flight)
                 train.at_ps.append(next_at)
+                train.tailed = True
                 self._tails[key] = train
             else:
-                train = _Train(flight.route, flight.hop)
+                train = _train_new(flight.route, flight.hop)
                 train.lines.append(flight)
                 train.at_ps.append(next_at)
             route = flight.route
@@ -872,6 +910,7 @@ def _propel(train: _Train) -> None:
                     eng._led_gen += 1
                     if rheaps is not None:
                         _heappush(rheaps[0], at)
+            _train_free(train)
             return
         link = route[hop]
         if at > now and link._sole_feed is not prev:
@@ -922,6 +961,7 @@ def _propel(train: _Train) -> None:
                 if hop == 1 and prev.coalesce:
                     # parked right at injection: later same-route flights
                     # may still ride along (the hop-0 join contract)
+                    train.tailed = True
                     prev._tails[id(route)] = train
                 lreg = link.region
                 if link.led:
@@ -943,6 +983,7 @@ def _propel(train: _Train) -> None:
             else:
                 eng.schedule_abs_ps(at, _enqueue_line, link, f, region=0,
                                     key=rkey)
+            _train_free(train)
             return
         # FIFO service commit, inlined
         size = f.size
@@ -1035,6 +1076,7 @@ def _propel_multi(train: _Train) -> None:
                     if sink is not None:
                         _heappush(sink, at_ps[i])
                     sched(at_ps[i], _deliver, g, region=dreg, key=rkey)
+            _train_free(train)
             return
         link = route[hop]
         if first > now and link._sole_feed is not route[hop - 1]:
@@ -1046,6 +1088,7 @@ def _propel_multi(train: _Train) -> None:
                     # can see this traffic coming (its tag makes it visible)
                     train.hop = hop - 1
                     if link.coalesce:
+                        train.tailed = True
                         route[hop - 1]._tails[id(route)] = train
                     sched(first, _propel, train, region=link.region,
                           key=rkey)
@@ -1067,6 +1110,7 @@ def _propel_multi(train: _Train) -> None:
                 # nor within the optimistic window: park until arrival
                 train.hop = hop - 1
                 if link.coalesce:
+                    train.tailed = True
                     route[hop - 1]._tails[id(route)] = train
                 if link.led:
                     _heappush(link._resv, first)
@@ -1087,6 +1131,7 @@ def _propel_multi(train: _Train) -> None:
                 else:
                     sched(max(at_ps[i], now), _enqueue_line, link, g,
                           region=0, key=rkey)
+            _train_free(train)
             return
         if link.region != reg:
             # entering this link's region — through a sole-fed crossing or
@@ -1151,12 +1196,13 @@ def _propel_multi(train: _Train) -> None:
                     stop = i
                     break
             if stop < n:
-                rest = _Train(route, hop - 1)
+                rest = _train_new(route, hop - 1)
                 rest.lines = lines[stop:]
                 rest.at_ps = at_ps[stop:]
                 del lines[stop:]
                 del at_ps[stop:]
                 if link.coalesce:
+                    rest.tailed = True
                     route[hop - 1]._tails[id(route)] = rest
                 if link.led:
                     _heappush(link._resv, rest.at_ps[0])
@@ -1178,6 +1224,7 @@ def _propel_multi(train: _Train) -> None:
                     lines[i].hop = hop
                     tail.lines.append(lines[i])
                     tail.at_ps.append(link._service(lines[i].size, at_ps[i]))
+                _train_free(train)
                 return
         for i in range(n):
             lines[i].hop = hop
@@ -1195,6 +1242,7 @@ def _propel_multi(train: _Train) -> None:
             # is capped by the train's own first delivery — makes the same
             # call per line instead of parking wholesale.)
             if link.coalesce:
+                train.tailed = True
                 link._tails[id(route)] = train
             if route[nxt].led:
                 _heappush(route[nxt]._resv, at_ps[0])
@@ -1256,6 +1304,13 @@ class Fabric:
         self._bfs_trees: Dict[int, list] = {}
         self.links: List[Link] = []
         self._next_rkey = 1             # route tie-break keys (see Route)
+        # census epochs: links whose feeder census mutated since the last
+        # commit_census(); lazy route registration batches its updates here
+        self._census_changed: set = set()
+        self._tables_built = False      # build_transit_tables has run
+        # count of census commits that landed while a changed link had
+        # already admitted traffic (its FIFO monitor certifies soundness)
+        self.census_retro = 0
 
     # ------------------------------------------------------------- building
     def add_node(self, name: str) -> int:
@@ -1302,10 +1357,13 @@ class Fabric:
         metadata installed by the owner (e.g. ``Cluster.warm_routes``) and
         must be re-installed by it after re-warming."""
         self._census_dirty = False
+        self._census_changed.clear()
+        self._tables_built = False
         self.engine._led_gen += 1       # census change: drop eternal caches
         for l in self.links:
             l._sole_feed = None
             l._feeders = []
+            l._deps = []
             l._inj_fed = False
             l._inj_src = None
             l._sink = None
@@ -1323,13 +1381,23 @@ class Fabric:
                               region=region))
 
     # -------------------------------------------------------------- routing
-    def route(self, src: int, dst: int) -> List[Link]:
-        path = self._route_seg(src, dst)
+    def route(self, src: int, dst: int,
+              key: Optional[int] = None) -> List[Link]:
+        """Shortest path, marking the head injection-fed.
+
+        ``key`` optionally pins the route's tie-break key (see
+        :class:`Route`).  Lazy registration uses positional keys that are
+        order-isomorphic to the eager first-use order, which is what keeps
+        same-tick heap ties — and therefore schedules — bit-identical
+        whichever order pairs are registered in.
+        """
+        path = self._route_seg(src, dst, key)
         if path:
             self._mark_head(path[0])
         return path
 
-    def _route_seg(self, src: int, dst: int) -> List[Link]:
+    def _route_seg(self, src: int, dst: int,
+                   key: Optional[int] = None) -> List[Link]:
         """Shortest path *without* marking the first link injection-fed.
 
         ``route_via`` stitches these segments together: a segment's first
@@ -1339,35 +1407,47 @@ class Fabric:
         ``io -> switch`` hop of every cross-GPU route), parking chains that
         are provably FIFO-safe.  Only the *public* entry points mark heads.
         """
-        key = (src, dst)
-        hit = self._route_cache.get(key)
+        ck = (src, dst)
+        hit = self._route_cache.get(ck)
         if hit is not None:
             return hit
         path = Route(self._bfs(src, dst))
-        path.key = self._next_rkey
-        self._next_rkey += 1
-        self._route_cache[key] = path
+        if key is None:
+            key = self._next_rkey
+            self._next_rkey += 1
+        path.key = key
+        self._route_cache[ck] = path
         self._register_feeders(path)
         return path
 
-    def route_via(self, waypoints: List[int]) -> List[Link]:
+    def route_via(self, waypoints: List[int],
+                  key: Optional[int] = None) -> List[Link]:
         """Concatenated shortest-path route through ``waypoints``.
 
         Cached per waypoint tuple: callers on the same via-path share one
         route *object*, which is what lets the coalescing fast path recognize
         same-route flights and merge them into trains.
         """
-        key = tuple(waypoints)
-        hit = self._via_cache.get(key)
+        ck = tuple(waypoints)
+        hit = self._via_cache.get(ck)
         if hit is not None:
             return hit
         out: Route = Route()
-        out.key = self._next_rkey
-        self._next_rkey += 1
+        if key is None:
+            out.key = self._next_rkey
+            self._next_rkey += 1
+        else:
+            out.key = key
+        seg = 1
         for a, b in zip(waypoints, waypoints[1:]):
             if a != b:
-                out.extend(self._route_seg(a, b))
-        self._via_cache[key] = out
+                # segment keys never break flight ties (segments are not
+                # flight routes) but keep them deterministic regardless of
+                # registration order by deriving them from the via key
+                out.extend(self._route_seg(
+                    a, b, None if key is None else key + seg))
+                seg += 1
+        self._via_cache[ck] = out
         self._register_feeders(out)
         if out:
             self._mark_head(out[0])
@@ -1376,6 +1456,8 @@ class Fabric:
     def _mark_head(self, link: Link) -> None:
         """Mark a link as the head of a publicly-routed path: messages can
         be injected onto it, so its feeder order is never sole."""
+        if not link._inj_fed or link._sole_feed is not False:
+            self._census_changed.add(link)
         if link._sole_feed is not False:
             link._sole_feed = False
         link._inj_fed = True
@@ -1396,10 +1478,13 @@ class Fabric:
         self._census_dirty = True
         self.engine._led_gen += 1       # census change: drop eternal caches
         prev = path[0]
+        changed = self._census_changed
         for link in path[1:]:
             feeders = link._feeders
             if prev not in feeders:
                 feeders.append(prev)
+                prev._deps.append(link)
+                changed.add(link)
                 cur = link._sole_feed
                 if cur is None and not link._inj_fed:
                     link._sole_feed = prev
@@ -1407,6 +1492,45 @@ class Fabric:
                     link._sole_feed = False
             prev = link
         return
+
+    def commit_census(self) -> None:
+        """Seal a batch of lazy route registrations into a census epoch.
+
+        Every link whose feeder census mutated since the last commit gets
+        its probe policy re-armed (prior probe-outcome statistics argued
+        about a smaller route space) and — once static transit tables
+        exist — its static lower-bound floor refreshed incrementally
+        through the downstream feeder cone (see
+        :func:`ledger_tables.refresh_static_floors`).  Mid-run commits bump
+        the per-event memo epoch so no channel-clock memo from the old
+        census survives, and count links that had already admitted traffic
+        (``census_retro``): the ahead-commit window is never widened
+        retroactively because floors only *decrease* under new feeders, and
+        the FIFO monitor (``order_violations``) certifies the result.
+        """
+        changed = self._census_changed
+        if not changed:
+            return
+        eng = self.engine
+        if eng._running:
+            now = eng._now_ps
+            for l in changed:
+                if l._last_arr_ps > 0 or l._free_ps > now:
+                    self.census_retro += 1
+                    break
+            # bump the per-event memo epoch: clock memos predating this
+            # census must not answer queries about the widened route space
+            eng.events_processed += 1
+        for l in changed:
+            l._probe_on = True
+            l._bko = 0
+            l._skip = 0
+            l._probe_ok = 0
+            l._probe_fail = 0
+        if self._tables_built:
+            from .ledger_tables import refresh_static_floors
+            refresh_static_floors(changed)
+        self._census_changed = set()
 
     def _bfs(self, src: int, dst: int) -> List[Link]:
         """Shortest path via a cached per-source BFS parent tree.
@@ -1559,7 +1683,7 @@ class Fabric:
                         and first._sink is not None:
                     _heappush(first._sink, next_at)
                 return
-            train = _Train(route, 0)
+            train = _train_new(route, 0)
             train.lines.append(flight)
             train.at_ps.append(next_at)
             if chain and first.led:
@@ -1567,9 +1691,10 @@ class Fabric:
                 # their own tails/reservations, deliveries their own sinks
                 _propel(train)
                 return
+            train.tailed = True
             first._tails[key] = train
         else:
-            train = _Train(route, 0)
+            train = _train_new(route, 0)
             train.lines.append(flight)
             train.at_ps.append(next_at)
             if chain and first.led:
@@ -1636,7 +1761,7 @@ class Fabric:
                 train = tail
         new = train is None
         if new:
-            train = _Train(route, 0)
+            train = _train_new(route, 0)
         lines, ticks = train.lines, train.at_ps
         service = first._service
         for i, f in enumerate(flights):
@@ -1648,6 +1773,7 @@ class Fabric:
                 _propel(train)
                 return
             if first.coalesce:
+                train.tailed = True
                 first._tails[id(route)] = train
             if len(route) > 1:
                 nlink = route[1]
@@ -1721,6 +1847,8 @@ class Fabric:
         floors = build_static_floors(self.links)
         for i, l in enumerate(self.links):
             l._static_lb = floors[i]
+        self._tables_built = True
+        self._census_changed.clear()
         self.engine._led_gen += 1
 
     def ledger_counters(self) -> Dict[str, object]:
@@ -1748,6 +1876,7 @@ class Fabric:
             "depth_hist": [d for d in eng.led_hist],
             "probe_off_links": sum(1 for l in self.links
                                    if not l._probe_on),
+            "census_retro": self.census_retro,
         }
 
     def set_region_guard(self, region: int, guard_ns: float) -> None:
@@ -1761,10 +1890,17 @@ class Fabric:
             if link.region == region:
                 link._rguard_ps = guard_ps
 
+    @property
+    def routes_registered(self) -> int:
+        """Distinct routes materialized so far (lazy registration makes
+        this scale with pairs actually used, not all pairs)."""
+        return len(self._route_cache) + len(self._via_cache)
+
     def stats(self) -> Dict[str, float]:
         return {
             "links": len(self.links),
             "nodes": len(self.node_names),
             "bytes_moved": sum(l.bytes_moved for l in self.links),
             "order_violations": self.order_violations,
+            "routes_registered": self.routes_registered,
         }

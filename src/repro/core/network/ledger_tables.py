@@ -35,7 +35,8 @@ identical, useful only for very large topologies).
 from __future__ import annotations
 
 import os
-from typing import List
+from collections import deque
+from typing import Iterable, List
 
 import numpy as np
 
@@ -157,3 +158,70 @@ def build_static_floors(links: List) -> List[int]:
         else:
             out.append(_FAR)        # empty cone: census-complete vacuity
     return out
+
+
+def _eff(f) -> int:
+    """A feeder's contribution to its successors' cone floors: 0 once
+    traffic can enter at it at an arbitrary tick, else its own stored
+    cone floor."""
+    if _is_entry(f):
+        return 0
+    lb = f._static_lb
+    return lb if lb < _FAR else _FAR
+
+
+def refresh_static_floors(changed: Iterable) -> None:
+    """Incrementally refresh ``_static_lb`` after a census epoch.
+
+    ``changed`` is the set of links whose feeder census mutated since the
+    last commit (new feeder appended, sole-feed corridor broken, or head
+    marked injection-fed).  Registering routes only ever *adds* ways for
+    traffic to reach a link, so the true cone floor is monotonically
+    non-increasing across commits — a decrease-only worklist over the
+    reverse feeder edges (``Link._deps``) reaches the exact fixpoint
+    without re-relaxing the whole fabric.
+
+    Two wrinkles keep it exact rather than merely sound:
+
+    * a mutated link's floor *contribution* can drop to zero without its
+      own stored floor changing (entry status is not part of ``slb``), so
+      every mutated link force-propagates to its deps once; and
+    * a link's entry status also reads its *sole feeder*'s direct state
+      (``_inj_fed``, non-fast feeders), so deps sole-fed by a mutated
+      link are force-propagated too.  One level suffices: past that, the
+      effect is an ordinary floor decrease.
+
+    Where a contribution *increases* (a previously feeder-less interior
+    segment head gaining its first feeder), stale downstream floors are
+    left as under-estimates — a smaller lower bound is still a lower
+    bound, and floors only steer chain-vs-park probe decisions, never
+    timing, so soundness and bit-exactness both survive.
+    """
+    work = deque(changed)
+    mutated = {id(l) for l in work}
+    forced = set(mutated)
+    pending = set(mutated)
+    while work:
+        l = work.popleft()
+        lid = id(l)
+        pending.discard(lid)
+        feeders = l._feeders
+        inf = _FAR
+        for f in feeders:
+            v = _eff(f) + (f._xfer_lb if f.fast else 0)
+            if v < inf:
+                inf = v
+        if inf > _FAR:
+            inf = _FAR
+        dec = inf < l._static_lb
+        if dec:
+            l._static_lb = inf
+        if dec or lid in forced:
+            forced.discard(lid)
+            is_mut = lid in mutated
+            for d in l._deps:
+                if is_mut and d._sole_feed is l:
+                    forced.add(id(d))
+                if id(d) not in pending:
+                    pending.add(id(d))
+                    work.append(d)

@@ -21,6 +21,7 @@ config=...)`` with a typed per-tier config.
 
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional
 
 from .backends import CollectiveResult, CoarseBackend, FineBackend
@@ -50,8 +51,14 @@ def simulate_collective(program: Program,
     """Run a collective program at Load-Store granularity end to end.
 
     ``rank_delay_ns`` injects per-rank kernel-launch skew (straggler study).
-    Equivalent to ``simulate(program, fidelity="fine", ...)``.
+    Deprecated: use ``simulate(program, fidelity="fine",
+    config=FineConfig(noc=..., gpu_config=..., topology=...), ...)``.
     """
+    warnings.warn(
+        "simulate_collective() is deprecated; use simulate(program, "
+        "fidelity='fine', config=FineConfig(noc=..., gpu_config=..., "
+        "topology=...), unroll=..., ...) from repro.core.backends",
+        DeprecationWarning, stacklevel=2)
     backend = FineBackend(noc=noc, gpu_config=gpu_config, topology=topology)
     return backend.run(program, cluster=cluster, unroll=unroll,
                        rank_delay_ns=rank_delay_ns, until_ns=until_ns)
@@ -71,8 +78,14 @@ def simulate_collective_coarse(program: Program,
                                until_ns: float = 5e10) -> CollectiveResult:
     """ASTRA-sim 2.0-fidelity simulation of the same program.
 
-    Equivalent to ``simulate(program, fidelity="coarse", ...)``.
+    Deprecated: use ``simulate(program, fidelity="coarse",
+    config=CoarseConfig(...), ...)``.
     """
+    warnings.warn(
+        "simulate_collective_coarse() is deprecated; use simulate(program, "
+        "fidelity='coarse', config=CoarseConfig(...), ...) from "
+        "repro.core.backends",
+        DeprecationWarning, stacklevel=2)
     backend = CoarseBackend(topo=topo, link_GBps=link_GBps,
                             link_lat_ns=link_lat_ns, local_GBps=local_GBps,
                             reduce_GBps=reduce_GBps)

@@ -32,6 +32,7 @@ BASELINE = os.path.join(RESULTS, "BENCH_engine.json")
 QUICK_BASELINE = os.path.join(RESULTS, "BENCH_engine_quick.json")
 TRACE_BASELINE = os.path.join(RESULTS, "BENCH_trace.json")
 SERVING_BASELINE = os.path.join(RESULTS, "BENCH_serving.json")
+SCALABILITY_BASELINE = os.path.join(RESULTS, "BENCH_scalability.json")
 
 
 @pytest.mark.slow
@@ -200,3 +201,45 @@ def test_serving_benchmark_matches_committed_baseline():
                     f"{name}/{fid} {key} drifted: {got[key]} != {ref[key]}"
             assert r.events <= ref["events"] * 1.02, \
                 f"{name}/{fid} events regressed: {r.events} vs {ref['events']}"
+
+
+@pytest.mark.slow
+def test_scalability_benchmark_matches_committed_baseline():
+    """The tracked 2-128-rank hierarchical sweep (ISSUE 9): rows up to 32
+    ranks are re-simulated and must reproduce the committed ``time_ns``
+    bit-for-bit with no event regression; every committed row must stay
+    FIFO-certified with O(n) lazy route registration; and the committed
+    sweep's events-vs-ranks growth must stay near-linear (the 64- and
+    128-rank points are gated through the committed numbers only — too
+    slow to re-run on every CI pass)."""
+    if not os.path.exists(SCALABILITY_BASELINE):
+        pytest.skip("no committed BENCH_scalability.json baseline")
+    with open(SCALABILITY_BASELINE) as f:
+        base = json.load(f)
+    assert base["workload"]["collective"] == "ring_all_gather"
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    try:
+        from fig14_scalability import bench_point
+    finally:
+        sys.path.pop(0)
+
+    rows = base["sweep"]
+    assert rows[-1]["ranks"] >= 128, "sweep must reach 128 ranks"
+    for ref in rows:
+        n = ref["ranks"]
+        assert ref["order_violations"] == 0
+        assert ref["pairs_registered"] <= 4 * n, \
+            f"route registration not sub-quadratic at {n} ranks: {ref}"
+        if n > 32:
+            continue
+        got = bench_point(ref["hosts"], ref["gpus_per_host"])
+        assert got["time_ns"] == ref["time_ns"], \
+            f"{n}-rank time drifted: {got['time_ns']} != {ref['time_ns']}"
+        assert got["order_violations"] == 0
+        assert got["events"] <= ref["events"] * 1.02, \
+            f"{n}-rank events regressed: {got['events']} vs {ref['events']}"
+    # near-linear growth: log-log slope of events vs ranks well below
+    # quadratic, and events-per-rank spread across the >=8-rank tail bounded
+    assert base["loglog_slope_events_vs_ranks"] <= 1.4, base
+    assert base["events_per_rank_spread_tail"] <= 2.0, base

@@ -267,3 +267,48 @@ def test_to_cluster_multi_gpu_host_runs_collective():
         assert r.time_ns > 0
         times.add(r.time_ns)
     assert len(times) == 1
+
+
+# ---------------------------------------------------------------------------
+# hierarchical multi-host blueprints (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+from repro.core.infragraph import hierarchical_fabric  # noqa: E402
+
+
+def test_hierarchical_fabric_leafspine_structure():
+    infra = hierarchical_fabric(hosts=4, gpus_per_host=4)
+    g = infra.expand()
+    assert len(g.nodes_of_kind("gpu")) == 16
+    names = set(g.nodes)
+    assert any(n.startswith("leaf.") for n in names)
+    assert any(n.startswith("spine.") for n in names)
+    # one scale-up bridge per host
+    assert sum(1 for n in names if ".bridge." in n) == 4
+
+
+def test_hierarchical_fabric_switch_and_single_host():
+    sw = hierarchical_fabric(hosts=2, gpus_per_host=2, scaleout="switch")
+    assert any(n.startswith("switch.") for n in sw.expand().nodes)
+    solo = hierarchical_fabric(hosts=1, gpus_per_host=4)
+    names = set(solo.expand().nodes)
+    assert not any("leaf" in n or "spine" in n or "switch" in n
+                   for n in names)
+    with pytest.raises(ValueError):
+        hierarchical_fabric(hosts=2, gpus_per_host=2, scaleout="mesh")
+
+
+def test_hierarchical_to_cluster_tiers():
+    """Per-tier link types survive translation: intra-host routes cross
+    the scale-up bridge, inter-host routes leave via NIC -> leaf/spine."""
+    from repro.core.cluster import NocConfig
+    infra = hierarchical_fabric(hosts=2, gpus_per_host=2)
+    cl = to_cluster(infra, noc=NocConfig(mesh_x=2, mesh_y=1,
+                                         cus_per_router=1, mem_channels=2,
+                                         io_ports=2))
+    assert len(cl.gpus) == 4
+    intra = cl.fabric.route(cl.gpus[0].io_nodes[0], cl.gpus[1].io_nodes[0])
+    assert any("bridge" in l.name for l in intra)
+    assert not any("leaf" in l.name or "spine" in l.name for l in intra)
+    inter = cl.fabric.route(cl.gpus[0].io_nodes[0], cl.gpus[2].io_nodes[0])
+    assert any("leaf" in l.name for l in inter)

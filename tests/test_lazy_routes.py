@@ -1,0 +1,205 @@
+"""Lazy per-pair route registration with census epochs (ISSUE 9 tentpole).
+
+The contract: ``NocConfig(route_policy="lazy")`` registers a (src, dst)
+GPU pair's routes only when a kernel first references the pair, yet the
+simulated schedule is *bit-exact* with the eager product loop — route
+keys are positional (derived from the pair and line residue, not from
+registration order), so the heap tie-break order is identical, and every
+registration commits a census epoch that re-arms the affected links'
+probe policy and refreshes their static transit floors.  The per-link
+FIFO monitor certifies every run (``order_violations == 0``).
+"""
+
+import pytest
+
+from repro.core import collectives as C
+from repro.core.backends import FineConfig, simulate
+from repro.core.cluster import Cluster, NocConfig
+from repro.core.infragraph.blueprints import (clos_fat_tree_fabric,
+                                              hierarchical_fabric,
+                                              torus2d_fabric)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SMALL = dict(mesh_x=2, mesh_y=2, cus_per_router=2, mem_channels=4,
+             io_ports=4)
+TINY = dict(mesh_x=2, mesh_y=1, cus_per_router=1, mem_channels=2,
+            io_ports=2)
+
+KiB = 1 << 10
+
+
+def _run(policy, prog_fn, nranks, topology="switch", ledger="on"):
+    cluster = Cluster(nranks, noc=NocConfig(route_policy=policy,
+                                            fabric_ledger=ledger, **SMALL),
+                      topology=topology)
+    r = simulate(prog_fn(), fidelity="fine", cluster=cluster, check="off")
+    return r, cluster
+
+
+def assert_parity(prog_fn, nranks, topology="switch", ledger="on"):
+    r_eager, c_eager = _run("eager", prog_fn, nranks, topology, ledger)
+    r_lazy, c_lazy = _run("lazy", prog_fn, nranks, topology, ledger)
+    assert r_lazy.time_ns == r_eager.time_ns, \
+        f"lazy registration changed the schedule ({topology}/{ledger})"
+    assert r_lazy.per_rank_done_ns == r_eager.per_rank_done_ns
+    assert c_eager.fabric.order_violations == 0
+    assert c_lazy.fabric.order_violations == 0
+    assert c_lazy.pairs_registered <= c_eager.pairs_registered
+    return c_eager, c_lazy
+
+
+# ---------------------------------------------------------------------------
+# parity: lazy == eager, built-in topologies x collectives x ledger modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology,prog_fn,ledger", [
+    ("switch", lambda: C.ring_all_reduce(4, 4 * KiB, 1, "put"), "on"),
+    ("switch", lambda: C.direct_all_gather(4, 4 * KiB, 2, "put"), "auto"),
+    ("ring", lambda: C.ring_all_gather(4, 4 * KiB, 1, "get"), "on"),
+    ("ring", lambda: C.direct_reduce_scatter(4, 4 * KiB, 1, "get"), "off"),
+])
+def test_lazy_parity_fast(topology, prog_fn, ledger):
+    assert_parity(prog_fn, 4, topology, ledger)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("topology", ["switch", "ring"])
+@pytest.mark.parametrize("ledger", ["on", "off", "auto"])
+@pytest.mark.parametrize("prog_fn", [
+    lambda: C.ring_all_reduce(4, 8 * KiB, 2, "put"),
+    lambda: C.direct_all_gather(4, 8 * KiB, 2, "put"),
+    lambda: C.direct_reduce_scatter(4, 8 * KiB, 1, "get"),
+    lambda: C.direct_all_to_all(4, 8 * KiB, 1, "put"),
+])
+def test_lazy_parity_full_matrix(topology, ledger, prog_fn):
+    assert_parity(prog_fn, 4, topology, ledger)
+
+
+# ---------------------------------------------------------------------------
+# parity on InfraGraph-built wirings (leaf-spine, torus, hierarchical)
+# ---------------------------------------------------------------------------
+
+def _infra_parity(infra_fn, prog_fn):
+    out = {}
+    for pol in ("eager", "lazy"):
+        r = simulate(prog_fn(), infra_fn(), fidelity="fine",
+                     config=FineConfig(noc=NocConfig(route_policy=pol,
+                                                     **TINY)), check="off")
+        out[pol] = (r.time_ns, tuple(r.per_rank_done_ns))
+    assert out["eager"] == out["lazy"]
+
+
+def test_lazy_parity_leaf_spine():
+    _infra_parity(lambda: clos_fat_tree_fabric(num_hosts=4, switch_ports=4),
+                  lambda: C.ring_all_gather(4, 4 * KiB, 1, "put"))
+
+
+def test_lazy_parity_torus():
+    _infra_parity(lambda: torus2d_fabric(2, 2),
+                  lambda: C.ring_all_reduce(4, 4 * KiB, 1, "put"))
+
+
+def test_lazy_parity_hierarchical():
+    _infra_parity(lambda: hierarchical_fabric(hosts=2, gpus_per_host=2),
+                  lambda: C.direct_all_gather(4, 4 * KiB, 1, "put"))
+
+
+# ---------------------------------------------------------------------------
+# lazy-registration regressions
+# ---------------------------------------------------------------------------
+
+def test_lazy_defers_registration_until_dispatch():
+    cluster = Cluster(4, noc=NocConfig(route_policy="lazy", **SMALL))
+    for g in cluster.gpus:
+        for cu in g.cus:
+            assert all(t is None for t in cu.reqtab), \
+                "lazy cluster must not pre-register any pair"
+    assert cluster.pairs_registered == 0
+    simulate(C.ring_all_gather(4, 4 * KiB, 1, "put"), fidelity="fine",
+             cluster=cluster, check="off")
+    assert cluster.pairs_registered > 0
+
+
+def test_lazy_registration_is_sparse_for_ring_workload():
+    """A ring program touches O(n) pairs (self + next); the lazy policy
+    must never fall back to the n^2 product."""
+    n = 8
+    cluster = Cluster(n, noc=NocConfig(route_policy="lazy", **SMALL))
+    simulate(C.ring_all_gather(n, 4 * KiB, 1, "put"), fidelity="fine",
+             cluster=cluster, check="off")
+    assert cluster.pairs_registered <= 4 * n
+    assert cluster.pairs_registered < n * n
+
+
+def test_eager_registers_full_product():
+    n = 4
+    cluster = Cluster(n, noc=NocConfig(route_policy="eager", **SMALL))
+    assert cluster.pairs_registered == n * n
+
+
+def test_census_epochs_never_retroactive_for_program_runs():
+    """Kernel-driven registration commits census epochs strictly before
+    the new pair's first flight — the retroactive-commit counter must
+    stay zero (a nonzero value means a census changed a link that already
+    carried traffic, the unsafe case the FIFO monitor guards)."""
+    cluster = Cluster(4, noc=NocConfig(route_policy="lazy", **SMALL))
+    simulate(C.direct_all_to_all(4, 4 * KiB, 1, "put"), fidelity="fine",
+             cluster=cluster, check="off")
+    assert cluster.fabric.ledger_counters()["census_retro"] == 0
+    assert cluster.fabric.order_violations == 0
+
+
+def test_route_policy_validated():
+    with pytest.raises(ValueError):
+        Cluster(2, noc=NocConfig(route_policy="bogus", **SMALL))
+
+
+def test_multipath_period_cap_raises():
+    """Pathological io/hbm port mixes can blow the lcm multipath period;
+    the cap must fail fast and name the config knob."""
+    noc = NocConfig(mesh_x=2, mesh_y=2, cus_per_router=2, mem_channels=3,
+                    io_ports=4, max_multipath_period=4)
+    with pytest.raises(ValueError, match="max_multipath_period"):
+        Cluster(4, noc=noc)
+
+
+def test_multipath_period_cap_allows_defaults():
+    cluster = Cluster(4, noc=NocConfig(**SMALL))
+    assert cluster._maxp <= NocConfig().max_multipath_period
+
+
+# ---------------------------------------------------------------------------
+# property: registration order can never change the schedule
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _REF_CACHE = {}
+
+    def _reference():
+        if "r" not in _REF_CACHE:
+            r, c = _run("eager", lambda: C.ring_all_reduce(4, 4 * KiB, 1,
+                                                           "put"), 4)
+            _REF_CACHE["r"] = (r.time_ns, tuple(r.per_rank_done_ns))
+        return _REF_CACHE["r"]
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 3)),
+                    max_size=12))
+    def test_interleaved_registration_is_timing_neutral(pairs):
+        """Pre-registering any subset of pairs in any order before the
+        program runs (the rest arrive lazily mid-run) must leave
+        ``time_ns`` bit-identical to the eager reference and keep the
+        FIFO monitor clean — route keys are positional, and census
+        epochs re-arm probe state on every commit."""
+        cluster = Cluster(4, noc=NocConfig(route_policy="lazy", **SMALL))
+        for s, d in pairs:
+            cluster._ensure_pair(s, d)
+        r = simulate(C.ring_all_reduce(4, 4 * KiB, 1, "put"),
+                     fidelity="fine", cluster=cluster, check="off")
+        assert (r.time_ns, tuple(r.per_rank_done_ns)) == _reference()
+        assert cluster.fabric.order_violations == 0
