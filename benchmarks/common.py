@@ -38,6 +38,23 @@ def medium_noc(arbitration: str = "fifo") -> NocConfig:
                      io_ports=8, arbitration=arbitration)
 
 
+def sweep_rows(spec, **kw) -> List[Dict]:
+    """Execute a benchmark's SweepSpec inline and return its rows.
+
+    Benchmarks measure *current* code, so the run is ``fresh`` (no cache
+    reads, JSONL restarted) — the stream still lands in
+    ``results/sweeps/<name>.jsonl`` for provenance.  Any failed point
+    fails the suite loudly.
+    """
+    from repro.sweep import run_sweep
+    out = os.path.join(RESULTS_DIR, "sweeps", f"{spec.name}.jsonl")
+    res = run_sweep(spec, jobs=0, fresh=True, progress=False, out=out, **kw)
+    bad = res.failed
+    assert not bad, (f"{spec.name}: {len(bad)} point(s) failed, first: "
+                     f"{bad[0].get('error', bad[0]['status'])}")
+    return res.rows
+
+
 class Report:
     """Collects rows; prints ``name,us_per_call,derived`` CSV lines and
     writes the full table to results/<name>.json."""

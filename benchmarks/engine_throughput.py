@@ -34,6 +34,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core import collectives as C                        # noqa: E402
 from repro.core.backends import simulate                       # noqa: E402
 from repro.core.cluster import Cluster, NocConfig              # noqa: E402
+from repro.sweep import (SweepSpec, payload,                   # noqa: E402
+                         register_suite, register_sweep, run_sweep)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -41,6 +43,22 @@ NRANKS = 8
 SIZE = 1 << 20          # 1 MiB
 NWG = 1
 PROTOCOL = "put"
+
+#: the scheduling-mode grid (name -> run_mode arguments); declared as
+#: explicit sweep points so the suite and main() drive the same spec
+MODE_POINTS = (
+    {"name": "classic", "mode": "classic", "bulk": "on", "ledger": "on"},
+    {"name": "exact", "mode": "exact", "bulk": "on", "ledger": "on"},
+    {"name": "coalesce", "mode": "coalesce", "bulk": "on", "ledger": "on"},
+    {"name": "coalesce_bulk_off", "mode": "coalesce", "bulk": "off",
+     "ledger": "on"},
+    {"name": "coalesce_ledger_off", "mode": "coalesce", "bulk": "on",
+     "ledger": "off"},
+    {"name": "coalesce_ledger_auto", "mode": "coalesce", "bulk": "on",
+     "ledger": "auto"},
+    {"name": "exact_ledger_off", "mode": "exact", "bulk": "on",
+     "ledger": "off"},
+)
 
 #: seed baseline on this workload (measured at the fast-path PR; the seed
 #: predates BENCH_engine.json, so its numbers are pinned here once)
@@ -88,33 +106,32 @@ def run_mode(mode: str, size: int, bulk: str = "on", ledger: str = "on"):
     }
 
 
-def profile_run(size: int) -> None:
-    """cProfile one default-mode simulation; print the top 25 by cumtime."""
-    import cProfile
-    import pstats
-
-    cluster = Cluster(NRANKS, noc=NocConfig())
-    wl = C.ring_all_reduce(NRANKS, size, NWG, PROTOCOL)
-    prof = cProfile.Profile()
-    prof.enable()
-    simulate(wl, fidelity="fine", cluster=cluster, check="off")
-    prof.disable()
-    pstats.Stats(prof).sort_stats("cumulative").print_stats(25)
-    print(json.dumps(cluster.fabric.ledger_counters(), indent=1))
+def _run_point(coords: dict, tier: str) -> dict:
+    return run_mode(coords["mode"], coords["size"], bulk=coords["bulk"],
+                    ledger=coords["ledger"])
 
 
-def main() -> None:
-    size = SIZE if "--quick" not in sys.argv else SIZE // 8
-    if "--profile" in sys.argv:
-        profile_run(size)
-        return
-    rows = {m: run_mode(m, size) for m in ("classic", "exact", "coalesce")}
-    rows["coalesce_bulk_off"] = run_mode("coalesce", size, bulk="off")
-    rows["coalesce_ledger_off"] = run_mode("coalesce", size, ledger="off")
-    rows["coalesce_ledger_auto"] = run_mode("coalesce", size, ledger="auto")
-    rows["exact_ledger_off"] = run_mode("exact", size, ledger="off")
+SWEEP = register_sweep(SweepSpec(
+    name="engine_throughput",
+    points=[dict(p, size=SIZE) for p in MODE_POINTS],
+    run_point=_run_point,
+))
 
-    # ---- correctness gates ------------------------------------------------
+
+def measure(size: int, jobs: int = 0) -> dict:
+    """All mode rows at ``size``, via the sweep runner (inline by default
+    so wall-clock numbers are unperturbed by process scheduling)."""
+    pts = [dict(p, size=size) for p in MODE_POINTS]
+    res = run_sweep(SWEEP, jobs=jobs, fresh=True, progress=False,
+                    out=os.path.join(RESULTS, "sweeps",
+                                     "engine_throughput.jsonl"),
+                    points=pts)
+    assert not res.failed, res.failed[0]
+    return {r["point"]["name"]: payload(r) for r in res.rows}
+
+
+def check_rows(rows: dict) -> None:
+    """Cross-mode correctness gates (bit-exactness + FIFO certification)."""
     exact, coal, classic = rows["exact"], rows["coalesce"], rows["classic"]
     nobulk = rows["coalesce_bulk_off"]
     noled, noled_ex = rows["coalesce_ledger_off"], rows["exact_ledger_off"]
@@ -141,6 +158,56 @@ def main() -> None:
     assert auto["order_violations"] == 0
     assert coal["events"] < noled["events"], \
         "ledger chaining must strictly reduce heap events"
+
+
+@register_suite("engine_throughput")
+def suite() -> dict:
+    """Quick-size engine run for the benchmark driver: same modes, same
+    gates, 1/8th buffer; writes an *untracked* report so the committed
+    BENCH_engine baselines stay pristine."""
+    rows = measure(SIZE // 8)
+    check_rows(rows)
+    out = {
+        "workload": {"collective": "ring_all_reduce", "nranks": NRANKS,
+                     "size_bytes": SIZE // 8, "nworkgroups": NWG,
+                     "protocol": PROTOCOL, "noc": "default"},
+        "modes": {m: {k: v for k, v in row.items()
+                      if k != "per_rank_done_ns"}
+                  for m, row in rows.items()},
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "engine_throughput_suite.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    coal = rows["coalesce"]
+    print(f"engine_throughput,{coal['wall_s'] * 1e6:.0f},"
+          f"events={coal['events']}")
+    return out
+
+
+def profile_run(size: int) -> None:
+    """cProfile one default-mode simulation; print the top 25 by cumtime."""
+    import cProfile
+    import pstats
+
+    cluster = Cluster(NRANKS, noc=NocConfig())
+    wl = C.ring_all_reduce(NRANKS, size, NWG, PROTOCOL)
+    prof = cProfile.Profile()
+    prof.enable()
+    simulate(wl, fidelity="fine", cluster=cluster, check="off")
+    prof.disable()
+    pstats.Stats(prof).sort_stats("cumulative").print_stats(25)
+    print(json.dumps(cluster.fabric.ledger_counters(), indent=1))
+
+
+def main() -> None:
+    size = SIZE if "--quick" not in sys.argv else SIZE // 8
+    if "--profile" in sys.argv:
+        profile_run(size)
+        return
+    rows = measure(size)
+    check_rows(rows)
+    classic, coal = rows["classic"], rows["coalesce"]
 
     out = {
         "workload": {"collective": "ring_all_reduce", "nranks": NRANKS,

@@ -2,39 +2,70 @@
 simulated at ASTRA-sim 2.0 granularity (chunk alpha-beta) vs 3.0
 granularity (Load-Store + NoC + CU contention).  The gap IS the paper's
 motivation (control path, contention, per-line latency are invisible to
-the coarse model)."""
+the coarse model).
+
+Declared as a multi-tier SweepSpec: one ``program`` axis, run at both the
+fine and coarse tiers by the sweep runner; ``run()`` pairs the rows up to
+compute the per-program fidelity gap."""
 
 from __future__ import annotations
 
-from repro.core.backends import FineConfig, simulate
+from repro.core.backends import FineConfig
 from repro.core.collectives import (direct_all_gather,
                                     direct_reduce_scatter, ring_all_reduce)
+from repro.sweep import PointSpec, SweepSpec, register_suite, register_sweep
 
-from .common import Report, fast_gpu, small_noc
+from .common import Report, fast_gpu, small_noc, sweep_rows
 
 KiB = 1 << 10
 
+NRANKS = 8
+SIZE = 64 * KiB
 
-def run(nranks: int = 8, size: int = 64 * KiB) -> str:
+PROGRAMS = ("ring_all_reduce", "direct_rs_get", "direct_ag_put")
+
+
+def _program(name: str):
+    if name == "ring_all_reduce":
+        return ring_all_reduce(NRANKS, SIZE, 2, "put")
+    if name == "direct_rs_get":
+        return direct_reduce_scatter(NRANKS, SIZE, 2, "get")
+    if name == "direct_ag_put":
+        return direct_all_gather(NRANKS, SIZE, 2, "put")
+    raise ValueError(f"unknown program {name!r}")
+
+
+def _build(coords: dict, tier: str) -> PointSpec:
+    prog = _program(coords["program"])
+    if tier == "fine":
+        return PointSpec(workload=prog,
+                         config=FineConfig(noc=small_noc(),
+                                           gpu_config=fast_gpu()),
+                         run_kw={"unroll": 8})
+    return PointSpec(workload=prog)
+
+
+SWEEP = register_sweep(SweepSpec(
+    name="fidelity_compare",
+    axes={"program": PROGRAMS},
+    build=_build,
+    tiers=("fine", "coarse"),
+))
+
+
+@register_suite("fidelity_compare")
+def run() -> str:
     rep = Report("fidelity_compare")
+    rows = {(r["point"]["program"], r["tier"]): r for r in sweep_rows(SWEEP)}
     gaps = {}
-    for name, prog_fn in [
-        ("ring_all_reduce", lambda: ring_all_reduce(nranks, size, 2, "put")),
-        ("direct_rs_get", lambda: direct_reduce_scatter(nranks, size, 2,
-                                                        "get")),
-        ("direct_ag_put", lambda: direct_all_gather(nranks, size, 2, "put")),
-    ]:
-        fine = simulate(prog_fn(), fidelity="fine",
-                        config=FineConfig(noc=small_noc(),
-                                          gpu_config=fast_gpu()),
-                        unroll=8, check="off")
-        coarse = simulate(prog_fn(), fidelity="coarse", check="off")
-        gap = fine.time_ns / coarse.time_ns
+    for name in PROGRAMS:
+        fine, coarse = rows[(name, "fine")], rows[(name, "coarse")]
+        gap = fine["time_ns"] / coarse["time_ns"]
         gaps[name] = gap
-        rep.add(program=name, fine_us=round(fine.time_ns / 1e3, 1),
-                coarse_us=round(coarse.time_ns / 1e3, 1),
+        rep.add(program=name, fine_us=round(fine["time_ns"] / 1e3, 1),
+                coarse_us=round(coarse["time_ns"] / 1e3, 1),
                 fidelity_gap=round(gap, 2),
-                fine_events=fine.events, coarse_events=coarse.events)
+                fine_events=fine["events"], coarse_events=coarse["events"])
     derived = ";".join(f"{k}={v:.2f}x" for k, v in gaps.items())
     rep.finish(derived)
     return derived

@@ -3,32 +3,56 @@
 Paper: 32 GPUs, 32 workgroups, buffers to 256 MiB.  Scaled: 8 GPUs x 8 CUs,
 4 workgroups, 16-512 KiB buffers.  Expected reproduction: get overtakes put
 as buffers grow (fused load-reduce overlaps transfer with reduction;
-put pays semaphore synchronization before every reduce)."""
+put pays semaphore synchronization before every reduce).
+
+Declared as a :class:`repro.sweep.SweepSpec` (buffer size x protocol) and
+executed through the sweep runner; ``run()`` folds the JSONL rows back
+into the legacy per-size report table."""
 
 from __future__ import annotations
 
-from repro.core.backends import FineConfig, simulate
+from repro.core.backends import FineConfig
 from repro.core.collectives import direct_reduce_scatter
+from repro.sweep import PointSpec, SweepSpec, register_suite, register_sweep
 
-from .common import Report, fast_gpu, small_noc
+from .common import Report, fast_gpu, small_noc, sweep_rows
 
 KiB = 1 << 10
 
+NRANKS = 8
+NWG = 4
+SIZES_KIB = (16, 64, 256)
 
-def run(nranks: int = 8, nwg: int = 4, sizes=(16 * KiB, 64 * KiB,
-                                              256 * KiB)) -> str:
+
+def _build(coords: dict, tier: str) -> PointSpec:
+    prog = direct_reduce_scatter(NRANKS, coords["buffer_KiB"] * KiB, NWG,
+                                 coords["protocol"])
+    return PointSpec(workload=prog,
+                     config=FineConfig(noc=small_noc(),
+                                       gpu_config=fast_gpu()),
+                     run_kw={"unroll": 4},
+                     metrics=lambda r: {"bus_GBps": r.bus_GBps})
+
+
+SWEEP = register_sweep(SweepSpec(
+    name="fig10_reduce_scatter",
+    axes={"buffer_KiB": SIZES_KIB, "protocol": ("put", "get")},
+    build=_build,
+))
+
+
+@register_suite("fig10_reduce_scatter")
+def run() -> str:
     rep = Report("fig10_reduce_scatter")
+    rows = {(r["point"]["buffer_KiB"], r["point"]["protocol"]): r
+            for r in sweep_rows(SWEEP)}
     wins = []
-    for size in sizes:
-        row = {"buffer_KiB": size // KiB}
+    for size_kib in SIZES_KIB:
+        row = {"buffer_KiB": size_kib}
         for proto in ("put", "get"):
-            prog = direct_reduce_scatter(nranks, size, nwg, proto)
-            r = simulate(prog, fidelity="fine",
-                         config=FineConfig(noc=small_noc(),
-                                           gpu_config=fast_gpu()),
-                         unroll=4, check="off")
-            row[f"bw_{proto}_GBps"] = round(r.bus_GBps, 3)
-            row[f"t_{proto}_us"] = round(r.time_ns / 1e3, 1)
+            r = rows[(size_kib, proto)]
+            row[f"bw_{proto}_GBps"] = round(r["bus_GBps"], 3)
+            row[f"t_{proto}_us"] = round(r["time_ns"] / 1e3, 1)
         row["get_speedup"] = round(row["t_put_us"] / row["t_get_us"], 3)
         wins.append(row["get_speedup"])
         rep.add(**row)

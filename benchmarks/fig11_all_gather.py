@@ -3,33 +3,57 @@ arbitration between control and data messages.
 
 Paper insight: AG has no reduction, so get loses its overlap advantage;
 worse, get's control requests get stuck behind data responses under FIFO
-links.  Fair arbitration narrows the gap."""
+links.  Fair arbitration narrows the gap.
+
+Declared as a 3-axis SweepSpec (shard size x protocol x arbitration) and
+executed through the sweep runner."""
 
 from __future__ import annotations
 
-from repro.core.backends import FineConfig, simulate
+from repro.core.backends import FineConfig
 from repro.core.collectives import direct_all_gather
+from repro.sweep import PointSpec, SweepSpec, register_suite, register_sweep
 
-from .common import Report, fast_gpu, small_noc
+from .common import Report, fast_gpu, small_noc, sweep_rows
 
 KiB = 1 << 10
 
+NRANKS = 8
+NWG = 4
+SIZES_KIB = (32, 128, 256)
 
-def run(nranks: int = 8, nwg: int = 4,
-        sizes=(32 * KiB, 128 * KiB, 256 * KiB)) -> str:
+
+def _build(coords: dict, tier: str) -> PointSpec:
+    prog = direct_all_gather(NRANKS, coords["shard_KiB"] * KiB, NWG,
+                             coords["protocol"])
+    gc = fast_gpu(max_outstanding=128, unroll=16)
+    return PointSpec(workload=prog,
+                     config=FineConfig(noc=small_noc(coords["arbitration"]),
+                                       gpu_config=gc),
+                     run_kw={"unroll": 16},
+                     metrics=lambda r: {"bus_GBps": r.bus_GBps})
+
+
+SWEEP = register_sweep(SweepSpec(
+    name="fig11_all_gather",
+    axes={"shard_KiB": SIZES_KIB, "protocol": ("put", "get"),
+          "arbitration": ("fifo", "fair")},
+    build=_build,
+))
+
+
+@register_suite("fig11_all_gather")
+def run() -> str:
     rep = Report("fig11_all_gather")
+    rows = {(r["point"]["shard_KiB"], r["point"]["protocol"],
+             r["point"]["arbitration"]): r for r in sweep_rows(SWEEP)}
     last = {}
-    for size in sizes:
-        row = {"shard_KiB": size // KiB}
+    for size_kib in SIZES_KIB:
+        row = {"shard_KiB": size_kib}
         for proto in ("put", "get"):
             for arb in ("fifo", "fair"):
-                prog = direct_all_gather(nranks, size, nwg, proto)
-                gc = fast_gpu(max_outstanding=128, unroll=16)
-                r = simulate(prog, fidelity="fine",
-                             config=FineConfig(noc=small_noc(arb),
-                                               gpu_config=gc),
-                             unroll=16, check="off")
-                row[f"bw_{proto}_{arb}_GBps"] = round(r.bus_GBps, 3)
+                r = rows[(size_kib, proto, arb)]
+                row[f"bw_{proto}_{arb}_GBps"] = round(r["bus_GBps"], 3)
         rep.add(**row)
         last = row
     put_over_get = last["bw_put_fifo_GBps"] / last["bw_get_fifo_GBps"]

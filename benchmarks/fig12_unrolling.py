@@ -1,35 +1,55 @@
 """Paper Fig. 12: All-to-All bandwidth vs loop-unrolling factor
 (intra-wavefront ILP).  Expected: more in-flight Wavefront Requests help
 bandwidth-bound sizes, with saturation; no effect on tiny latency-bound
-transfers."""
+transfers.
+
+Declared as a SweepSpec (shard size x unroll factor) and executed through
+the sweep runner."""
 
 from __future__ import annotations
 
-from repro.core.backends import FineConfig, simulate
+from repro.core.backends import FineConfig
 from repro.core.collectives import direct_all_to_all
+from repro.sweep import PointSpec, SweepSpec, register_suite, register_sweep
 
-from .common import Report, fast_gpu, small_noc
+from .common import Report, fast_gpu, small_noc, sweep_rows
 
 KiB = 1 << 10
 
+NRANKS = 8
+NWG = 4
+SIZES_KIB = (4, 64)
+UNROLLS = (1, 2, 4, 8, 16)
 
-def run(nranks: int = 8, nwg: int = 4,
-        sizes=(4 * KiB, 64 * KiB), unrolls=(1, 2, 4, 8, 16)) -> str:
+
+def _build(coords: dict, tier: str) -> PointSpec:
+    prog = direct_all_to_all(NRANKS, coords["shard_KiB"] * KiB, NWG, "put")
+    return PointSpec(workload=prog,
+                     config=FineConfig(noc=small_noc(),
+                                       gpu_config=fast_gpu()),
+                     run_kw={"unroll": coords["unroll"]},
+                     metrics=lambda r: {"bus_GBps": r.bus_GBps})
+
+
+SWEEP = register_sweep(SweepSpec(
+    name="fig12_unrolling",
+    axes={"shard_KiB": SIZES_KIB, "unroll": UNROLLS},
+    build=_build,
+))
+
+
+@register_suite("fig12_unrolling")
+def run() -> str:
     rep = Report("fig12_unrolling")
     series = {}
-    for size in sizes:
-        for u in unrolls:
-            prog = direct_all_to_all(nranks, size, nwg, "put")
-            r = simulate(prog, fidelity="fine",
-                         config=FineConfig(noc=small_noc(),
-                                           gpu_config=fast_gpu()),
-                         unroll=u, check="off")
-            rep.add(shard_KiB=size // KiB, unroll=u,
-                    bw_GBps=round(r.bus_GBps, 3),
-                    t_us=round(r.time_ns / 1e3, 1))
-            series.setdefault(size, []).append(r.time_ns)
-    big = series[sizes[-1]]
-    small = series[sizes[0]]
+    for r in sweep_rows(SWEEP):
+        size_kib, u = r["point"]["shard_KiB"], r["point"]["unroll"]
+        rep.add(shard_KiB=size_kib, unroll=u,
+                bw_GBps=round(r["bus_GBps"], 3),
+                t_us=round(r["time_ns"] / 1e3, 1))
+        series.setdefault(size_kib, []).append(r["time_ns"])
+    big = series[SIZES_KIB[-1]]
+    small = series[SIZES_KIB[0]]
     derived = (f"large_xfer_speedup_u16={big[0] / big[-1]:.2f}x;"
                f"small_xfer_speedup_u16={small[0] / small[-1]:.2f}x")
     rep.finish(derived)

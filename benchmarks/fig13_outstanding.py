@@ -1,34 +1,54 @@
 """Paper Fig. 13: All-Gather bandwidth vs max outstanding Wavefront
 Requests per CU (register-file-size proxy).  Expected: saturating gain for
-bandwidth-bound sizes, no effect for latency-bound ones."""
+bandwidth-bound sizes, no effect for latency-bound ones.
+
+Declared as a SweepSpec (shard size x outstanding limit) and executed
+through the sweep runner."""
 
 from __future__ import annotations
 
-from repro.core.backends import FineConfig, simulate
+from repro.core.backends import FineConfig
 from repro.core.collectives import direct_all_gather
 from repro.core.gpu_model import GpuConfig
+from repro.sweep import PointSpec, SweepSpec, register_suite, register_sweep
 
-from .common import Report, small_noc
+from .common import Report, small_noc, sweep_rows
 
 KiB = 1 << 10
 
+NRANKS = 8
+NWG = 4
+SIZES_KIB = (4, 64)
+LIMITS = (2, 4, 8, 16, 32, 64)
 
-def run(nranks: int = 8, nwg: int = 4,
-        sizes=(4 * KiB, 64 * KiB), limits=(2, 4, 8, 16, 32, 64)) -> str:
+
+def _build(coords: dict, tier: str) -> PointSpec:
+    prog = direct_all_gather(NRANKS, coords["shard_KiB"] * KiB, NWG, "put")
+    gc = GpuConfig(max_outstanding=coords["max_outstanding"], unroll=8,
+                   cache_line=512)
+    return PointSpec(workload=prog,
+                     config=FineConfig(noc=small_noc(), gpu_config=gc),
+                     run_kw={"unroll": 8},
+                     metrics=lambda r: {"bus_GBps": r.bus_GBps})
+
+
+SWEEP = register_sweep(SweepSpec(
+    name="fig13_outstanding",
+    axes={"shard_KiB": SIZES_KIB, "max_outstanding": LIMITS},
+    build=_build,
+))
+
+
+@register_suite("fig13_outstanding")
+def run() -> str:
     rep = Report("fig13_outstanding")
     series = {}
-    for size in sizes:
-        for lim in limits:
-            prog = direct_all_gather(nranks, size, nwg, "put")
-            gc = GpuConfig(max_outstanding=lim, unroll=8,
-                           cache_line=512)
-            r = simulate(prog, fidelity="fine",
-                         config=FineConfig(noc=small_noc(), gpu_config=gc),
-                         unroll=8, check="off")
-            rep.add(shard_KiB=size // KiB, max_outstanding=lim,
-                    bw_GBps=round(r.bus_GBps, 3))
-            series.setdefault(size, []).append(r.time_ns)
-    big = series[sizes[-1]]
+    for r in sweep_rows(SWEEP):
+        size_kib, lim = r["point"]["shard_KiB"], r["point"]["max_outstanding"]
+        rep.add(shard_KiB=size_kib, max_outstanding=lim,
+                bw_GBps=round(r["bus_GBps"], 3))
+        series.setdefault(size_kib, []).append(r["time_ns"])
+    big = series[SIZES_KIB[-1]]
     saturation = big[-1] / big[-2] if len(big) > 1 else 1.0
     derived = (f"large_speedup_64v2={big[0] / big[-1]:.2f}x;"
                f"saturation_tail={saturation:.3f}")

@@ -35,10 +35,15 @@ from repro.core.cluster import NocConfig                       # noqa: E402
 from repro.core.infragraph import (hierarchical_fabric,        # noqa: E402
                                    to_cluster)
 
+from repro.sweep import (PointSpec, SweepSpec,                 # noqa: E402
+                         register_suite, register_sweep)
+
 try:
-    from .common import Report, fast_gpu, small_noc            # noqa: E402
+    from .common import (Report, fast_gpu, small_noc,          # noqa: E402
+                         sweep_rows)
 except ImportError:                                            # script mode
-    from common import Report, fast_gpu, small_noc             # noqa: E402
+    from common import (Report, fast_gpu, small_noc,           # noqa: E402
+                        sweep_rows)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -51,25 +56,42 @@ TOTAL = 128 * KiB
 BENCH_POINTS = ((1, 2), (1, 4), (2, 4), (4, 4), (8, 4), (16, 4), (32, 4))
 
 
-def run(sizes=(16 * KiB, 64 * KiB), ranks=(2, 4, 8, 16)) -> str:
+FIG_RANKS = (2, 4, 8, 16)
+FIG_SIZES_KIB = (16, 64)
+
+
+def _build_fig(coords: dict, tier: str) -> PointSpec:
+    prog = C.direct_all_gather(coords["gpus"], coords["shard_KiB"] * KiB,
+                               2, "put")
+    return PointSpec(workload=prog,
+                     config=FineConfig(noc=small_noc(),
+                                       gpu_config=fast_gpu()),
+                     run_kw={"unroll": 8})
+
+
+SWEEP = register_sweep(SweepSpec(
+    name="fig14_scalability",
+    axes={"gpus": FIG_RANKS, "shard_KiB": FIG_SIZES_KIB},
+    build=_build_fig,
+))
+
+
+@register_suite("fig14_scalability")
+def run() -> str:
     rep = Report("fig14_scalability")
     rows = []
-    for n in ranks:
-        for size in sizes:
-            prog = C.direct_all_gather(n, size, 2, "put")
-            r = simulate(prog, fidelity="fine",
-                         config=FineConfig(noc=small_noc(),
-                                           gpu_config=fast_gpu()),
-                         unroll=8, check="off")
-            thr = r.time_ns / max(r.wallclock_s, 1e-9)
-            rows.append((n, size, r.events, r.wallclock_s, thr))
-            rep.add(gpus=n, shard_KiB=size // KiB, events=r.events,
-                    wallclock_s=round(r.wallclock_s, 3),
-                    sim_ns_per_wall_s=round(thr, 0),
-                    events_per_s=round(r.events / max(r.wallclock_s, 1e-9)))
+    for r in sweep_rows(SWEEP):
+        n, size_kib = r["point"]["gpus"], r["point"]["shard_KiB"]
+        wall = max(r["sim_wallclock_s"], 1e-9)
+        thr = r["time_ns"] / wall
+        rows.append((n, size_kib, r["events"], wall, thr))
+        rep.add(gpus=n, shard_KiB=size_kib, events=r["events"],
+                wallclock_s=round(wall, 3),
+                sim_ns_per_wall_s=round(thr, 0),
+                events_per_s=round(r["events"] / wall))
     # paper insight: wall time ~ linear in buffer size; throughput set by
     # target scale, not buffer size
-    n_big = [r for r in rows if r[0] == ranks[-1]]
+    n_big = [r for r in rows if r[0] == FIG_RANKS[-1]]
     lin = n_big[-1][3] / max(n_big[0][3], 1e-9)
     derived = (f"walltime_ratio_4x_buffer={lin:.2f}x;"
                f"events_per_s={n_big[-1][2] / max(n_big[-1][3], 1e-9):.0f}")

@@ -5,12 +5,14 @@ choice."""
 from __future__ import annotations
 
 from repro.core.protocols import ProtocolModel
+from repro.sweep import register_suite
 
 from .common import Report
 
 GiB = 1 << 30
 
 
+@register_suite("fig4_protocols")
 def run() -> str:
     rep = Report("fig4_protocols")
     sizes = [1 << s for s in range(10, 26)]     # 1 KiB .. 32 MiB

@@ -5,7 +5,10 @@ ratio, and a one-line 'what would move the dominant term' note."""
 from __future__ import annotations
 
 import json
+import os
 from typing import Dict, List
+
+from repro.sweep import register_suite
 
 from .common import Report
 
@@ -32,7 +35,11 @@ def load(path: str) -> List[Dict]:
         return json.load(f)
 
 
+@register_suite("roofline_table")
 def run(single="results/dryrun_single_pod.json") -> str:
+    if not os.path.exists(single):
+        print("roofline_table,0,skipped(no dryrun results)")
+        return "skipped"
     rows = load(single)
     rep = Report("roofline_table")
     n_ok = 0

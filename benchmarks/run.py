@@ -1,4 +1,10 @@
-"""Benchmark suite entry point — one module per paper table/figure.
+"""Benchmark suite entry point.
+
+Suites are *auto-discovered* from the sweep registry
+(:mod:`repro.sweep.registry`): every benchmark module registers its
+runnable with ``@register_suite`` as an import side effect, and this
+driver runs whatever is registered — so a new benchmark shows up here the
+moment it registers, instead of drifting out of a hand-maintained list.
 
 Prints ``name,us_per_call,derived`` CSV lines (one per benchmark) and
 writes full tables to results/<name>.json.
@@ -10,27 +16,22 @@ import sys
 import traceback
 
 
-def main() -> None:
-    from . import (fidelity_compare, fig4_protocols, fig10_reduce_scatter,
-                   fig11_all_gather, fig12_unrolling, fig13_outstanding,
-                   fig14_scalability, roofline_table, step_prediction,
-                   table1_clos_allreduce)
-    suites = [
-        ("fig4_protocols", fig4_protocols.run),
-        ("fig10_reduce_scatter", fig10_reduce_scatter.run),
-        ("fig11_all_gather", fig11_all_gather.run),
-        ("fig12_unrolling", fig12_unrolling.run),
-        ("fig13_outstanding", fig13_outstanding.run),
-        ("fig14_scalability", fig14_scalability.run),
-        ("table1_clos_allreduce", table1_clos_allreduce.run),
-        ("fidelity_compare", fidelity_compare.run),
-        ("roofline_table", roofline_table.run),
-        ("step_prediction", step_prediction.run),
-    ]
+def main(names=None) -> None:
+    from repro.sweep import registry
+    registry.discover()
+    suites = registry.SUITES
+    if names:
+        unknown = sorted(set(names) - set(suites))
+        if unknown:
+            sys.exit(f"unknown suite(s) {unknown}; "
+                     f"available: {sorted(suites)}")
+        selected = names
+    else:
+        selected = sorted(suites)
     failures = 0
-    for name, fn in suites:
+    for name in selected:
         try:
-            fn()
+            suites[name]()
         except Exception:  # noqa: BLE001 — keep the suite running
             failures += 1
             print(f"{name},0,ERROR")
@@ -40,4 +41,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -29,6 +29,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.serve import (PoissonArrivals, ServingModel,   # noqa: E402
                          continuous_batching, disaggregated,
                          generate_requests)
+from repro.sweep import (SweepSpec, payload,              # noqa: E402
+                         register_suite, register_sweep, run_sweep)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -77,6 +79,48 @@ def run_scenario(scen) -> dict:
             "goodput_rps": s.goodput_rps,
         }
     return rows
+
+
+def _run_point(coords: dict, tier: str) -> dict:
+    scen = build_scenarios()[coords["scenario"]]
+    r = scen.simulate(fidelity=tier, check="off")
+    s = r.latency
+    return {"time_ns": r.time_ns, "events": r.events,
+            "p50_ns": s.p50_ns, "p99_ns": s.p99_ns, "p999_ns": s.p999_ns,
+            "mean_ns": s.mean_ns, "max_ns": s.max_ns,
+            "goodput_rps": s.goodput_rps}
+
+
+SWEEP = register_sweep(SweepSpec(
+    name="serving_tail_latency",
+    axes={"scenario": ("continuous_batching", "disaggregated")},
+    run_point=_run_point,
+    tiers=TIERS,
+))
+
+
+@register_suite("serving_tail_latency")
+def suite() -> dict:
+    """Driver-facing run: scenario x tier through the sweep runner; writes
+    an *untracked* report so the committed BENCH_serving baseline stays
+    pristine."""
+    res = run_sweep(SWEEP, jobs=0, fresh=True, progress=False,
+                    out=os.path.join(RESULTS, "sweeps",
+                                     "serving_tail_latency.jsonl"))
+    assert not res.failed, res.failed[0]
+    out: dict = {"scenarios": {}}
+    for r in res.rows:
+        scen = r["point"]["scenario"]
+        out["scenarios"].setdefault(scen, {})[r["tier"]] = payload(r)
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "serving_tail_latency_suite.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    p99s = {n: tiers["fine"]["p99_ns"]
+            for n, tiers in out["scenarios"].items()}
+    print("serving_tail_latency,0," + ";".join(
+        f"{n}_p99_us={v / 1e3:.1f}" for n, v in sorted(p99s.items())))
+    return out
 
 
 def main() -> None:

@@ -9,6 +9,7 @@ import json
 import os
 
 from repro.analysis.predict import predict_cell, simulate_cell_fine
+from repro.sweep import register_suite
 
 from .common import Report
 
@@ -16,6 +17,7 @@ FINE_CELLS = [("llama3-8b", "train_4k"), ("grok-1-314b", "train_4k"),
               ("llama3-8b", "decode_32k")]
 
 
+@register_suite("step_prediction")
 def run(path="results/dryrun_single_pod.json") -> str:
     if not os.path.exists(path):
         print("step_prediction,0,skipped(no dryrun results)")

@@ -13,6 +13,7 @@ from typing import List
 from repro.core.engine import Engine
 from repro.core.infragraph import clos_fat_tree_fabric, to_fabric
 from repro.core.network.fabric import DATA
+from repro.sweep import register_suite
 
 from .common import Report
 
@@ -38,6 +39,7 @@ class _FlowTracker:
         self.fabric.send(route, size, DATA, arrived)
 
 
+@register_suite("table1_clos_allreduce")
 def run(num_gpus: int = 8, size_bytes: int = 1 * MB) -> str:
     infra = clos_fat_tree_fabric(num_hosts=num_gpus, switch_ports=4,
                                  link_GBps=50.0, link_lat_ns=500.0)

@@ -29,6 +29,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.backends import FineConfig, simulate          # noqa: E402
 from repro.core.chakra import ExecutionTrace                  # noqa: E402
+from repro.sweep import (SweepSpec, payload,                  # noqa: E402
+                         register_suite, register_sweep, run_sweep)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -90,6 +92,43 @@ def run_tier(fidelity: str) -> dict:
         "events_per_s": round(r.events / wall) if wall > 0 else None,
         "sim_ns_per_wall_s": round(r.time_ns / wall) if wall > 0 else None,
     }
+
+
+def _run_point(coords: dict, tier: str) -> dict:
+    return run_tier(tier)
+
+
+SWEEP = register_sweep(SweepSpec(
+    name="trace_throughput",
+    points=[{}],
+    run_point=_run_point,
+    tiers=("analytic", "coarse", "fine"),
+))
+
+
+@register_suite("trace_throughput")
+def suite() -> dict:
+    """Driver-facing run: same tiers and gates via the sweep runner;
+    writes an *untracked* report so the committed BENCH_trace baseline
+    stays pristine."""
+    res = run_sweep(SWEEP, jobs=0, fresh=True, progress=False,
+                    out=os.path.join(RESULTS, "sweeps",
+                                     "trace_throughput.jsonl"))
+    assert not res.failed, res.failed[0]
+    rows = {r["tier"]: payload(r) for r in res.rows}
+    assert rows["analytic"]["events"] <= rows["coarse"]["events"] \
+        < rows["fine"]["events"], "fidelity must buy event detail"
+    out = {"tiers": {fid: {k: v for k, v in row.items()
+                           if k != "per_rank_done_ns"}
+                     for fid, row in rows.items()}}
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "trace_throughput_suite.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    fine = rows["fine"]
+    print(f"trace_throughput,{fine['wall_s'] * 1e6:.0f},"
+          f"events={fine['events']}")
+    return out
 
 
 def main() -> None:

@@ -101,6 +101,44 @@ for fidelity in ("analytic", "coarse"):
           f"p50 {lat.p50_ns/1e3:7.1f} us, p99 {lat.p99_ns/1e3:7.1f} us, "
           f"goodput {lat.goodput_rps:7.1f} req/s")
 
+# --- running a DSE sweep ----------------------------------------------------
+# Design-space exploration at scale: declare a typed grid once and the
+# sweep harness expands it, shards points across worker processes
+# (``jobs=N``; a crashed or hung worker fails one point, never the run),
+# caches every result under a canonical content hash (rerunning recomputes
+# only changed points), and tier-escalates — the cheap analytic tier
+# prefilters the full grid, the expensive tier runs only on the frontier.
+from repro.sweep import (Escalation, PointSpec, SweepSpec, register_sweep,
+                         run_sweep)
+
+
+def _dse_build(coords, tier):
+    prog = ring_all_gather(nranks=4, shard_bytes=coords["shard_KiB"] * 1024,
+                           nworkgroups=1, protocol=coords["protocol"])
+    return PointSpec(workload=prog,
+                     infra=single_tier_fabric(4,
+                                              link_GBps=coords["link_GBps"]))
+
+
+dse = register_sweep(SweepSpec(
+    name="quickstart_dse",
+    axes={"protocol": ("put", "get"),
+          "shard_KiB": (4, 16),
+          "link_GBps": (50.0, 200.0)},
+    build=_dse_build,
+    escalate=Escalation(prefilter="analytic", final="coarse", mode="top_k",
+                        k=2, objectives=("min:time_ns",)),
+))
+res = run_sweep(dse, jobs=0, fresh=True, progress=False)
+best = min((r for r in res.ok if r["tier"] == "coarse"),
+           key=lambda r: r["time_ns"])
+print(f"[sweep] {len(res.rows)} rows ({res.counts()}), best escalated "
+      f"point {best['point']} -> {best['time_ns']/1e3:.1f} us; "
+      f"JSONL at {res.out_path}")
+# the same study from the shell, 4 workers, resumable via the cache:
+#   python -m repro.sweep quickstart_dse --jobs 4
+#   python -m repro.sweep --list          # every registered sweep
+
 # --- 2. the framework -------------------------------------------------------
 from repro.configs import ShapeConfig, get, reduced
 from repro.models import api

@@ -29,6 +29,19 @@ from ..gpu_model import GpuConfig
 from ..network.simple import SimpleTopology
 
 
+def _config_hash(cfg) -> str:
+    """Canonical sha256 of a tier config: fidelity tag + every dataclass
+    field (nested ``NocConfig``/``GpuConfig``/``SimpleTopology`` dataclasses
+    canonicalize structurally).  The sweep cache's config key: two configs
+    hash equal iff they construct identically-behaving backends *and*
+    lower traces identically."""
+    from ..canonical import content_hash
+    return content_hash({"kind": type(cfg).__qualname__,
+                         "fidelity": cfg.fidelity,
+                         "fields": {f.name: getattr(cfg, f.name)
+                                    for f in fields(cfg)}})
+
+
 @runtime_checkable
 class SimConfig(Protocol):
     """What ``simulate`` needs from a tier config: its fidelity name and a
@@ -60,6 +73,9 @@ class FineConfig:
 
     fidelity = "fine"
 
+    def content_hash(self) -> str:
+        return _config_hash(self)
+
     def make_backend(self, infra=None):
         from .fine import FineBackend
         return FineBackend(infra=infra, noc=self.noc,
@@ -87,6 +103,9 @@ class CoarseConfig:
 
     fidelity = "coarse"
 
+    def content_hash(self) -> str:
+        return _config_hash(self)
+
     def make_backend(self, infra=None):
         from .coarse import CoarseBackend
         return CoarseBackend(infra=infra, topo=self.topo,
@@ -110,6 +129,9 @@ class AnalyticConfig:
     flops_per_ns: float = 16384.0
 
     fidelity = "analytic"
+
+    def content_hash(self) -> str:
+        return _config_hash(self)
 
     def make_backend(self, infra=None):
         from .analytic import AnalyticBackend

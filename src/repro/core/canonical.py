@@ -1,0 +1,111 @@
+"""Canonical content hashing for experiment provenance (DSE sweep cache).
+
+The sweep harness (:mod:`repro.sweep`) caches simulation results on disk
+keyed by *what was simulated*: the workload, the infrastructure, and the
+tier config.  That only works if the same semantic object always hashes
+to the same string — across processes (``PYTHONHASHSEED`` must not leak
+in), across sessions, and across the machines a sweep may be sharded
+over.  This module is the one place that canonicalization lives:
+
+* :func:`canonical_form` lowers an object to a JSON-able structure with
+  deterministic ordering (dict keys sorted, dataclasses tagged with
+  their class name, tuples flattened to lists);
+* :func:`canonical_json` serializes that form compactly with
+  ``sort_keys=True`` so byte output is order-independent;
+* :func:`content_hash` is the sha256 hex digest of the canonical JSON.
+
+Objects participate in one of three ways, tried in order:
+
+1. a ``content_hash()`` method (``Program``, ``ExecutionTrace``,
+   ``Infrastructure`` and the tier configs define one) — embedded as an
+   opaque tagged digest so nested objects stay stable even if their
+   internals gain fields;
+2. a ``canonical_form()`` method returning a JSON-able structure;
+3. plain dataclasses and builtin containers, handled structurally.
+
+Anything else (callables, open handles, arbitrary instances) raises
+``TypeError`` — silently hashing ``repr()`` would make cache keys
+collide or drift, which is worse than failing loudly.
+
+Runtime fields are the *caller's* responsibility to exclude: each
+``content_hash()`` implementation hashes semantic fields only (e.g. an
+``ExecutionTrace`` hashes identically before and after a run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any
+
+__all__ = ["canonical_form", "canonical_json", "content_hash",
+           "hash_of", "combine_hashes"]
+
+
+def canonical_form(obj: Any) -> Any:
+    """Lower ``obj`` to a deterministic JSON-able structure."""
+    if obj is None or isinstance(obj, (bool, int, str)):
+        return obj
+    if isinstance(obj, float):
+        # repr() is the shortest round-trip form — stable across CPython
+        # processes and platforms for equal values (and what json.dumps
+        # emits anyway); normalize int-valued floats explicitly so
+        # 2.0 == 2 hash apart deliberately (they are different configs)
+        return obj
+    if isinstance(obj, (list, tuple)):
+        return [canonical_form(x) for x in obj]
+    if isinstance(obj, (set, frozenset)):
+        items = [canonical_form(x) for x in obj]
+        return {"__set__": sorted(items, key=lambda x: json.dumps(
+            x, sort_keys=True, default=str))}
+    if isinstance(obj, dict):
+        if all(isinstance(k, str) for k in obj):
+            return {k: canonical_form(v) for k, v in obj.items()}
+        pairs = sorted(
+            ([canonical_form(k), canonical_form(v)] for k, v in obj.items()),
+            key=lambda kv: json.dumps(kv[0], sort_keys=True, default=str))
+        return {"__pairs__": pairs}
+    ch = getattr(obj, "content_hash", None)
+    if callable(ch):
+        return {"__content_hash__": type(obj).__qualname__, "sha256": ch()}
+    cf = getattr(obj, "canonical_form", None)
+    if callable(cf):
+        return {"__canonical__": type(obj).__qualname__,
+                "form": canonical_form(cf())}
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {"__dataclass__": type(obj).__qualname__,
+                "fields": {f.name: canonical_form(getattr(obj, f.name))
+                           for f in dataclasses.fields(obj)}}
+    raise TypeError(
+        f"object of type {type(obj).__qualname__!r} is not canonically "
+        f"hashable; give it a content_hash() or canonical_form() method, "
+        f"or make it a dataclass of hashable fields")
+
+
+def canonical_json(obj: Any) -> str:
+    """Canonical compact JSON of ``obj`` (deterministic byte output)."""
+    return json.dumps(canonical_form(obj), sort_keys=True,
+                      separators=(",", ":"))
+
+
+def content_hash(obj: Any) -> str:
+    """sha256 hex digest of ``obj``'s canonical JSON."""
+    return hashlib.sha256(canonical_json(obj).encode("utf-8")).hexdigest()
+
+
+def hash_of(obj: Any, none_token: str = "none") -> str:
+    """``content_hash`` that maps ``None`` to a fixed token and prefers an
+    object's own ``content_hash()`` — the sweep cache's building block."""
+    if obj is None:
+        return none_token
+    ch = getattr(obj, "content_hash", None)
+    if callable(ch):
+        return ch()
+    return content_hash(obj)
+
+
+def combine_hashes(**parts: str) -> str:
+    """One key from named sub-hashes (sorted by part name)."""
+    payload = json.dumps(sorted(parts.items()), separators=(",", ":"))
+    return hashlib.sha256(payload.encode("utf-8")).hexdigest()

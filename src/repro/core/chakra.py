@@ -132,15 +132,30 @@ class ExecutionTrace:
         return out
 
     # ------------------------------------------------------------- JSON I/O
+    def _node_structs(self) -> List[dict]:
+        """Semantic per-node dicts: runtime timestamps stripped, default
+        optional fields elided (shared by :meth:`to_json` and
+        :meth:`content_hash`, so a dump and its re-import hash equal)."""
+        return [{k: v for k, v in n.__dict__.items()
+                 if k not in _RUNTIME_FIELDS
+                 and not (k in _DEFAULT_ELIDED and v == _DEFAULT_ELIDED[k])}
+                for n in self.nodes]
+
     def to_json(self) -> str:
         """Serialize the trace *structure*: runtime start/end timestamps are
         stripped, so a dump taken after a run round-trips to a clean trace."""
-        nodes = [{k: v for k, v in n.__dict__.items()
-                  if k not in _RUNTIME_FIELDS
-                  and not (k in _DEFAULT_ELIDED and v == _DEFAULT_ELIDED[k])}
-                 for n in self.nodes]
-        return json.dumps({"num_ranks": self.num_ranks, "nodes": nodes},
-                          indent=1)
+        return json.dumps({"num_ranks": self.num_ranks,
+                           "nodes": self._node_structs()}, indent=1)
+
+    def content_hash(self) -> str:
+        """Canonical sha256 over the trace's semantic content — the sweep
+        cache's workload key.  Runtime fields (``start_ns``/``end_ns``)
+        are excluded, so a trace hashes identically before and after a
+        run; ``from_json(to_json(t))`` hashes equal to ``t``."""
+        from .canonical import content_hash
+        return content_hash({"kind": "ExecutionTrace",
+                             "num_ranks": self.num_ranks,
+                             "nodes": self._node_structs()})
 
     @staticmethod
     def from_json(text: str) -> "ExecutionTrace":

@@ -133,6 +133,16 @@ class Infrastructure:
             "edges": self.edges,
         }, indent=1)
 
+    def content_hash(self) -> str:
+        """Canonical sha256 over the topology's semantic content — the
+        sweep cache's infrastructure key.  Computed over the same
+        structure :meth:`to_json` emits (devices, instances, link types,
+        edges — edge *order* included, since translation walks edges in
+        order), so ``from_json(to_json(i))`` hashes equal to ``i``."""
+        from ..canonical import content_hash
+        return content_hash({"kind": "Infrastructure",
+                             **json.loads(self.to_json())})
+
     @staticmethod
     def from_json(text: str) -> "Infrastructure":
         d = json.loads(text)

@@ -97,6 +97,25 @@ class Program:
         return Program(d["name"], d["collective"], d["num_ranks"],
                        {k: int(v) for k, v in d["buffers"].items()}, gpus)
 
+    def content_hash(self) -> str:
+        """Canonical sha256 over the program's semantic content.
+
+        Stable across processes and sessions (sorted-key JSON, no
+        ``id()``/``hash()`` leakage) — the sweep cache's workload key.
+        Two programs hash equal iff name, collective, rank count, buffer
+        sizes and every per-workgroup op list agree.
+        """
+        from .canonical import content_hash
+        return content_hash({
+            "kind": "Program",
+            "name": self.name,
+            "collective": self.collective,
+            "num_ranks": self.num_ranks,
+            "buffers": {k: int(v) for k, v in self.buffers.items()},
+            "gpus": [[[o.to_json() for o in wg] for wg in wgs]
+                     for wgs in self.gpus],
+        })
+
     def validate(self) -> None:
         """Structural validation: cheap per-op invariants that make the
         program meaningless if violated.  Raises ``ValueError`` at the

@@ -1,0 +1,33 @@
+"""Sweep-at-scale DSE harness (this repo's experiment runner).
+
+Declare a study as a :class:`SweepSpec` — typed axes, a ``build`` function
+from coordinates to simulation inputs, an optional tier-:class:`Escalation`
+policy — then execute it sharded across worker processes with per-point
+timeout, bounded crash retry, content-addressed result caching, and
+append-only JSONL streaming::
+
+    from repro.sweep import SweepSpec, PointSpec, Escalation, run_sweep
+
+    spec = SweepSpec(name="my_study",
+                     axes={"bw": (50.0, 100.0)},
+                     build=my_build,
+                     escalate=Escalation(prefilter="analytic", final="fine"))
+    result = run_sweep(spec, jobs=4)
+
+or from the command line: ``python -m repro.sweep demo_dse --jobs 4``.
+"""
+
+from .grid import (Escalation, PointSpec, SweepSpec, select_pareto,
+                   select_top_k)
+from .registry import (SUITES, SWEEPS, discover, register_suite,
+                       register_sweep, resolve)
+from .runner import SweepResult, SweepRunner, run_sweep
+from .store import (ResultStore, payload, read_jsonl, validate_jsonl,
+                    validate_row)
+
+__all__ = [
+    "Escalation", "PointSpec", "SweepSpec", "select_pareto", "select_top_k",
+    "SUITES", "SWEEPS", "discover", "register_suite", "register_sweep",
+    "resolve", "SweepResult", "SweepRunner", "run_sweep",
+    "ResultStore", "payload", "read_jsonl", "validate_jsonl", "validate_row",
+]

@@ -1,0 +1,84 @@
+"""Demo DSE sweeps: collective algorithm x fabric topology x link speed.
+
+``demo_dse`` is the harness's acceptance sweep — a 48-point, 3-axis grid
+(4 collectives x 3 topologies x 4 link bandwidths) over 8 ranks, with
+tier escalation: the whole grid runs at the analytic tier, then the top-4
+fastest points escalate to the fine (load-store) tier.  ``demo_smoke`` is
+the CI-sized cut of the same study: 8 points, 4 ranks, one escalated
+fine point — small enough for the tier-1 job.
+
+Run either with::
+
+    python -m repro.sweep demo_dse --jobs 4
+    python -m repro.sweep demo_smoke --jobs 2
+"""
+
+from __future__ import annotations
+
+from ..core.backends import AnalyticConfig, FineConfig
+from ..core.cluster import NocConfig
+from ..core.collectives import ALGORITHMS
+from ..core.gpu_model import GpuConfig
+from ..core.infragraph.blueprints import (ring_fabric, single_tier_fabric,
+                                          torus2d_fabric)
+from .grid import Escalation, PointSpec, SweepSpec
+from .registry import register_sweep
+
+#: tiny NoC + coarse cache lines: enough structure to exercise the fine
+#: tier's contention model while keeping a 48-point sweep interactive
+_DEMO_NOC = NocConfig(mesh_x=2, mesh_y=1, cus_per_router=1, mem_channels=2,
+                      io_ports=2)
+_DEMO_GPU = GpuConfig(cache_line=512)
+
+
+def _fabric(topology: str, num_ranks: int, link_GBps: float):
+    if topology == "switch":
+        return single_tier_fabric(num_ranks, link_GBps=link_GBps)
+    if topology == "ring":
+        return ring_fabric(num_ranks, link_GBps=link_GBps)
+    if topology == "torus":
+        return torus2d_fabric(num_ranks // 2, 2, link_GBps=link_GBps)
+    raise ValueError(f"unknown topology {topology!r}")
+
+
+def _build_demo(num_ranks: int, shard_bytes: int):
+    def build(coords: dict, tier: str) -> PointSpec:
+        kind, _, algo = coords["collective"].partition(":")
+        prog = ALGORITHMS[(kind, algo)](num_ranks, shard_bytes, 1)
+        infra = _fabric(coords["topology"], num_ranks, coords["link_GBps"])
+        if tier == "fine":
+            cfg = FineConfig(noc=_DEMO_NOC, gpu_config=_DEMO_GPU)
+        elif tier == "analytic":
+            cfg = AnalyticConfig()
+        else:
+            cfg = None
+        return PointSpec(workload=prog, infra=infra, config=cfg)
+    return build
+
+
+demo_dse = register_sweep(SweepSpec(
+    name="demo_dse",
+    axes={
+        "collective": ("all_gather:ring", "all_reduce:ring",
+                       "all_reduce:halving_doubling", "all_to_all:direct"),
+        "topology": ("switch", "ring", "torus"),
+        "link_GBps": (25.0, 50.0, 100.0, 200.0),
+    },
+    build=_build_demo(num_ranks=8, shard_bytes=128 * 1024),
+    escalate=Escalation(prefilter="analytic", final="fine", mode="top_k",
+                        k=4, objectives=("min:time_ns",)),
+    timeout_s=300.0,
+))
+
+demo_smoke = register_sweep(SweepSpec(
+    name="demo_smoke",
+    axes={
+        "collective": ("all_gather:ring", "all_reduce:ring"),
+        "topology": ("switch", "ring"),
+        "link_GBps": (50.0, 100.0),
+    },
+    build=_build_demo(num_ranks=4, shard_bytes=4 * 1024),
+    escalate=Escalation(prefilter="analytic", final="fine", mode="top_k",
+                        k=1, objectives=("min:time_ns",)),
+    timeout_s=120.0,
+))

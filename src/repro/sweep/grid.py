@@ -1,0 +1,214 @@
+"""Declarative sweep grids: typed axes, point specs, tier escalation.
+
+A DSE study is a cross product of (workload x infrastructure x per-tier
+config) *points*.  This module holds the pure-data half of the harness:
+
+* :class:`SweepSpec` — the declaration: named axes (or an explicit point
+  list), a ``build`` function that turns one coordinate dict into the
+  simulation inputs for a tier, and optionally an :class:`Escalation`
+  policy (cheap-tier prefilter over the full grid, fine tier only on the
+  surviving frontier);
+* :class:`PointSpec` — what ``build`` returns: workload + infra + config
+  + per-run keywords + a metrics extractor;
+* :func:`select_top_k` / :func:`select_pareto` — the escalation frontier
+  selectors, pure functions over result rows so they unit-test without
+  running anything.
+
+Every point gets a *content-addressed key*: canonical hashes of the
+built workload / infra / config / run keywords (:mod:`repro.core.
+canonical`), stable across processes and sessions — the cache and the
+JSONL provenance both key on it.  ``build`` must therefore be
+deterministic (the worker process rebuilds the point and cross-checks
+the key).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from ..core.canonical import combine_hashes, content_hash, hash_of
+
+#: tiers a point may run at (matches repro.core.backends.FIDELITIES)
+TIERS = ("fine", "coarse", "analytic")
+
+
+def parse_objective(spec: str) -> Tuple[str, bool]:
+    """``"min:time_ns"`` -> ("time_ns", False); ``"max:bw"`` -> ("bw", True)."""
+    if ":" not in spec:
+        raise ValueError(f"objective {spec!r}: expected 'min:FIELD' or "
+                         f"'max:FIELD'")
+    direction, _, fld = spec.partition(":")
+    if direction not in ("min", "max") or not fld:
+        raise ValueError(f"objective {spec!r}: expected 'min:FIELD' or "
+                         f"'max:FIELD'")
+    return fld, direction == "max"
+
+
+@dataclass(frozen=True)
+class Escalation:
+    """Tier-escalation policy: run ``prefilter`` over the full grid, then
+    ``final`` only on the frontier the selector keeps.
+
+    ``mode="top_k"`` keeps the ``k`` best rows by ``objectives[0]``;
+    ``mode="pareto"`` keeps the non-dominated set over all objectives.
+    Objectives are ``"min:FIELD"`` / ``"max:FIELD"`` strings over row
+    fields (``time_ns``, ``events``, any metric the spec extracts).
+    """
+    prefilter: str = "analytic"
+    final: str = "fine"
+    mode: str = "top_k"                     # "top_k" | "pareto"
+    k: int = 4
+    objectives: Tuple[str, ...] = ("min:time_ns",)
+
+    def __post_init__(self):
+        if self.mode not in ("top_k", "pareto"):
+            raise ValueError(f"escalate mode {self.mode!r}: choose 'top_k' "
+                             f"or 'pareto'")
+        if not self.objectives:
+            raise ValueError("escalation needs at least one objective")
+        for o in self.objectives:
+            parse_objective(o)
+
+    def select(self, rows: List[dict]) -> List[dict]:
+        """Frontier rows among ``rows`` (ok-status prefilter results)."""
+        if self.mode == "top_k":
+            return select_top_k(rows, self.k, self.objectives[0])
+        return select_pareto(rows, self.objectives)
+
+
+def select_top_k(rows: List[dict], k: int, objective: str) -> List[dict]:
+    """The ``k`` best rows by one objective (stable order for ties)."""
+    fld, maximize = parse_objective(objective)
+    scored = [r for r in rows if isinstance(r.get(fld), (int, float))]
+    scored.sort(key=lambda r: (-r[fld] if maximize else r[fld]))
+    return scored[:max(k, 0)]
+
+
+def select_pareto(rows: List[dict], objectives: Sequence[str]) -> List[dict]:
+    """Non-dominated rows under the objective vector.
+
+    Row A dominates B iff A is no worse on every objective and strictly
+    better on at least one.  Duplicated objective vectors all survive
+    (they tie), so the frontier is deterministic in input order.
+    """
+    parsed = [parse_objective(o) for o in objectives]
+
+    def vec(r):
+        out = []
+        for fld, maximize in parsed:
+            v = r.get(fld)
+            if not isinstance(v, (int, float)):
+                return None
+            out.append(-v if maximize else v)      # lower is better
+        return tuple(out)
+
+    cand = [(r, vec(r)) for r in rows]
+    cand = [(r, v) for r, v in cand if v is not None]
+    front = []
+    for r, v in cand:
+        dominated = any(all(w[i] <= v[i] for i in range(len(v)))
+                        and any(w[i] < v[i] for i in range(len(v)))
+                        for _, w in cand)
+        if not dominated:
+            front.append(r)
+    return front
+
+
+@dataclass
+class PointSpec:
+    """The simulation inputs for one (point, tier) — what ``build`` returns.
+
+    ``workload`` is a Program or ExecutionTrace; ``infra`` an InfraGraph
+    Infrastructure or None (tier default); ``config`` a typed tier config
+    or None; ``run_kw`` per-run keywords forwarded to ``simulate``.
+    ``metrics(result)`` returns extra row fields (e.g. ``bus_GBps``).
+    """
+    workload: object
+    infra: object = None
+    config: object = None
+    run_kw: Dict[str, object] = field(default_factory=dict)
+    metrics: Optional[Callable[[object], Dict[str, object]]] = None
+    check: str = "off"
+
+    def fingerprint(self, tier: str) -> Dict[str, str]:
+        """Canonical content hashes of each input (the cache provenance)."""
+        return {
+            "workload": hash_of(self.workload),
+            "infra": hash_of(self.infra, none_token="default"),
+            "config": hash_of(self.config, none_token=f"default:{tier}"),
+            "run_kw": content_hash(self.run_kw),
+        }
+
+
+@dataclass
+class SweepSpec:
+    """One declarative sweep: axes x build -> points, plus run policy.
+
+    ``axes`` maps axis name -> value tuple; the grid is the cross product
+    in declaration order (or pass ``points`` for an explicit coordinate
+    list).  ``build(coords, tier)`` returns a :class:`PointSpec`;
+    alternatively ``run_point(coords, tier)`` returns a finished row dict
+    for suites that need custom measurement loops (wall-clock trials,
+    cross-mode asserts) — such rows are keyed by coordinates + ``version``
+    instead of content hashes, so bump ``version`` to invalidate them.
+    """
+    name: str
+    axes: Mapping[str, Sequence] = field(default_factory=dict)
+    build: Optional[Callable[[dict, str], PointSpec]] = None
+    run_point: Optional[Callable[[dict, str], dict]] = None
+    tiers: Tuple[str, ...] = ("fine",)
+    escalate: Optional[Escalation] = None
+    points: Optional[List[dict]] = None
+    version: int = 0
+    timeout_s: float = 300.0
+    retries: int = 1
+    cacheable: bool = True
+    #: filled by register_sweep (the module workers import to rebuild)
+    module: str = ""
+
+    def __post_init__(self):
+        if (self.build is None) == (self.run_point is None):
+            raise ValueError(f"sweep {self.name!r}: define exactly one of "
+                             f"build= or run_point=")
+        if self.run_point is not None:
+            self.cacheable = False          # custom rows measure wall clock
+        for t in self.tiers:
+            if t not in TIERS:
+                raise ValueError(f"sweep {self.name!r}: unknown tier {t!r}; "
+                                 f"choose from {TIERS}")
+        if not self.module:
+            fn = self.build or self.run_point
+            self.module = getattr(fn, "__module__", "") or ""
+
+    # ------------------------------------------------------------- the grid
+    def grid(self) -> List[dict]:
+        """Every coordinate dict, cross product in axis declaration order."""
+        if self.points is not None:
+            return [dict(p) for p in self.points]
+        if not self.axes:
+            raise ValueError(f"sweep {self.name!r}: no axes and no points")
+        names = list(self.axes)
+        out = []
+        for combo in itertools.product(*(self.axes[n] for n in names)):
+            out.append(dict(zip(names, combo)))
+        return out
+
+    # -------------------------------------------------------------- keying
+    def fingerprint(self, coords: dict, tier: str) -> Tuple[str, dict]:
+        """(content-addressed point key, provenance dict).
+
+        Calls ``build`` (cheap by contract: programs/graphs only, no
+        simulation) so the key reflects *what would be simulated*, not
+        how the grid happened to be spelled — renaming an axis keeps the
+        cache warm; changing a buffer size misses exactly that point.
+        """
+        base = {"sweep": self.name, "version": str(self.version),
+                "tier": tier}
+        if self.run_point is not None:
+            prov = dict(base, coords=content_hash(coords))
+            return combine_hashes(**prov), prov
+        ps = self.build(coords, tier)
+        prov = dict(base, **ps.fingerprint(tier))
+        return combine_hashes(**prov), prov

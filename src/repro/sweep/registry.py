@@ -1,0 +1,126 @@
+"""Sweep and suite registries with import-based auto-discovery.
+
+Sweeps register themselves as a side effect of importing the module that
+declares them (``register_sweep`` at module scope).  Two lookups layer on
+top:
+
+* ``SWEEPS`` — name -> :class:`~repro.sweep.grid.SweepSpec`.  The CLI and
+  the worker both resolve through :func:`resolve`, which imports the
+  declaring module on demand — so a worker process needs only the
+  (module, name) pair to rebuild any point.
+
+* ``SUITES`` — name -> no-argument callable.  The benchmark driver
+  (``benchmarks/run.py``) discovers its suite list from here instead of a
+  hand-maintained table, which is how new suites stop going missing from
+  ``--all``.
+
+:func:`discover` imports every known declaration site: the in-package
+demo sweeps plus each ``benchmarks/*.py`` module (a namespace package —
+located relative to the installed ``repro`` package, skipped gracefully
+when the benchmarks tree isn't present, e.g. in a wheel install).
+"""
+
+from __future__ import annotations
+
+import importlib
+import sys
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+from .grid import SweepSpec
+
+SWEEPS: Dict[str, SweepSpec] = {}
+SUITES: Dict[str, Callable[[], object]] = {}
+
+#: modules inside this package that declare sweeps
+_BUILTIN_MODULES = ("repro.sweep.demo",)
+
+#: benchmarks/ modules that declare sweeps or suites (namespace package
+#: at the repo root, importable as ``benchmarks.<mod>``)
+_BENCHMARK_MODULES = (
+    "fig4_protocols", "fig10_reduce_scatter", "fig11_all_gather",
+    "fig12_unrolling", "fig13_outstanding", "fig14_scalability",
+    "table1_clos_allreduce", "fidelity_compare", "roofline_table",
+    "step_prediction", "engine_throughput", "trace_throughput",
+    "serving_tail_latency",
+)
+
+
+def register_sweep(spec: SweepSpec) -> SweepSpec:
+    """Register ``spec`` under its name (last registration wins — benchmark
+    modules import under two names, ``fig10_allgather_bw`` from the CLI
+    path and bare from test sys.path injection, and both define the same
+    spec)."""
+    SWEEPS[spec.name] = spec
+    return spec
+
+
+def register_suite(name: str):
+    """Decorator: register a no-arg callable as a runnable benchmark suite."""
+    def deco(fn):
+        SUITES[name] = fn
+        return fn
+    return deco
+
+
+def _repo_root() -> Optional[Path]:
+    """The checkout root (where ``benchmarks/`` lives), or None when the
+    package is installed without the benchmarks tree."""
+    import repro
+    root = Path(repro.__file__).resolve().parents[2]
+    return root if (root / "benchmarks").is_dir() else None
+
+
+def _add_root_to_path() -> None:
+    root = _repo_root()
+    if root is not None and str(root) not in sys.path:
+        sys.path.insert(0, str(root))
+
+
+def _import_quietly(module: str) -> bool:
+    try:
+        importlib.import_module(module)
+        return True
+    except ImportError:
+        return False
+
+
+def discover(include_benchmarks: bool = True) -> None:
+    """Import every declaration site so SWEEPS/SUITES are populated."""
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
+    if not include_benchmarks or _repo_root() is None:
+        return
+    _add_root_to_path()
+    for mod in _BENCHMARK_MODULES:
+        _import_quietly(f"benchmarks.{mod}")
+
+
+def resolve(name: str, module: str = "") -> SweepSpec:
+    """Look up a sweep by name, importing its declaring module if needed.
+
+    ``module`` (recorded on the spec at registration) lets a fresh worker
+    process resolve without a full :func:`discover` sweep of every
+    benchmark file.
+    """
+    if name in SWEEPS:
+        return SWEEPS[name]
+    if module:
+        _add_root_to_path()
+        _import_quietly(module)
+        if name in SWEEPS:
+            return SWEEPS[name]
+    discover()
+    if name in SWEEPS:
+        return SWEEPS[name]
+    raise KeyError(f"unknown sweep {name!r}; known: {sorted(SWEEPS)}")
+
+
+def sweep_names() -> List[str]:
+    discover()
+    return sorted(SWEEPS)
+
+
+def suite_names() -> List[str]:
+    discover()
+    return sorted(SUITES)

@@ -1,0 +1,358 @@
+"""The sweep runner: sharded execution with crash isolation + caching.
+
+Execution model — one process per *point*, not a long-lived pool.  A
+``ProcessPoolExecutor`` poisons itself when any worker dies (every queued
+future collapses with BrokenProcessPool); here a dead worker fails
+exactly one point and the run keeps going, which is the property the
+whole harness is built around.  The parent keeps at most ``jobs`` live
+children, each with a one-shot Pipe; completion, crash, and deadline are
+all observed from the parent's poll loop:
+
+* message arrived  -> ok row or error row (worker's own traceback);
+  Python exceptions are deterministic, so they are **not** retried;
+* deadline passed  -> terminate the child, ``status=timeout`` row;
+* child exited with no message -> infrastructure crash (OOM-kill,
+  segfault, ``os._exit``) -> retried up to ``retries`` times, then an
+  ``status=error`` row recording the exit code.
+
+``jobs=0`` runs points inline in the parent — same ``execute_point``
+code path, no subprocess overhead — which is what the ported benchmark
+suites use (their baselines must stay bit-identical and cheap).
+
+Every finished point streams one JSONL row immediately (append-only;
+resume skips keys already present) and — for ok rows of cacheable
+sweeps — lands in the content-addressed :class:`ResultStore`, so a
+second invocation replays cached points without simulating.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import sys
+import time
+from dataclasses import dataclass, field
+from multiprocessing.connection import wait as conn_wait
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from .grid import SweepSpec
+from .store import ResultStore, append_jsonl, existing_keys, read_jsonl
+from .worker import _child_entry, execute_point
+
+#: default directory for sweep JSONL outputs
+DEFAULT_OUT_DIR = Path("results") / "sweeps"
+
+
+@dataclass
+class SweepResult:
+    """What a sweep run produced: rows in deterministic submission order."""
+    name: str
+    rows: List[dict] = field(default_factory=list)
+    out_path: Optional[Path] = None
+    wall_s: float = 0.0
+
+    @property
+    def ok(self) -> List[dict]:
+        return [r for r in self.rows if r["status"] == "ok"]
+
+    @property
+    def failed(self) -> List[dict]:
+        return [r for r in self.rows if r["status"] != "ok"]
+
+    def counts(self) -> Dict[str, int]:
+        out = {"ok": 0, "timeout": 0, "error": 0, "cached": 0}
+        for r in self.rows:
+            out[r["status"]] += 1
+            if r.get("cached"):
+                out["cached"] += 1
+        return out
+
+
+@dataclass
+class _Job:
+    index: int                  # submission order within the phase
+    coords: dict
+    tier: str
+    key: str
+    prov: dict
+    attempts: int = 0
+
+
+class _Active:
+    """One live child: process + its result pipe + deadline bookkeeping."""
+
+    def __init__(self, job: _Job, proc, conn, started: float):
+        self.job, self.proc, self.conn, self.started = job, proc, conn, started
+
+
+class SweepRunner:
+    """Executes one :class:`SweepSpec`; see module docstring for model."""
+
+    def __init__(self, spec: SweepSpec, *, jobs: int = 0,
+                 out: Optional[Path] = None, cache: Optional[Path] = None,
+                 use_cache: bool = True, fresh: bool = False,
+                 timeout_s: Optional[float] = None,
+                 retries: Optional[int] = None, progress: bool = True):
+        self.spec = spec
+        self.jobs = max(int(jobs), 0)
+        self.out = Path(out) if out is not None else (
+            DEFAULT_OUT_DIR / f"{spec.name}.jsonl")
+        self.store = ResultStore(cache) if spec.cacheable else None
+        self.use_cache = use_cache and spec.cacheable
+        self.fresh = fresh
+        self.timeout_s = float(timeout_s if timeout_s is not None
+                               else spec.timeout_s)
+        self.retries = int(retries if retries is not None else spec.retries)
+        self.progress = progress
+        if fresh and self.out.exists():
+            self.out.unlink()           # --fresh starts the JSONL stream over
+        self._done_keys = set() if fresh else existing_keys(self.out)
+        self._resumed: Dict[str, dict] = {}
+        if not fresh and self._done_keys:
+            for row in read_jsonl(self.out):
+                if row.get("status") == "ok" and "key" in row:
+                    self._resumed[row["key"]] = row
+        self._stats = {"done": 0, "total": 0, "ok": 0, "failed": 0,
+                       "cached": 0}
+
+    # ------------------------------------------------------------ plumbing
+    def _emit(self, row: dict) -> None:
+        """Stream one finished row: JSONL (no duplicates on resume) + cache."""
+        if row["key"] not in self._done_keys:
+            append_jsonl(self.out, row)
+            self._done_keys.add(row["key"])
+        elif row["status"] != "ok":
+            # re-run of a previously failed point: record the fresh outcome
+            append_jsonl(self.out, row)
+        if (self.store is not None and row["status"] == "ok"
+                and not row.get("cached")):
+            self.store.put(row["key"], row)
+        self._stats["done"] += 1
+        self._stats["ok" if row["status"] == "ok" else "failed"] += 1
+        if row.get("cached"):
+            self._stats["cached"] += 1
+        self._progress_line()
+
+    def _progress_line(self, end: bool = False) -> None:
+        if not self.progress:
+            return
+        s = self._stats
+        line = (f"[{self.spec.name}] {s['done']}/{s['total']} points  "
+                f"ok={s['ok']} failed={s['failed']} cached={s['cached']}")
+        if sys.stderr.isatty():
+            print("\r" + line + ("" if not end else "\n"), end="",
+                  file=sys.stderr, flush=True)
+        elif end:
+            print(line, file=sys.stderr, flush=True)
+
+    def _row_base(self, job: _Job) -> dict:
+        return {"sweep": self.spec.name, "key": job.key, "tier": job.tier,
+                "point": job.coords, "provenance": job.prov,
+                "cached": False, "attempts": job.attempts}
+
+    def _ok_row(self, job: _Job, fields: dict, wall: float) -> dict:
+        row = self._row_base(job)
+        worker_key = fields.pop("key", job.key)
+        if worker_key != job.key:
+            print(f"[{self.spec.name}] WARNING: point key mismatch for "
+                  f"{job.coords} — build() is nondeterministic; caching "
+                  f"disabled for this row", file=sys.stderr)
+            row["key_mismatch"] = worker_key
+        row.update(fields)
+        row["status"] = "ok"
+        row["point_wall_s"] = wall
+        return row
+
+    def _fail_row(self, job: _Job, status: str, wall: float,
+                  **extra) -> dict:
+        row = self._row_base(job)
+        row["status"] = status
+        row["point_wall_s"] = wall
+        row.update(extra)
+        return row
+
+    # ----------------------------------------------------------- execution
+    def _run_phase(self, jobs: List[_Job]) -> List[dict]:
+        """Run one tier phase; rows come back in submission order."""
+        results: Dict[int, dict] = {}
+        pending: List[_Job] = []
+        for job in jobs:
+            row = self._serve_from_cache(job)
+            if row is not None:
+                results[job.index] = row
+                self._emit(row)
+            else:
+                pending.append(job)
+        if pending:
+            if self.jobs == 0:
+                for job in pending:
+                    row = self._run_inline(job)
+                    results[job.index] = row
+                    self._emit(row)
+            else:
+                for idx, row in self._run_pool(pending):
+                    results[idx] = row
+                    self._emit(row)
+        return [results[j.index] for j in jobs]
+
+    def _serve_from_cache(self, job: _Job) -> Optional[dict]:
+        if job.key in self._resumed:
+            return dict(self._resumed[job.key])
+        if not self.use_cache or self.fresh or self.store is None:
+            return None
+        hit = self.store.get(job.key)
+        if hit is None or hit.get("status") != "ok":
+            return None
+        row = dict(hit)
+        row["cached"] = True
+        row["point_wall_s"] = 0.0
+        return row
+
+    def _run_inline(self, job: _Job) -> dict:
+        import traceback
+        job.attempts += 1
+        t0 = time.perf_counter()
+        try:
+            fields = execute_point(self.spec.module, self.spec.name,
+                                   job.coords, job.tier)
+        except Exception:
+            return self._fail_row(job, "error", time.perf_counter() - t0,
+                                  error=traceback.format_exc())
+        return self._ok_row(job, fields, time.perf_counter() - t0)
+
+    def _spawn(self, ctx, job: _Job) -> _Active:
+        job.attempts += 1
+        parent_conn, child_conn = ctx.Pipe(duplex=False)
+        proc = ctx.Process(
+            target=_child_entry,
+            args=(child_conn, self.spec.module, self.spec.name, job.coords,
+                  job.tier, list(sys.path)),
+            daemon=True)
+        proc.start()
+        child_conn.close()
+        return _Active(job, proc, parent_conn, time.perf_counter())
+
+    @staticmethod
+    def _reap(act: _Active) -> None:
+        try:
+            act.conn.close()
+        except OSError:
+            pass
+        if act.proc.is_alive():
+            act.proc.terminate()
+            act.proc.join(5.0)
+            if act.proc.is_alive():
+                act.proc.kill()
+                act.proc.join(5.0)
+        else:
+            act.proc.join()
+
+    def _run_pool(self, pending: List[_Job]):
+        """Yield (index, row) as points finish; at most ``jobs`` children."""
+        ctx = mp.get_context()
+        queue = list(pending)
+        active: Dict[object, _Active] = {}     # conn -> _Active
+        try:
+            while queue or active:
+                while queue and len(active) < self.jobs:
+                    act = self._spawn(ctx, queue.pop(0))
+                    active[act.conn] = act
+                ready = conn_wait(list(active), timeout=0.2)
+                now = time.perf_counter()
+                for conn in ready:
+                    act = active.pop(conn)
+                    wall = now - act.started
+                    msg = None
+                    try:
+                        msg = act.conn.recv()
+                    except (EOFError, OSError):
+                        pass          # child died before sending anything
+                    self._reap(act)
+                    if msg is None:
+                        exitcode = act.proc.exitcode
+                        if act.job.attempts <= self.retries:
+                            queue.append(act.job)       # crash -> retry
+                            continue
+                        yield act.job.index, self._fail_row(
+                            act.job, "error", wall,
+                            error=f"worker died without a result "
+                                  f"(exit code {exitcode})")
+                    elif msg[0] == "ok":
+                        yield act.job.index, self._ok_row(act.job, msg[1],
+                                                          wall)
+                    else:
+                        yield act.job.index, self._fail_row(
+                            act.job, "error", wall, error=msg[1])
+                # deadline check on whoever is still running
+                for conn in [c for c, a in active.items()
+                             if now - a.started > self.timeout_s]:
+                    act = active.pop(conn)
+                    wall = now - act.started
+                    self._reap(act)
+                    yield act.job.index, self._fail_row(
+                        act.job, "timeout", wall, timeout_s=self.timeout_s)
+        finally:
+            for act in active.values():
+                self._reap(act)
+
+    # -------------------------------------------------------------- driver
+    def _make_jobs(self, points: List[dict], tier: str,
+                   base_index: int) -> List[_Job]:
+        jobs = []
+        for i, coords in enumerate(points):
+            key, prov = self.spec.fingerprint(coords, tier)
+            jobs.append(_Job(base_index + i, coords, tier, key, prov))
+        return jobs
+
+    def run(self, tier: Optional[str] = None,
+            points: Optional[List[dict]] = None) -> SweepResult:
+        """Execute the sweep: every (point x tier), escalating if declared.
+
+        ``tier`` overrides the spec's tier plan (no escalation); ``points``
+        overrides the grid (explicit coordinate list).
+        """
+        t0 = time.perf_counter()
+        grid = points if points is not None else self.spec.grid()
+        esc = self.spec.escalate if tier is None else None
+        if esc is not None:
+            phases: List[Tuple[str, List[dict]]] = [(esc.prefilter, grid)]
+        else:
+            tiers = (tier,) if tier is not None else self.spec.tiers
+            phases = [(t, grid) for t in tiers]
+        self._stats["total"] = sum(len(p) for _, p in phases)
+
+        all_rows: List[dict] = []
+        base = 0
+        for phase_tier, phase_points in phases:
+            jobs = self._make_jobs(phase_points, phase_tier, base)
+            base += len(jobs)
+            all_rows.extend(self._run_phase(jobs))
+
+        if esc is not None:
+            survivors = esc.select([r for r in all_rows
+                                    if r["status"] == "ok"])
+            chosen = [r["point"] for r in survivors]
+            if self.progress:
+                self._progress_line(end=True)
+                print(f"[{self.spec.name}] escalating {len(chosen)}/"
+                      f"{len(grid)} points: {esc.prefilter} -> {esc.final} "
+                      f"({esc.mode})", file=sys.stderr, flush=True)
+            self._stats["total"] += len(chosen)
+            jobs = self._make_jobs(chosen, esc.final, base)
+            all_rows.extend(self._run_phase(jobs))
+
+        self._progress_line(end=True)
+        return SweepResult(self.spec.name, all_rows, self.out,
+                           time.perf_counter() - t0)
+
+
+def run_sweep(spec: SweepSpec, **kw) -> SweepResult:
+    """One-call façade: ``run_sweep(spec, jobs=4, tier="analytic", ...)``.
+
+    ``tier=`` and ``points=`` forward to :meth:`SweepRunner.run`; the rest
+    configure the runner (jobs, out, cache, use_cache, fresh, timeout_s,
+    retries, progress).
+    """
+    tier = kw.pop("tier", None)
+    points = kw.pop("points", None)
+    return SweepRunner(spec, **kw).run(tier=tier, points=points)

@@ -1,0 +1,166 @@
+"""Result persistence: the content-addressed cache + append-only JSONL.
+
+Two stores, two jobs:
+
+* :class:`ResultStore` — one small JSON file per point key, sharded by the
+  first two hex digits (``<root>/ab/abcdef....json``).  Writes are atomic
+  (tmp + rename) and happen only in the parent process, so concurrent
+  sweeps against the same cache directory never torn-write.  Keys are the
+  canonical content hashes from :mod:`repro.sweep.grid`, stable across
+  processes and sessions — a resumed or re-declared sweep recomputes only
+  the points whose inputs actually changed.
+
+* JSONL stream — every finished point appends one self-describing row to
+  ``<out>.jsonl`` (key, coordinates, provenance hashes, status, timings,
+  result fields).  Append-only: resuming a run loads the keys already
+  present and never writes a duplicate row.
+
+:func:`validate_row` is the schema gate the tests and CI fold over every
+emitted row.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Set
+
+#: environment override for the cache root
+CACHE_ENV = "REPRO_SWEEP_CACHE"
+DEFAULT_CACHE = Path("results") / "sweep_cache"
+
+ROW_STATUSES = ("ok", "timeout", "error")
+
+#: fields every JSONL row must carry, whatever its status
+ROW_REQUIRED = ("sweep", "key", "tier", "point", "status", "cached",
+                "attempts", "point_wall_s", "provenance")
+
+#: runner-added bookkeeping fields — :func:`payload` strips these to
+#: recover what the point's measurement itself produced
+ROW_ENVELOPE = frozenset(ROW_REQUIRED) | {"sim_wallclock_s", "fidelity",
+                                          "key_mismatch"}
+
+
+def payload(row: dict) -> dict:
+    """The measurement fields of a row, minus the runner's envelope."""
+    return {k: v for k, v in row.items() if k not in ROW_ENVELOPE}
+
+
+def default_cache_dir() -> Path:
+    return Path(os.environ.get(CACHE_ENV, str(DEFAULT_CACHE)))
+
+
+class ResultStore:
+    """Content-addressed point-result cache rooted at ``root``."""
+
+    def __init__(self, root: Optional[Path] = None):
+        self.root = Path(root) if root is not None else default_cache_dir()
+
+    def _path(self, key: str) -> Path:
+        return self.root / key[:2] / f"{key}.json"
+
+    def get(self, key: str) -> Optional[dict]:
+        p = self._path(key)
+        try:
+            with open(p) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+        except (json.JSONDecodeError, OSError):
+            # a corrupt entry is a miss, not a crash — it gets rewritten
+            return None
+
+    def put(self, key: str, row: dict) -> None:
+        p = self._path(key)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=str(p.parent), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(row, f, sort_keys=True)
+            os.replace(tmp, p)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def __contains__(self, key: str) -> bool:
+        return self._path(key).exists()
+
+
+# ----------------------------------------------------------------- JSONL
+def read_jsonl(path: Path) -> Iterator[dict]:
+    """Rows already in ``path`` (missing file -> empty; a truncated final
+    line — e.g. from a killed run — is skipped, not fatal)."""
+    try:
+        f = open(path)
+    except FileNotFoundError:
+        return
+    with f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                yield json.loads(line)
+            except json.JSONDecodeError:
+                continue
+
+
+def existing_keys(path: Path) -> Set[str]:
+    return {r["key"] for r in read_jsonl(path) if "key" in r}
+
+
+def append_jsonl(path: Path, row: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(row, sort_keys=True) + "\n")
+        f.flush()
+
+
+# ---------------------------------------------------------------- schema
+def validate_row(row: dict) -> List[str]:
+    """Schema problems with one JSONL row (empty list = valid)."""
+    errs = []
+    for fld in ROW_REQUIRED:
+        if fld not in row:
+            errs.append(f"missing field {fld!r}")
+    status = row.get("status")
+    if status not in ROW_STATUSES:
+        errs.append(f"status {status!r} not in {ROW_STATUSES}")
+    if not isinstance(row.get("point"), dict):
+        errs.append("point must be a coordinate dict")
+    if not isinstance(row.get("provenance"), dict):
+        errs.append("provenance must be a dict")
+    if not isinstance(row.get("cached"), bool):
+        errs.append("cached must be a bool")
+    if not isinstance(row.get("attempts"), int) or row.get("attempts", 0) < 0:
+        errs.append("attempts must be a non-negative int")
+    if not isinstance(row.get("point_wall_s"), (int, float)):
+        errs.append("point_wall_s must be a number")
+    if status == "ok" and (isinstance(row.get("time_ns"), bool)
+                           or not isinstance(row.get("time_ns"),
+                                             (int, float))):
+        errs.append("ok row must carry numeric time_ns")
+    if status == "error" and not isinstance(row.get("error"), str):
+        errs.append("error row must carry a traceback string")
+    if status == "timeout" and not isinstance(row.get("timeout_s"),
+                                              (int, float)):
+        errs.append("timeout row must carry timeout_s")
+    key = row.get("key")
+    if not (isinstance(key, str) and len(key) == 64):
+        errs.append("key must be a 64-hex sha256 string")
+    return errs
+
+
+def validate_jsonl(path: Path) -> Dict[int, List[str]]:
+    """Line number -> schema problems, for every invalid row in a file."""
+    out: Dict[int, List[str]] = {}
+    for i, row in enumerate(read_jsonl(path), start=1):
+        errs = validate_row(row)
+        if errs:
+            out[i] = errs
+    return out

@@ -1,0 +1,66 @@
+"""Sweep fixtures importable by runner worker processes.
+
+The runner's children re-import the declaring module to rebuild points, so
+fault-injection specs can't live inline in a test function — they live
+here, registered at import time, with behavior selected per point by a
+``behavior`` coordinate:
+
+* ``ok``    — return a tiny deterministic row;
+* ``raise`` — raise ValueError (a deterministic Python failure: the
+  runner must record an error row and NOT retry);
+* ``crash`` — ``os._exit(42)`` (an infrastructure death: the runner must
+  retry, then record an error row naming the exit code);
+* ``sleep`` — block far past any test timeout (the runner must terminate
+  the child and record a timeout row).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core.backends import AnalyticConfig
+from repro.core.collectives import ring_all_gather
+from repro.sweep import PointSpec, SweepSpec, register_sweep
+
+KiB = 1 << 10
+
+
+def _faulty_run_point(coords: dict, tier: str) -> dict:
+    behavior = coords["behavior"]
+    if behavior == "raise":
+        raise ValueError("injected failure")
+    if behavior == "crash":
+        os._exit(42)
+    if behavior == "sleep":
+        time.sleep(300)
+    return {"time_ns": 1000 + coords["i"], "events": 1}
+
+
+faulty = register_sweep(SweepSpec(
+    name="test_faulty",
+    points=[
+        {"i": 0, "behavior": "ok"},
+        {"i": 1, "behavior": "raise"},
+        {"i": 2, "behavior": "crash"},
+        {"i": 3, "behavior": "sleep"},
+        {"i": 4, "behavior": "ok"},
+    ],
+    run_point=_faulty_run_point,
+    timeout_s=3.0,
+    retries=1,
+))
+
+
+def _tiny_build(coords: dict, tier: str) -> PointSpec:
+    prog = ring_all_gather(2, coords["shard_KiB"] * KiB, 1)
+    cfg = AnalyticConfig() if tier == "analytic" else None
+    return PointSpec(workload=prog, config=cfg)
+
+
+tiny = register_sweep(SweepSpec(
+    name="test_tiny",
+    axes={"shard_KiB": (1, 2, 4, 8)},
+    build=_tiny_build,
+    tiers=("analytic",),
+))

@@ -243,3 +243,36 @@ def test_scalability_benchmark_matches_committed_baseline():
     # quadratic, and events-per-rank spread across the >=8-rank tail bounded
     assert base["loglog_slope_events_vs_ranks"] <= 1.4, base
     assert base["events_per_rank_spread_tail"] <= 2.0, base
+
+
+def test_sweep_cli_smoke_two_workers(tmp_path):
+    """Tier-1 sweep smoke (ISSUE 10): ``python -m repro.sweep demo_smoke``
+    with two workers must complete its 8-point analytic prefilter plus one
+    escalated fine point, exit 0, and emit schema-clean JSONL rows."""
+    import subprocess
+
+    from repro.sweep import read_jsonl, validate_jsonl
+
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    out = tmp_path / "demo_smoke.jsonl"
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(repo, "src"), env.get("PYTHONPATH")) if p)
+    env["REPRO_SWEEP_CACHE"] = str(tmp_path / "cache")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.sweep", "demo_smoke", "--jobs", "2",
+         "--out", str(out), "--fresh"],
+        cwd=repo, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, \
+        f"sweep CLI failed:\n{proc.stdout}\n{proc.stderr}"
+
+    rows = list(read_jsonl(out))
+    by_tier = {}
+    for r in rows:
+        by_tier.setdefault(r["tier"], []).append(r)
+    assert len(by_tier.get("analytic", ())) == 8, by_tier.keys()
+    assert len(by_tier.get("fine", ())) == 1, by_tier.keys()
+    assert all(r["status"] == "ok" for r in rows), \
+        [r for r in rows if r["status"] != "ok"]
+    assert validate_jsonl(out) == {}

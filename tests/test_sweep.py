@@ -1,0 +1,333 @@
+"""Sweep harness tests (ISSUE 10): grid expansion, canonical content
+hashing (cross-process stability), the content-addressed cache with
+resume semantics, crash/timeout fault isolation, tier escalation, and the
+JSONL row schema."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.core.backends import AnalyticConfig, CoarseConfig, FineConfig
+from repro.core.canonical import (canonical_json, combine_hashes,
+                                  content_hash, hash_of)
+from repro.core.chakra import ExecutionTrace
+from repro.core.collectives import ring_all_gather, ring_all_reduce
+from repro.core.infragraph.blueprints import single_tier_fabric
+from repro.sweep import (Escalation, PointSpec, SweepSpec, SweepRunner,
+                         run_sweep, select_pareto, select_top_k)
+from repro.sweep.store import (ResultStore, existing_keys, read_jsonl,
+                               validate_jsonl, validate_row)
+
+sys.path.insert(0, os.path.dirname(__file__))
+import sweep_specs  # noqa: E402  (registers test_faulty / test_tiny)
+
+KiB = 1 << 10
+
+
+# ---------------------------------------------------------------------------
+# canonical hashing
+# ---------------------------------------------------------------------------
+
+def test_program_content_hash_stable_and_semantic():
+    a = ring_all_gather(4, 8 * KiB, 2)
+    b = ring_all_gather(4, 8 * KiB, 2)
+    c = ring_all_gather(4, 16 * KiB, 2)
+    assert a.content_hash() == b.content_hash()
+    assert a.content_hash() != c.content_hash()
+    # JSON round trip preserves the hash
+    from repro.core.mscclpp import Program
+    assert Program.from_json(a.to_json()).content_hash() == a.content_hash()
+
+
+def test_trace_content_hash_ignores_runtime_fields():
+    et = ExecutionTrace(num_ranks=2)
+    n0 = et.comp(0, "a", flops=10.0)
+    et.comp(0, "b", flops=5.0, deps=[n0])
+    h = et.content_hash()
+    for n in et.nodes:
+        n.start_ns, n.end_ns = 123.0, 456.0     # runtime-only mutation
+    assert et.content_hash() == h
+    assert ExecutionTrace.from_json(et.to_json()).content_hash() == h
+
+
+def test_infra_and_config_hashes_semantic():
+    i1 = single_tier_fabric(4, link_GBps=50.0)
+    i2 = single_tier_fabric(4, link_GBps=50.0)
+    i3 = single_tier_fabric(4, link_GBps=100.0)
+    assert i1.content_hash() == i2.content_hash() != i3.content_hash()
+    assert FineConfig().content_hash() == FineConfig().content_hash()
+    assert FineConfig().content_hash() != \
+        FineConfig(coll_workgroups=2).content_hash()
+    assert AnalyticConfig().content_hash() != CoarseConfig().content_hash()
+
+
+def test_content_hash_cross_process_stable():
+    """The cache key must not depend on PYTHONHASHSEED or process state."""
+    snippet = textwrap.dedent("""
+        from repro.core.collectives import ring_all_reduce
+        from repro.core.backends import FineConfig
+        from repro.core.infragraph.blueprints import single_tier_fabric
+        print(ring_all_reduce(4, 4096, 1).content_hash())
+        print(FineConfig(coll_workgroups=2).content_hash())
+        print(single_tier_fabric(4, link_GBps=25.0).content_hash())
+    """)
+    outs = []
+    for seed in ("0", "12345"):
+        env = dict(os.environ, PYTHONHASHSEED=seed, JAX_PLATFORMS="cpu")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src"),
+             env.get("PYTHONPATH", "")])
+        outs.append(subprocess.run(
+            [sys.executable, "-c", snippet], env=env, text=True,
+            capture_output=True, check=True).stdout)
+    assert outs[0] == outs[1]
+    assert outs[0] == (ring_all_reduce(4, 4096, 1).content_hash() + "\n"
+                       + FineConfig(coll_workgroups=2).content_hash() + "\n"
+                       + single_tier_fabric(4,
+                                            link_GBps=25.0).content_hash()
+                       + "\n")
+
+
+def test_canonical_json_rejects_unknown_and_sorts():
+    assert canonical_json({"b": 1, "a": [2, True]}) == '{"a":[2,true],"b":1}'
+    with pytest.raises(TypeError):
+        canonical_json(object())
+    assert combine_hashes(a="x", b="y") != combine_hashes(a="y", b="x")
+    assert hash_of(None) == "none"
+
+
+# ---------------------------------------------------------------------------
+# grid + escalation selectors
+# ---------------------------------------------------------------------------
+
+def test_grid_cross_product_order():
+    spec = SweepSpec(name="g", axes={"x": (1, 2), "y": ("a", "b")},
+                     build=lambda c, t: PointSpec(workload=None))
+    assert spec.grid() == [{"x": 1, "y": "a"}, {"x": 1, "y": "b"},
+                          {"x": 2, "y": "a"}, {"x": 2, "y": "b"}]
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        SweepSpec(name="bad", axes={"x": (1,)})          # no build/run_point
+    with pytest.raises(ValueError):
+        SweepSpec(name="bad", axes={"x": (1,)},
+                  build=lambda c, t: None, tiers=("nope",))
+    with pytest.raises(ValueError):
+        Escalation(mode="best")
+    with pytest.raises(ValueError):
+        Escalation(objectives=("time_ns",))              # missing min:/max:
+
+
+def test_select_top_k_and_pareto():
+    rows = [{"time_ns": 30, "events": 1}, {"time_ns": 10, "events": 9},
+            {"time_ns": 20, "events": 2}, {"time_ns": 40, "events": 0}]
+    top = select_top_k(rows, 2, "min:time_ns")
+    assert [r["time_ns"] for r in top] == [10, 20]
+    top = select_top_k(rows, 1, "max:events")
+    assert top[0]["events"] == 9
+    front = select_pareto(rows, ("min:time_ns", "min:events"))
+    assert sorted(r["time_ns"] for r in front) == [10, 20, 30, 40]
+    front = select_pareto(rows, ("min:time_ns",))
+    assert [r["time_ns"] for r in front] == [10]
+    # rows missing the objective are excluded, not fatal
+    assert select_top_k([{"x": 1}], 3, "min:time_ns") == []
+
+
+def test_point_key_reflects_content_not_spelling():
+    spec = sweep_specs.tiny
+    k1, prov = spec.fingerprint({"shard_KiB": 2}, "analytic")
+    k2, _ = spec.fingerprint({"shard_KiB": 2}, "analytic")
+    k3, _ = spec.fingerprint({"shard_KiB": 4}, "analytic")
+    assert k1 == k2 != k3
+    assert len(k1) == 64
+    assert set(prov) == {"sweep", "version", "tier", "workload", "infra",
+                         "config", "run_kw"}
+
+
+# ---------------------------------------------------------------------------
+# store + schema
+# ---------------------------------------------------------------------------
+
+def test_result_store_roundtrip(tmp_path):
+    store = ResultStore(tmp_path / "cache")
+    key = "ab" + "0" * 62
+    assert store.get(key) is None and key not in store
+    store.put(key, {"status": "ok", "time_ns": 5})
+    assert store.get(key) == {"status": "ok", "time_ns": 5}
+    assert key in store
+    # corrupt entries read as a miss
+    (tmp_path / "cache" / "ab" / f"{key}.json").write_text("{not json")
+    assert store.get(key) is None
+
+
+def test_validate_row_schema():
+    good = {"sweep": "s", "key": "a" * 64, "tier": "analytic",
+            "point": {"x": 1}, "status": "ok", "cached": False,
+            "attempts": 1, "point_wall_s": 0.1, "provenance": {},
+            "time_ns": 12}
+    assert validate_row(good) == []
+    assert validate_row(dict(good, time_ns=12.5)) == []
+    for broken in (dict(good, status="meh"),
+                   dict(good, key="short"),
+                   dict(good, status="error"),          # no traceback
+                   dict(good, status="timeout"),        # no timeout_s
+                   {k: v for k, v in good.items() if k != "point"}):
+        assert validate_row(broken), broken
+    assert validate_row(dict(good, status="error", error="tb")) == []
+    assert validate_row(dict(good, status="timeout", timeout_s=3.0)) == []
+
+
+# ---------------------------------------------------------------------------
+# runner: inline, cache, resume
+# ---------------------------------------------------------------------------
+
+def test_inline_run_cache_and_resume(tmp_path):
+    out = tmp_path / "tiny.jsonl"
+    cache = tmp_path / "cache"
+    res = run_sweep(sweep_specs.tiny, jobs=0, out=out, cache=cache,
+                    progress=False)
+    assert [r["status"] for r in res.rows] == ["ok"] * 4
+    assert all(not r["cached"] for r in res.rows)
+    first = {r["key"]: r["time_ns"] for r in res.rows}
+    n_lines = len(out.read_text().splitlines())
+    assert n_lines == 4
+
+    # resume with the same JSONL: zero new rows, identical results
+    res2 = run_sweep(sweep_specs.tiny, jobs=0, out=out, cache=cache,
+                     progress=False)
+    assert len(out.read_text().splitlines()) == n_lines, \
+        "resume must not append duplicate rows"
+    assert {r["key"]: r["time_ns"] for r in res2.rows} == first
+
+    # fresh JSONL, warm cache: rows replay bit-identically, marked cached
+    out2 = tmp_path / "tiny2.jsonl"
+    res3 = run_sweep(sweep_specs.tiny, jobs=0, out=out2, cache=cache,
+                     progress=False)
+    assert all(r["cached"] for r in res3.rows)
+    assert {r["key"]: r["time_ns"] for r in res3.rows} == first
+    assert validate_jsonl(out2) == {}
+
+    # --fresh ignores both and recomputes (restarting the stream)
+    res4 = run_sweep(sweep_specs.tiny, jobs=0, out=out2, cache=cache,
+                     fresh=True, progress=False)
+    assert all(not r["cached"] for r in res4.rows)
+    assert {r["key"]: r["time_ns"] for r in res4.rows} == first
+    assert len(out2.read_text().splitlines()) == 4
+
+
+def test_inline_error_rows_dont_kill_run(tmp_path):
+    res = run_sweep(sweep_specs.faulty, jobs=0, out=tmp_path / "f.jsonl",
+                    progress=False,
+                    points=[{"i": 0, "behavior": "ok"},
+                            {"i": 1, "behavior": "raise"},
+                            {"i": 4, "behavior": "ok"}])
+    assert [r["status"] for r in res.rows] == ["ok", "error", "ok"]
+    assert "ValueError: injected failure" in res.rows[1]["error"]
+    assert validate_jsonl(tmp_path / "f.jsonl") == {}
+
+
+# ---------------------------------------------------------------------------
+# runner: process pool fault isolation
+# ---------------------------------------------------------------------------
+
+def test_worker_crash_timeout_isolation(tmp_path):
+    """A dead worker fails one point, never the run; a hung worker gets a
+    timeout row; deterministic raises are not retried."""
+    out = tmp_path / "faulty.jsonl"
+    res = run_sweep(sweep_specs.faulty, jobs=2, out=out, timeout_s=3.0,
+                    retries=1, progress=False)
+    by_behavior = {r["point"]["behavior"]: r for r in res.rows}
+    assert by_behavior["ok"]["status"] == "ok"
+    assert res.rows[0]["time_ns"] == 1000 and res.rows[4]["time_ns"] == 1004
+
+    assert by_behavior["raise"]["status"] == "error"
+    assert "ValueError: injected failure" in by_behavior["raise"]["error"]
+    assert by_behavior["raise"]["attempts"] == 1, \
+        "Python exceptions are deterministic and must not be retried"
+
+    assert by_behavior["crash"]["status"] == "error"
+    assert "exit code 42" in by_behavior["crash"]["error"]
+    assert by_behavior["crash"]["attempts"] == 2, \
+        "a crashed worker is retried once (retries=1) before failing"
+
+    assert by_behavior["sleep"]["status"] == "timeout"
+    assert by_behavior["sleep"]["timeout_s"] == 3.0
+
+    assert validate_jsonl(out) == {}
+    assert len(res.rows) == 5, "the sweep itself must complete"
+
+
+def test_process_results_match_inline(tmp_path):
+    res_p = run_sweep(sweep_specs.tiny, jobs=2, out=tmp_path / "p.jsonl",
+                      use_cache=False, progress=False)
+    res_i = run_sweep(sweep_specs.tiny, jobs=0, out=tmp_path / "i.jsonl",
+                      use_cache=False, progress=False)
+    assert [(r["key"], r["time_ns"]) for r in res_p.rows] == \
+        [(r["key"], r["time_ns"]) for r in res_i.rows]
+
+
+# ---------------------------------------------------------------------------
+# escalation
+# ---------------------------------------------------------------------------
+
+def test_escalation_runs_final_tier_on_survivors(tmp_path):
+    spec = SweepSpec(
+        name="test_escalate",
+        axes={"shard_KiB": (1, 2, 4, 8)},
+        build=sweep_specs._tiny_build,
+        escalate=Escalation(prefilter="analytic", final="coarse",
+                            mode="top_k", k=2,
+                            objectives=("min:time_ns",)),
+    )
+    from repro.sweep import register_sweep
+    register_sweep(spec)
+    res = run_sweep(spec, jobs=0, out=tmp_path / "esc.jsonl",
+                    use_cache=False, progress=False)
+    pre = [r for r in res.rows if r["tier"] == "analytic"]
+    fin = [r for r in res.rows if r["tier"] == "coarse"]
+    assert len(pre) == 4 and len(fin) == 2
+    # survivors are the k fastest prefilter points
+    fastest = sorted(pre, key=lambda r: r["time_ns"])[:2]
+    assert {json.dumps(r["point"], sort_keys=True) for r in fin} == \
+        {json.dumps(r["point"], sort_keys=True) for r in fastest}
+    # escalated rows are bit-identical to a direct simulate() call
+    from repro.core.backends import simulate
+    for r in fin:
+        ps = sweep_specs._tiny_build(r["point"], "coarse")
+        direct = simulate(ps.workload, fidelity="coarse", check="off")
+        assert direct.time_ns == r["time_ns"]
+
+
+def test_tier_override_disables_escalation(tmp_path):
+    res = run_sweep(sweep_specs.tiny, jobs=0, tier="analytic",
+                    out=tmp_path / "t.jsonl", use_cache=False,
+                    progress=False)
+    assert {r["tier"] for r in res.rows} == {"analytic"}
+    assert len(res.rows) == 4
+
+
+# ---------------------------------------------------------------------------
+# registry + store helpers
+# ---------------------------------------------------------------------------
+
+def test_registry_resolve_and_discover():
+    from repro.sweep import registry
+    assert registry.resolve("test_tiny") is sweep_specs.tiny
+    registry.discover(include_benchmarks=False)
+    assert "demo_dse" in registry.SWEEPS and "demo_smoke" in registry.SWEEPS
+    with pytest.raises(KeyError):
+        registry.resolve("no_such_sweep")
+
+
+def test_read_jsonl_skips_truncated_tail(tmp_path):
+    p = tmp_path / "x.jsonl"
+    p.write_text('{"key": "a"}\n{"key": "b"}\n{"key": "c", "tr')
+    assert [r["key"] for r in read_jsonl(p)] == ["a", "b"]
+    assert existing_keys(p) == {"a", "b"}
+    assert existing_keys(Path(tmp_path / "missing.jsonl")) == set()
